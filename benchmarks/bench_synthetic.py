@@ -1,0 +1,88 @@
+"""Paper Figure 2 / Figure A: processing-time gain on the synthetic dataset.
+
+Sweeps the number of classes |L| (Fig. 2) or samples-per-class g (Fig. A)
+and reports wall-clock gain of the screened solver (Algorithm 1) over the
+original method, at the paper's hyperparameter grid (trimmed by default for
+CPU-container budgets; --full restores the paper's grid).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import groups as G
+from repro.core.cpu_baseline import fast_solve, origin_solve
+from repro.core.ot import squared_euclidean_cost
+from repro.core.regularizers import GroupSparseReg
+from repro.data.pipeline import DomainPairConfig, make_domain_pair
+
+
+def _problem(L, g, seed=0):
+    Xs, ys, Xt, _ = make_domain_pair(
+        DomainPairConfig(num_classes=L, samples_per_class=g, seed=seed)
+    )
+    C = squared_euclidean_cost(Xs, Xt)
+    C /= C.max()
+    spec = G.spec_from_labels(ys, pad_to=8)
+    m = n = L * g
+    return (
+        G.pad_cost_matrix(C, ys, spec),
+        G.pad_marginal(np.full(m, 1 / m), ys, spec),
+        np.full(n, 1 / n),
+        spec,
+    )
+
+
+def run_sweep(sweep: str, values, gammas, rhos, maxiter=1000):
+    rows = []
+    for v in values:
+        L, g = (v, 10) if sweep == "L" else (10, v)
+        C, a, b, spec = _problem(L, g)
+        t_o = t_f = 0.0
+        match = True
+        for gamma in gammas:
+            for rho in rhos:
+                reg = GroupSparseReg.from_rho(gamma, rho)
+                r0 = origin_solve(C, a, b, spec, reg, maxiter=maxiter)
+                r1 = fast_solve(C, a, b, spec, reg, maxiter=maxiter)
+                t_o += r0.wall_time
+                t_f += r1.wall_time
+                match &= abs(r0.value - r1.value) <= 1e-7 * max(1, abs(r0.value))
+        rows.append({
+            "sweep": sweep, "value": v, "origin_s": round(t_o, 3),
+            "fast_s": round(t_f, 3), "gain": round(t_o / max(t_f, 1e-9), 2),
+            "objective_match": bool(match),
+        })
+        print(f"  {sweep}={v:5d}: origin={t_o:7.2f}s fast={t_f:7.2f}s "
+              f"gain={t_o/max(t_f,1e-9):5.2f}x match={match}")
+    return rows
+
+
+def main(full: bool = False, out: str | None = None):
+    if full:
+        values_L = [10, 20, 40, 80, 160, 320]
+        gammas = [1e-2, 1e-1, 1e0, 1e1]
+        rhos = [0.2, 0.4, 0.6, 0.8]
+    else:
+        values_L = [10, 20, 40, 80]
+        gammas = [0.1, 1.0]
+        rhos = [0.4, 0.8]
+    print("Figure 2 (|L| sweep, g=10):")
+    rows = run_sweep("L", values_L, gammas, rhos)
+    print("Figure A (g sweep, |L|=10):")
+    values_g = [10, 20, 40, 80, 160] if full else [10, 20, 40]
+    rows += run_sweep("g", values_g, gammas, rhos)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="bench_synthetic.json")
+    args = ap.parse_args()
+    main(args.full, args.out)

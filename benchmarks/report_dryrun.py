@@ -1,0 +1,59 @@
+"""Emit the EXPERIMENTS.md §Dry-run table from dryrun_artifacts/."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import list_archs, SHAPES
+
+
+def gib(x):
+    return f"{x / 2**30:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="dryrun_artifacts")
+    args = ap.parse_args()
+    art = Path(args.artifacts)
+
+    rows = [
+        "| arch | shape | mesh | status | compile_s | args GiB/dev | temp GiB/dev | HLO flops/dev | wire B/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    counts = {"ok": 0, "skipped": 0, "error": 0, "missing": 0}
+    for arch in list_archs():
+        for shape in [s.name for s in SHAPES]:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                p = art / f"{arch}__{shape}__{mesh}.json"
+                if not p.exists():
+                    counts["missing"] += 1
+                    continue
+                r = json.loads(p.read_text())
+                counts[r["status"]] += 1
+                if r["status"] == "skipped":
+                    rows.append(f"| {arch} | {shape} | {mesh} | skipped | — | — | — | — | — | {r['reason']} |")
+                    continue
+                if r["status"] == "error":
+                    rows.append(f"| {arch} | {shape} | {mesh} | ERROR | — | — | — | — | — | {r['error'][:60]} |")
+                    continue
+                m = r["memory_analysis"]
+                c = r["collectives"]
+                kinds = ", ".join(
+                    f"{k}x{v['count']}" for k, v in c.items()
+                    if isinstance(v, dict) and v["count"]
+                )
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {r['compile_s']} | "
+                    f"{gib(m.get('argument_size_in_bytes', 0))} | "
+                    f"{gib(m.get('temp_size_in_bytes', 0))} | "
+                    f"{r['cost_analysis'].get('flops', 0):.2e} | "
+                    f"{c['total_wire_bytes']:.2e} | {kinds} |"
+                )
+    print("\n".join(rows))
+    print(f"\ntotals: {counts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Terms per (arch x shape), single-pod 16x16 mesh, per the assignment:
+
+  compute term    = HLO_FLOPs  / (chips * 197e12  bf16 FLOP/s)
+  memory term     = HLO_bytes  / (chips * 819e9   B/s HBM)
+  collective term = wire_bytes / (chips * 50e9    B/s ICI link)
+
+cost_analysis() numbers are per-DEVICE (verified against analytic counts),
+so terms divide by per-chip peaks directly.
+
+XLA's cost analysis counts a while-loop body ONCE regardless of trip count;
+dryrun --probe lowers every cell at 1 and 2 scan steps, and this module
+linearly extrapolates:  body = p2 - p1, outside = 2*p1 - p2,
+full = outside + body * trips.  Inner *sequence* scans (mamba / sLSTM /
+mLSTM-chunk) are additionally corrected analytically (formulas below) —
+their bodies are also counted once per outer body.
+
+MODEL_FLOPS = 6*N(active)*D for training, 2*N(active)*D for inference.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+from pathlib import Path
+
+from repro.configs import SHAPES_BY_NAME, get_config, list_archs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256  # single-pod roofline per assignment
+
+
+def scan_trips(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_period
+    if cfg.family == "ssm":
+        return cfg.num_layers // cfg.ssm.slstm_every
+    if cfg.family == "vlm":
+        return cfg.num_layers // cfg.cross_attn_period
+    return cfg.num_layers
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count; analytic per family."""
+    d, V = cfg.d_model, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    attn = d * hd * (H + 2 * K) + H * hd * d
+    emb = V * d * (1 if cfg.tie_embeddings else 2)
+
+    def moe_active(m):
+        ff = m.expert_d_ff or cfg.d_ff
+        routed = 3 * d * ff * m.top_k
+        shared = 3 * d * (m.shared_d_ff or 0) + (d if m.num_shared_experts else 0)
+        return routed + shared + d * m.num_experts  # + router
+
+    if cfg.family in ("dense",):
+        if cfg.mla is not None:
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            attn = (d * m.q_lora_rank + m.q_lora_rank * H * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    + m.kv_lora_rank * H * (m.qk_nope_head_dim + m.v_head_dim)
+                    + H * m.v_head_dim * d)
+        mlp = 3 * d * cfg.d_ff
+        return emb + cfg.num_layers * (attn + mlp)
+    if cfg.family == "moe":
+        return emb + cfg.num_layers * (attn + moe_active(cfg.moe))
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        n_per = cfg.num_layers // period
+        di = cfg.ssm.expand * d
+        dtr = cfg.ssm.dt_rank or math.ceil(d / 16)
+        mamba = (2 * d * di + di * cfg.ssm.d_conv
+                 + di * (dtr + 2 * cfg.ssm.d_state) + dtr * di + di * d)
+        moe_l = moe_active(cfg.moe)
+        mlp_l = 3 * d * cfg.d_ff
+        per_period = attn + (period - 1) * mamba + (period // 2) * (moe_l + mlp_l)
+        return emb + n_per * per_period
+    if cfg.family == "ssm":
+        period = cfg.ssm.slstm_every
+        n_per = cfg.num_layers // period
+        di = int(cfg.ssm.proj_factor * d)
+        dh = di // H
+        mlstm = 2 * d * di + 4 * di + 3 * H * dh * dh + 2 * di * H + di * d
+        dhs = d // H
+        f = -(-4 * d // 3 // 8) * 8
+        slstm = 4 * (d * d + H * dhs * dhs) + 3 * d * f
+        return emb + n_per * (slstm + (period - 1) * mlstm)
+    if cfg.family == "vlm":
+        period = cfg.cross_attn_period
+        n_per = cfg.num_layers // period
+        mlp = 3 * d * cfg.d_ff
+        per = (period - 1) * (attn + mlp) + attn + mlp
+        return emb + n_per * per
+    if cfg.family == "encdec":
+        mlp = 2 * d * cfg.d_ff
+        return emb + cfg.num_layers * (2 * attn + mlp) + cfg.encoder_layers * (attn + mlp)
+    raise ValueError(cfg.family)
+
+
+def inner_scan_flops(cfg, shape) -> float:
+    """Analytic per-DEVICE flops of inner sequence scans (counted once by
+    XLA).  Train: x4 (fwd + remat recompute + ~2x bwd); decode: single step
+    already fully counted (no inner loop) -> 0."""
+    if shape.kind == "decode":
+        return 0.0
+    S = shape.seq_len
+    Bl = shape.global_batch / CHIPS  # batch shards over data axes
+    mult = 4.0 if shape.kind == "train" else 1.0
+    d = cfg.d_model
+    total = 0.0
+    if cfg.family == "hybrid":
+        di = cfg.ssm.expand * d
+        st = cfg.ssm.d_state
+        per_layer = 9.0 * S * Bl * di * st / 16.0  # di shards over model=16
+        n_mamba = cfg.num_layers * (cfg.attn_period - 1) // cfg.attn_period
+        total += per_layer * n_mamba
+    if cfg.family == "ssm":
+        H = cfg.num_heads
+        di = int(cfg.ssm.proj_factor * d)
+        dh = di // H
+        c = cfg.ssm.mlstm_chunk
+        # mLSTM chunk body ~ B*H*(6 c^2 dh + 6 c dh^2), times S/c chunks
+        n_mlstm = cfg.num_layers * (cfg.ssm.slstm_every - 1) // cfg.ssm.slstm_every
+        total += n_mlstm * (S / c) * Bl * H * (6 * c * c * dh + 6 * c * dh * dh)
+        # sLSTM per step ~ 8*B*d*dh_s
+        dhs = d // H
+        n_slstm = cfg.num_layers // cfg.ssm.slstm_every
+        total += n_slstm * S * Bl * 8 * d * dhs
+    return total * mult
+
+
+def load(art_dir: Path, arch: str, shape: str, tag: str = "") -> dict | None:
+    p = art_dir / f"{arch}__{shape}__pod16x16{tag}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def corrected_cell(art_dir: Path, arch: str, shape_name: str) -> dict | None:
+    full = load(art_dir, arch, shape_name)
+    if full is None or full["status"] != "ok":
+        return full
+    p1 = load(art_dir, arch, shape_name, "__probe1")
+    p2 = load(art_dir, arch, shape_name, "__probe2")
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    trips = scan_trips(cfg)
+
+    def extract(rec):
+        ca = rec["cost_analysis"]
+        return {
+            "flops": ca.get("flops", 0.0),
+            "bytes": ca.get("bytes accessed", 0.0),
+            "wire": rec["collectives"]["total_wire_bytes"],
+        }
+
+    raw = extract(full)
+    if p1 and p2 and p1["status"] == "ok" and p2["status"] == "ok":
+        m1, m2 = extract(p1), extract(p2)
+        corr = {
+            k: max((2 * m1[k] - m2[k]) + (m2[k] - m1[k]) * trips, raw[k])
+            for k in raw
+        }
+        method = "probe-extrapolated"
+    else:
+        corr, method = dict(raw), "raw (probes missing)"
+    corr["flops"] += inner_scan_flops(cfg, shape)
+
+    D = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_act = active_params(cfg)
+    mf = (6 if shape.kind == "train" else 2) * n_act * D
+
+    # Fused-TPU memory estimate: XLA-CPU 'bytes accessed' is an UNFUSED
+    # upper bound (the CPU backend materializes nearly every intermediate).
+    # A deployed TPU step's HBM traffic ~= read/write its resident arguments
+    # once (params + opt states + caches, already per-device in
+    # memory_analysis) + activation streaming: ~6 major ops per layer
+    # touching (tokens x d_model) bf16 in+out, x1.5 for remat recompute
+    # => 24 B per token-layer-d_model unit.  Attention assumed flash-style
+    # (no S^2 materialization) — that is how the Pallas/TPU deployment runs.
+    A = full["memory_analysis"].get("argument_size_in_bytes", 0)
+    data_shards = 16
+    tokens_local = (
+        shape.global_batch * shape.seq_len / data_shards
+        if shape.kind != "decode"
+        else max(shape.global_batch / data_shards, 1)
+    )
+    act_bytes = tokens_local * cfg.d_model * cfg.num_layers * 24
+    bytes_fused = 2 * A + act_bytes
+
+    t_c = corr["flops"] / PEAK_FLOPS
+    t_m_xla = corr["bytes"] / HBM_BW
+    t_m = bytes_fused / HBM_BW
+    t_x = corr["wire"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok", "method": method,
+        "flops_per_chip": corr["flops"], "bytes_per_chip_xla": corr["bytes"],
+        "bytes_per_chip_fused": bytes_fused,
+        "wire_per_chip": corr["wire"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_memory_xla_s": t_m_xla,
+        "t_collective_s": t_x,
+        "dominant": dom,
+        "model_flops_global": mf,
+        "useful_ratio": mf / max(corr["flops"] * CHIPS, 1.0),
+        "mfu_upper_bound": (mf / CHIPS / PEAK_FLOPS) / max(bound, 1e-12),
+        "memory_analysis": full["memory_analysis"],
+    }
+
+
+NOTES = {
+    ("compute", "train"): "compute-bound: raise MFU via fused attention / less remat recompute",
+    ("compute", "prefill"): "compute-bound: batch-level pipelining of layers would overlap the tail",
+    ("memory", "train"): "HBM-bound: shrink activation traffic (fusion, bf16 intermediates, less remat)",
+    ("memory", "prefill"): "HBM-bound: KV-write + activation traffic dominates; fuse projections",
+    ("memory", "decode"): "HBM-bound (expected): decode streams params+KV; raise batch or quantize KV",
+    ("collective", "train"): "ICI-bound: FSDP all-gathers dominate; switch to ZeRO-1/params-stay-sharded or overlap",
+    ("collective", "prefill"): "ICI-bound: TP all-reduces; overlap with compute via async collectives",
+    ("collective", "decode"): "ICI-bound: TP all-reduces per token; shrink TP degree for decode",
+}
+
+
+def build_table(art_dir: Path):
+    rows = []
+    for arch in list_archs():
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            rec = corrected_cell(art_dir, arch, shape)
+            if rec is None:
+                continue
+            rows.append(rec)
+    return rows
+
+
+def to_markdown(rows) -> str:
+    out = [
+        "| arch | shape | t_compute | t_memory(fused) | t_mem(xla-ub) | "
+        "t_collective | dominant | MODEL/HLO | MFU bound | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | — | — | {r['reason']} |"
+            )
+            continue
+        note = NOTES.get((r["dominant"], SHAPES_BY_NAME[r["shape"]].kind), "")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_memory_xla_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_upper_bound']:.2f} | {note} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="dryrun_artifacts")
+    ap.add_argument("--json-out", default="roofline_table.json")
+    args = ap.parse_args()
+    rows = build_table(Path(args.artifacts))
+    Path(args.json_out).write_text(json.dumps(rows, indent=2, default=str))
+    print(to_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,metric,derived`` CSV rows per experiment and writes JSON
+artifacts next to the repo root.  --full restores the paper's grids (slow
+on one CPU core); default grids are trimmed but cover every figure's
+qualitative claim.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["synthetic", "gradcount", "objective", "kernels"])
+    args = ap.parse_args()
+
+    print("name,metric,derived")
+
+    if "synthetic" not in args.skip:
+        from benchmarks import bench_synthetic
+
+        rows = bench_synthetic.main(full=args.full, out="bench_synthetic.json")
+        for r in rows:
+            print(f"fig2_{r['sweep']}{r['value']},{r['fast_s']},gain={r['gain']}x")
+
+    if "gradcount" not in args.skip:
+        from benchmarks import bench_gradcount
+
+        rows = bench_gradcount.main(out="bench_gradcount.json")
+        for r in rows:
+            if r["fig"] == "6":
+                print(f"fig6_rho{r['rho']},{r['ours_blocks']},"
+                      f"computed_frac={r['computed_frac']}")
+            else:
+                print(f"figD_gamma{r['gamma']},{r['fast_with_lower_s']},"
+                      f"gain={r['gain_with_lower']}x")
+
+    if "objective" not in args.skip:
+        from benchmarks import bench_objective
+
+        rows = bench_objective.main(full=args.full, out="bench_objective.json")
+        for r in rows:
+            print(f"table1_L{r['classes']},{r['ours']:.6e},match={r['match']}")
+
+    if "kernels" not in args.skip:
+        from benchmarks import bench_kernels
+
+        rows = bench_kernels.main(out="bench_kernels.json")
+        for r in rows:
+            print(f"kernel_gradpsi,{r['xla_dense_us']},"
+                  f"modeled_tpu_speedup={r['modeled_speedup']}x")
+
+
+if __name__ == "__main__":
+    main()

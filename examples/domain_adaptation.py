@@ -1,0 +1,83 @@
+"""Unsupervised domain adaptation with group-sparse OT (the paper's task).
+
+Source samples are labeled, target samples are not.  The group-sparse plan
+transports class-coherent mass; target labels are predicted by the class
+that sends each target the most mass.  Compares accuracy + wall-clock vs
+(a) the unregularized-structure entropic OT baseline (Cuturi 2013) and
+(b) the original (unscreened) group-sparse method.
+
+Run:  PYTHONPATH=src python examples/domain_adaptation.py [--classes 10]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import sinkhorn_log, solve_groupsparse_ot, squared_euclidean_cost
+from repro.core import groups as G
+from repro.core.cpu_baseline import fast_solve, origin_solve
+from repro.core.regularizers import GroupSparseReg
+from repro.data.pipeline import DomainPairConfig, make_domain_pair
+
+
+def predict_from_plan(T: np.ndarray, y_src: np.ndarray, L: int) -> np.ndarray:
+    """Target label = class with max incoming mass."""
+    mass = np.zeros((L, T.shape[1]))
+    for l in range(L):
+        mass[l] = T[y_src == l].sum(axis=0)
+    return mass.argmax(axis=0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--per-class", type=int, default=15)
+    ap.add_argument("--dim", type=int, default=8)
+    args = ap.parse_args()
+    L = args.classes
+
+    Xs, ys, Xt, yt = make_domain_pair(
+        DomainPairConfig(num_classes=L, samples_per_class=args.per_class,
+                         dim=args.dim, shift=3.0, seed=0)
+    )
+
+    # --- group-sparse OT (screened) ---
+    t0 = time.perf_counter()
+    sol = solve_groupsparse_ot(Xs, ys, Xt, gamma=1.0, rho=0.6)
+    t_gs = time.perf_counter() - t0
+    acc_gs = float((predict_from_plan(sol.plan, ys, L) == yt).mean())
+
+    # --- entropic baseline ---
+    C = squared_euclidean_cost(Xs, Xt)
+    C /= C.max()
+    m, n = C.shape
+    t0 = time.perf_counter()
+    sk = sinkhorn_log(jnp.asarray(C, jnp.float32), jnp.full((m,), 1 / m),
+                      jnp.full((n,), 1 / n), eps=0.01)
+    t_sk = time.perf_counter() - t0
+    acc_sk = float((predict_from_plan(np.asarray(sk.plan), ys, L) == yt).mean())
+
+    # --- origin vs fast wall clock on the same problem ---
+    spec = G.spec_from_labels(ys, pad_to=8)
+    C_pad = G.pad_cost_matrix(C, ys, spec)
+    a = G.pad_marginal(np.full(m, 1 / m), ys, spec)
+    b = np.full(n, 1 / n)
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    r0 = origin_solve(C_pad, a, b, spec, reg)
+    r1 = fast_solve(C_pad, a, b, spec, reg)
+
+    print(f"target-label accuracy: group-sparse OT = {acc_gs:.1%}   "
+          f"entropic OT = {acc_sk:.1%}")
+    print(f"group-sparse solve: {t_gs:.2f}s (jit incl.)   sinkhorn: {t_sk:.2f}s")
+    print(f"origin {r0.wall_time:.3f}s vs fast {r1.wall_time:.3f}s "
+          f"-> gain {r0.wall_time / r1.wall_time:.2f}x, "
+          f"objectives match: {abs(r0.value - r1.value) < 1e-9}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+One module per assigned architecture under repro.configs; ids match the
+assignment sheet exactly.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES = {
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2p7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b",
+    "xlstm-1.3b": "repro.configs.xlstm_1p3b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "yi-9b": "repro.configs.yi_9b",
+    "yi-6b": "repro.configs.yi_6b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1p5_large",
+    "llama-3.2-vision-90b": "repro.configs.llama32_vision_90b",
+}
+
+
+def list_archs():
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list_archs()}")
+    mod = importlib.import_module(_ARCH_MODULES[arch_id])
+    cfg: ModelConfig = mod.CONFIG
+    assert cfg.arch_id == arch_id, (cfg.arch_id, arch_id)
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in list_archs()}

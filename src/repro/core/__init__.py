@@ -1,0 +1,35 @@
+"""Core library: the paper's contribution.
+
+Fast regularized discrete OT with group-sparse regularizers (Ida et al.,
+AAAI 2023): smooth relaxed dual (Blondel et al. 2018) + safe screening
+(upper bounds -> certified-zero gradient blocks skipped; lower bounds ->
+persistent active set), exact by Theorem 2.
+"""
+from repro.core.groups import GroupSpec, spec_from_labels
+from repro.core.regularizers import GroupSparseReg
+from repro.core.dual import DualProblem, dual_value_and_grad, plan_from_duals
+from repro.core.solver import SolveOptions, solve_dual, recover_plan
+from repro.core.ot import (
+    GroupSparseOTSolution,
+    solve_groupsparse_ot,
+    squared_euclidean_cost,
+    group_sparsity,
+)
+from repro.core.sinkhorn import sinkhorn_log
+
+__all__ = [
+    "GroupSpec",
+    "spec_from_labels",
+    "GroupSparseReg",
+    "DualProblem",
+    "dual_value_and_grad",
+    "plan_from_duals",
+    "SolveOptions",
+    "solve_dual",
+    "recover_plan",
+    "GroupSparseOTSolution",
+    "solve_groupsparse_ot",
+    "squared_euclidean_cost",
+    "group_sparsity",
+    "sinkhorn_log",
+]

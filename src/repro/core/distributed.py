@@ -1,0 +1,178 @@
+"""Distributed group-sparse OT on the production mesh.
+
+The smooth relaxed dual separates over target columns j, so the natural
+partition on a ("pod", "data", "model") mesh is:
+
+  C     (m_pad, n): rows (groups) over "model", columns over ("pod","data")
+  a     (m_pad,):   over "model"         (alpha likewise)
+  b     (n,):       over ("pod","data")  (beta likewise)
+  Z/bounds (L, n):  L over "model", n over ("pod","data")
+
+Groups are aligned to row shards (the padded group count is a multiple of the
+"model" shard count), so group norms never cross shards.  Per L-BFGS step the
+only collectives are:
+
+  * psum of grad_alpha partial column-sums over ("pod","data")  (m floats),
+  * psum of grad_beta partial row-sums over "model"             (n floats),
+  * a handful of scalar psums (objective, L-BFGS dot products).
+
+Cross-pod traffic is therefore O(m + n) per step vs the O(m n / devices)
+local gradient work — the solve is overwhelmingly memory-bound (see
+EXPERIMENTS.md §Roofline).
+
+Implementation: the solver in repro.core.solver is pure jnp, so we drive it
+through GSPMD — jit with NamedShardings on the inputs; XLA inserts exactly
+the collectives above (asserted by tests/test_distributed.py on a host-device
+mesh, and inspectable via .lower().as_text()).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.dual import DualProblem
+from repro.core.groups import GroupSpec, PAD_COST
+from repro.core.regularizers import GroupSparseReg
+from repro.core.solver import OTResult, SolveOptions, _solve_jit, _split
+
+
+def _data_axes(mesh: Mesh):
+    """All mesh axes that shard the column dimension n."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def pad_for_mesh(spec: GroupSpec, mesh: Mesh) -> GroupSpec:
+    """Pad the group COUNT so L divides the 'model' axis size.
+
+    Padding groups are empty (size 0): their rows carry PAD_COST and zero
+    mass, so they are invisible to the optimizer (see groups.py).
+    """
+    if "model" not in mesh.axis_names:
+        return spec
+    t = mesh.shape["model"]
+    L_pad = -(-spec.num_groups // t) * t
+    if L_pad == spec.num_groups:
+        return spec
+    sizes = tuple(spec.sizes) + (0,) * (L_pad - spec.num_groups)
+    return dataclasses.replace(
+        spec, num_groups=L_pad, sizes=sizes
+    )
+
+
+def pad_arrays_for_mesh(C, a, spec: GroupSpec, spec_padded: GroupSpec):
+    """Extend C/a with the empty padding groups from :func:`pad_for_mesh`."""
+    import numpy as np
+
+    extra = spec_padded.m_pad - spec.m_pad
+    if extra == 0:
+        return C, a
+    C2 = np.concatenate(
+        [np.asarray(C), np.full((extra, C.shape[1]), PAD_COST, C.dtype)], axis=0
+    )
+    a2 = np.concatenate([np.asarray(a), np.zeros((extra,), a.dtype)])
+    return C2, a2
+
+
+def shardings(mesh: Mesh, prob: DualProblem):
+    """NamedShardings for (C, a, b, row_mask, sqrt_g) + the result vector."""
+    daxes = _data_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    s = lambda *spec: NamedSharding(mesh, P(*spec))
+    return {
+        "C": s(model, daxes),
+        "a": s(model),
+        "b": s(daxes),
+        "row_mask": s(model),
+        "sqrt_g": s(model),
+    }
+
+
+def solve_dual_distributed(
+    C,
+    a,
+    b,
+    spec: GroupSpec,
+    reg: GroupSparseReg,
+    mesh: Mesh,
+    opts: SolveOptions = SolveOptions(),
+) -> OTResult:
+    """GSPMD-sharded variant of :func:`repro.core.solver.solve_dual`."""
+    import numpy as np
+
+    spec_p = pad_for_mesh(spec, mesh)
+    C, a = pad_arrays_for_mesh(C, a, spec, spec_p)
+
+    prob = DualProblem(
+        num_groups=spec_p.num_groups,
+        group_size=spec_p.group_size,
+        n=int(C.shape[1]),
+        reg=reg,
+    )
+    sh = shardings(mesh, prob)
+    row_mask = np.asarray(spec_p.row_mask().reshape(-1))
+    sqrt_g = np.asarray(spec_p.sqrt_sizes(), np.float32)
+
+    Cd = jax.device_put(np.asarray(C), sh["C"])
+    ad = jax.device_put(np.asarray(a), sh["a"])
+    bd = jax.device_put(np.asarray(b), sh["b"])
+    md = jax.device_put(row_mask, sh["row_mask"])
+    gd = jax.device_put(sqrt_g, sh["sqrt_g"])
+
+    with mesh:
+        lb, scr, rounds, stats = _solve_jit(Cd, ad, bd, md, gd, prob, opts)
+    alpha, beta = _split(lb.x, prob.m_pad)
+    stats_dict = {
+        "zero": int(stats[0]),
+        "check": int(stats[1]),
+        "active": int(stats[2]),
+    }
+    return OTResult(alpha, beta, -lb.f, lb, scr, int(rounds), stats_dict)
+
+
+def lower_dual_step(
+    mesh: Mesh,
+    prob: DualProblem,
+    opts: Optional[SolveOptions] = None,
+    dtype=jnp.float32,
+):
+    """Lower (not run) one sharded value_and_grad for dry-run/roofline use.
+
+    Returns the jax.stages.Lowered for a single screened dual gradient step
+    on ShapeDtypeStruct inputs — no allocation; used by launch/dryrun.py to
+    extract cost analysis and the collective schedule at production scale.
+    """
+    from repro.core import screening
+    from repro.core.solver import make_value_and_grad
+
+    daxes = _data_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+    m_pad, n, L = prob.m_pad, prob.n, prob.num_groups
+    sds = jax.ShapeDtypeStruct
+
+    def step(x, C, a, b, sqrt_g, scr):
+        vag = make_value_and_grad(C, a, b, prob, sqrt_g, "screened", scr)
+        return vag(x)
+
+    s = lambda *spec: NamedSharding(mesh, P(*spec))
+    scr_sh = screening.ScreenState(
+        alpha_snap=sds((m_pad,), dtype, sharding=s(model)),
+        beta_snap=sds((n,), dtype, sharding=s(daxes)),
+        z_snap=sds((L, n), dtype, sharding=s(model, daxes)),
+        k_snap=sds((L, n), dtype, sharding=s(model, daxes)),
+        o_snap=sds((L, n), dtype, sharding=s(model, daxes)),
+        active=sds((L, n), bool, sharding=s(model, daxes)),
+    )
+    args = (
+        sds((m_pad + n,), dtype, sharding=s(None)),
+        sds((m_pad, n), dtype, sharding=s(model, daxes)),
+        sds((m_pad,), dtype, sharding=s(model)),
+        sds((n,), dtype, sharding=s(daxes)),
+        sds((L,), dtype, sharding=s(model)),
+        scr_sh,
+    )
+    with mesh:
+        return jax.jit(step).lower(*args)

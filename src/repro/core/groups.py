@@ -1,0 +1,118 @@
+"""Group structure for the group-sparse OT regularizer.
+
+The paper indexes source samples by class label; the regularizer treats the
+rows of the transportation-plan column ``t_j`` belonging to one class as one
+group, ``t_{j[l]}``.  For TPU-friendly static shapes we canonicalize to a
+*uniform padded* layout:
+
+  * source samples are sorted by class label,
+  * every class is padded up to ``g_pad`` rows (a multiple of the row tile),
+  * padded rows carry zero mass (``a = 0``) and +BIG cost so that
+    ``f = alpha + beta_j - c`` is very negative there => ``[f]_+ = 0`` =>
+    padded rows contribute nothing to group norms, gradients, or the
+    objective.  Their dual variable ``alpha`` then has exactly-zero gradient
+    and stays at its init (0), so padding is invisible to the optimizer.
+
+The padded view reshapes the ``m_pad``-vector into ``(L, g_pad)`` so every
+grouped reduction is one axis reduction — no segment_sum, no raggedness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+PAD_COST = 1e9  # cost assigned to padded source rows
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """Static description of the (padded) group layout.
+
+    Attributes:
+      num_groups:   |L|, number of class labels.
+      group_size:   g_pad, padded rows per group (uniform).
+      sizes:        true (unpadded) size of each group, shape (L,).
+      m:            true number of source samples (sum(sizes)).
+    """
+
+    num_groups: int
+    group_size: int
+    sizes: tuple
+    m: int
+
+    @property
+    def m_pad(self) -> int:
+        return self.num_groups * self.group_size
+
+    def row_mask(self) -> np.ndarray:
+        """(L, g_pad) bool — True for real rows."""
+        idx = np.arange(self.group_size)[None, :]
+        return idx < np.asarray(self.sizes)[:, None]
+
+    def sqrt_sizes(self) -> np.ndarray:
+        """sqrt(g_l) used in the bounds (Eq. 6/7) — true sizes."""
+        return np.sqrt(np.asarray(self.sizes, np.float64)).astype(np.float32)
+
+
+def spec_from_labels(labels: Sequence[int], *, pad_to: int = 8) -> GroupSpec:
+    """Build a GroupSpec from integer class labels (any order).
+
+    ``pad_to`` rounds the max group size up to a multiple (tile alignment).
+    """
+    labels = np.asarray(labels)
+    uniq, counts = np.unique(labels, return_counts=True)
+    gmax = int(counts.max())
+    g_pad = int(-(-gmax // pad_to) * pad_to)
+    return GroupSpec(
+        num_groups=int(uniq.size),
+        group_size=g_pad,
+        sizes=tuple(int(c) for c in counts),
+        m=int(labels.size),
+    )
+
+
+def pad_sources(X: np.ndarray, labels: np.ndarray, spec: GroupSpec):
+    """Sort rows by label and pad each class to g_pad.
+
+    Returns (X_pad (L*g_pad, d), perm, row_mask_flat).  ``perm`` maps padded
+    row -> original row index (or -1 for padding).
+    """
+    labels = np.asarray(labels)
+    order = np.argsort(labels, kind="stable")
+    mask = spec.row_mask()
+    perm = np.full((spec.m_pad,), -1, dtype=np.int64)
+    perm[mask.reshape(-1)] = order
+    X_pad = np.zeros((spec.m_pad,) + X.shape[1:], X.dtype)
+    X_pad[mask.reshape(-1)] = X[order]
+    return X_pad, perm, mask.reshape(-1)
+
+
+def pad_cost_matrix(C: np.ndarray, labels: np.ndarray, spec: GroupSpec) -> np.ndarray:
+    """Sort + pad the (m, n) cost matrix rows; padded rows get PAD_COST."""
+    order = np.argsort(np.asarray(labels), kind="stable")
+    mask = spec.row_mask().reshape(-1)
+    C_pad = np.full((spec.m_pad, C.shape[1]), PAD_COST, C.dtype)
+    C_pad[mask] = C[order]
+    return C_pad
+
+
+def pad_marginal(a: np.ndarray, labels: np.ndarray, spec: GroupSpec) -> np.ndarray:
+    """Sort + pad the source marginal; padded rows get zero mass."""
+    order = np.argsort(np.asarray(labels), kind="stable")
+    mask = spec.row_mask().reshape(-1)
+    a_pad = np.zeros((spec.m_pad,), a.dtype)
+    a_pad[mask] = a[order]
+    return a_pad
+
+
+def grouped(x: jnp.ndarray, spec: GroupSpec) -> jnp.ndarray:
+    """View an (..., m_pad) array as (..., L, g_pad)."""
+    return x.reshape(x.shape[:-1] + (spec.num_groups, spec.group_size))
+
+
+def flat(x: jnp.ndarray, spec: GroupSpec) -> jnp.ndarray:
+    """Inverse of :func:`grouped`."""
+    return x.reshape(x.shape[:-2] + (spec.m_pad,))

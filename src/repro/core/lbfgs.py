@@ -1,0 +1,293 @@
+"""Pure-JAX L-BFGS (two-loop recursion, backtracking Armijo line search).
+
+No optax / jaxopt in this environment, and the solver must (a) live on
+device, (b) shard under shard_map, and (c) expose per-iteration hooks for the
+paper's snapshot/screening schedule.  So we implement L-BFGS directly with
+``jax.lax``-native control flow and fixed-size circular history buffers.
+
+Conventions: we MINIMIZE ``fun`` (the OT dual is maximized by passing its
+negation).  Parameters are a flat fp32 vector; the OT solver concatenates
+(alpha, beta).
+
+The implementation intentionally mirrors the reference structure of
+Liu & Nocedal (1989): history size ``h``, gamma-scaled initial Hessian,
+curvature-pair rejection when s^T y <= eps * ||s|| ||y||.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LbfgsState(NamedTuple):
+    x: jnp.ndarray            # (d,) current point
+    f: jnp.ndarray            # scalar current value
+    g: jnp.ndarray            # (d,) current gradient
+    S: jnp.ndarray            # (h, d) s-history (x_{k+1} - x_k)
+    Y: jnp.ndarray            # (h, d) y-history (g_{k+1} - g_k)
+    rho: jnp.ndarray          # (h,) 1 / s^T y (0 for unused slots)
+    head: jnp.ndarray         # int32 next write slot
+    count: jnp.ndarray        # int32 number of valid pairs (<= h)
+    iter: jnp.ndarray         # int32 iteration counter
+    n_evals: jnp.ndarray      # int32 value_and_grad call counter
+    converged: jnp.ndarray    # bool
+    failed: jnp.ndarray       # bool (line search failure)
+
+
+@dataclasses.dataclass(frozen=True)
+class LbfgsOptions:
+    history: int = 10
+    max_iters: int = 500
+    gtol: float = 1e-6          # ||g||_inf convergence
+    ftol: float = 1e-10         # relative objective-change convergence
+    c1: float = 1e-4            # sufficient-decrease (Wolfe 1)
+    c2: float = 0.9             # curvature (Wolfe 2)
+    max_linesearch: int = 25    # bracket + zoom evaluation budget
+    init_step: float = 1.0
+
+
+def _two_loop(g, S, Y, rho, head, count, h):
+    """Two-loop recursion: r = H_k g with circular history."""
+    # iterate from newest (head-1) to oldest
+    def bwd(i, carry):
+        q, a = carry
+        idx = (head - 1 - i) % h
+        valid = i < count
+        ai = jnp.where(valid, rho[idx] * jnp.dot(S[idx], q), 0.0)
+        q = q - ai * Y[idx]
+        a = a.at[idx].set(ai)
+        return (q, a)
+
+    q, a = jax.lax.fori_loop(0, h, bwd, (g, jnp.zeros((h,), g.dtype)))
+
+    # gamma scaling from the newest pair
+    newest = (head - 1) % h
+    sy = jnp.where(count > 0, 1.0 / jnp.maximum(rho[newest], 1e-30), 1.0)
+    yy = jnp.where(count > 0, jnp.dot(Y[newest], Y[newest]), 1.0)
+    gamma = jnp.where(count > 0, sy / jnp.maximum(yy, 1e-30), 1.0)
+    r = gamma * q
+
+    def fwd(i, r):
+        idx = (head - count + i) % h     # oldest to newest
+        valid = i < count
+        bi = jnp.where(valid, rho[idx] * jnp.dot(Y[idx], r), 0.0)
+        return r + jnp.where(valid, (a[idx] - bi), 0.0) * S[idx]
+
+    return jax.lax.fori_loop(0, h, fwd, r)
+
+
+def init_state(
+    x0: jnp.ndarray,
+    value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+    opts: LbfgsOptions,
+) -> LbfgsState:
+    f0, g0 = value_and_grad(x0)
+    h, d = opts.history, x0.shape[0]
+    z = jnp.zeros
+    return LbfgsState(
+        x=x0, f=f0, g=g0,
+        S=z((h, d), x0.dtype), Y=z((h, d), x0.dtype), rho=z((h,), x0.dtype),
+        head=jnp.zeros((), jnp.int32), count=jnp.zeros((), jnp.int32),
+        iter=jnp.zeros((), jnp.int32), n_evals=jnp.ones((), jnp.int32),
+        converged=jnp.zeros((), bool), failed=jnp.zeros((), bool),
+    )
+
+
+def _wolfe_linesearch(value_and_grad, x, f0, g0, d, opts: LbfgsOptions):
+    """Strong-Wolfe line search (Nocedal & Wright Alg. 3.5/3.6).
+
+    Single while_loop state machine: phase 0 = bracketing (grow t), phase 1 =
+    zoom (bisect the bracket).  Returns (t, f, g, n_evals, fail).
+    """
+    dg0 = jnp.dot(d, g0)
+    c1, c2 = opts.c1, opts.c2
+
+    # carry: (phase, lo, f_lo, dg_lo, hi, t, f_t, g_t, dg_t, prev_t, f_prev,
+    #         done, n_evals, it)
+    def phi(t):
+        f, g = value_and_grad(x + t * d)
+        return f, g, jnp.dot(d, g)
+
+    t0 = jnp.asarray(opts.init_step, x.dtype)
+    f1, g1, dg1 = phi(t0)
+
+    def cond(c):
+        return jnp.logical_and(~c["done"], c["it"] < opts.max_linesearch)
+
+    def body(c):
+        t, f_t, g_t, dg_t = c["t"], c["f_t"], c["g_t"], c["dg_t"]
+        armijo = f_t <= f0 + c1 * t * dg0
+        higher = jnp.logical_or(~armijo, jnp.logical_and(c["it"] > 0, f_t >= c["f_prev"]))
+        curv = jnp.abs(dg_t) <= -c2 * dg0
+
+        def bracketing(c):
+            # case 1: violation -> zoom(prev, t)
+            def to_zoom_hi(c):
+                return dict(c, phase=1, lo=c["prev_t"], f_lo=c["f_prev"],
+                            hi=t)
+            # case 2: strong Wolfe satisfied -> done
+            def to_done(c):
+                return dict(c, done=jnp.asarray(True))
+            # case 3: positive slope -> zoom(t, prev)
+            def to_zoom_swap(c):
+                return dict(c, phase=1, lo=t, f_lo=f_t, hi=c["prev_t"])
+            # case 4: grow step
+            def grow(c):
+                nt = t * 2.0
+                nf, ng, ndg = phi(nt)
+                return dict(c, prev_t=t, f_prev=f_t, t=nt, f_t=nf, g_t=ng,
+                            dg_t=ndg, n_evals=c["n_evals"] + 1)
+
+            c = jax.lax.cond(
+                higher, to_zoom_hi,
+                lambda c: jax.lax.cond(
+                    curv, to_done,
+                    lambda c: jax.lax.cond(dg_t >= 0, to_zoom_swap, grow, c),
+                    c),
+                c)
+            # on entering zoom, evaluate the midpoint
+            def eval_mid(c):
+                mt = 0.5 * (c["lo"] + c["hi"])
+                mf, mg, mdg = phi(mt)
+                return dict(c, t=mt, f_t=mf, g_t=mg, dg_t=mdg,
+                            n_evals=c["n_evals"] + 1)
+            entered_zoom = jnp.logical_and(c["phase"] == 1, ~c["done"])
+            return jax.lax.cond(entered_zoom, eval_mid, lambda c: c, c)
+
+        def zooming(c):
+            def shrink_hi(c):
+                return dict(c, hi=t)
+            def update_lo(c):
+                def swap(c):
+                    return dict(c, hi=c["lo"], lo=t, f_lo=f_t)
+                def keep(c):
+                    return dict(c, lo=t, f_lo=f_t)
+                return jax.lax.cond(dg_t * (c["hi"] - c["lo"]) >= 0, swap, keep, c)
+
+            c = jax.lax.cond(
+                jnp.logical_or(~armijo, f_t >= c["f_lo"]), shrink_hi,
+                lambda c: jax.lax.cond(curv, lambda c: dict(c, done=jnp.asarray(True)),
+                                       update_lo, c),
+                c)
+            def eval_mid(c):
+                mt = 0.5 * (c["lo"] + c["hi"])
+                mf, mg, mdg = phi(mt)
+                return dict(c, t=mt, f_t=mf, g_t=mg, dg_t=mdg,
+                            n_evals=c["n_evals"] + 1)
+            return jax.lax.cond(~c["done"], eval_mid, lambda c: c, c)
+
+        c = jax.lax.cond(c["phase"] == 0, bracketing, zooming, c)
+        return dict(c, it=c["it"] + 1)
+
+    carry = {
+        "phase": jnp.asarray(0),
+        "lo": jnp.zeros((), x.dtype), "f_lo": f0, "hi": jnp.zeros((), x.dtype),
+        "t": t0, "f_t": f1, "g_t": g1, "dg_t": dg1,
+        "prev_t": jnp.zeros((), x.dtype), "f_prev": f0,
+        "done": jnp.asarray(False), "n_evals": jnp.asarray(1, jnp.int32),
+        "it": jnp.asarray(0, jnp.int32),
+    }
+    c = jax.lax.while_loop(cond, body, carry)
+    # if the budget ran out, fall back to the best Armijo point seen (t or lo)
+    armijo_ok = c["f_t"] <= f0 + c1 * c["t"] * dg0
+    fail = jnp.logical_and(~c["done"], ~armijo_ok)
+    return c["t"], c["f_t"], c["g_t"], c["n_evals"], fail
+
+
+def step(
+    state: LbfgsState,
+    value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+    opts: LbfgsOptions,
+) -> LbfgsState:
+    """One L-BFGS iteration (direction + strong-Wolfe line search)."""
+    h = opts.history
+    d = _two_loop(state.g, state.S, state.Y, state.rho, state.head, state.count, h)
+    d = -d
+    dg = jnp.dot(d, state.g)
+    # fall back to steepest descent if not a descent direction
+    bad = dg >= 0.0
+    d = jnp.where(bad, -state.g, d)
+    dg = jnp.where(bad, -jnp.dot(state.g, state.g), dg)
+
+    t, f_new, g_new, ls_evals, ls_fail = _wolfe_linesearch(
+        value_and_grad, state.x, state.f, state.g, d, opts
+    )
+    x_new = state.x + t * d
+    n_evals = state.n_evals + ls_evals
+
+    s = x_new - state.x
+    y = g_new - state.g
+    sy = jnp.dot(s, y)
+    good_pair = sy > 1e-10 * jnp.linalg.norm(s) * jnp.linalg.norm(y)
+
+    S = jnp.where(good_pair, state.S.at[state.head].set(s), state.S)
+    Y = jnp.where(good_pair, state.Y.at[state.head].set(y), state.Y)
+    rho = jnp.where(
+        good_pair, state.rho.at[state.head].set(1.0 / jnp.maximum(sy, 1e-30)),
+        state.rho,
+    )
+    head = jnp.where(good_pair, (state.head + 1) % h, state.head)
+    count = jnp.where(good_pair, jnp.minimum(state.count + 1, h), state.count)
+
+    gnorm = jnp.max(jnp.abs(g_new))
+    frel = jnp.abs(f_new - state.f) / jnp.maximum(jnp.abs(state.f), 1.0)
+    converged = jnp.logical_or(gnorm <= opts.gtol, frel <= opts.ftol)
+
+    # on line-search failure keep the old point but flag failure
+    keep = ls_fail
+    return LbfgsState(
+        x=jnp.where(keep, state.x, x_new),
+        f=jnp.where(keep, state.f, f_new),
+        g=jnp.where(keep, state.g, g_new),
+        S=S, Y=Y, rho=rho, head=head, count=count,
+        iter=state.iter + 1,
+        n_evals=n_evals,
+        converged=jnp.logical_or(state.converged, converged),
+        failed=jnp.logical_or(state.failed, ls_fail),
+    )
+
+
+def run(
+    value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+    x0: jnp.ndarray,
+    opts: LbfgsOptions = LbfgsOptions(),
+) -> LbfgsState:
+    """Run L-BFGS to convergence (single jit-able while_loop)."""
+    state = init_state(x0, value_and_grad, opts)
+
+    def cond(s):
+        return jnp.logical_and(
+            s.iter < opts.max_iters,
+            jnp.logical_and(~s.converged, ~s.failed),
+        )
+
+    return jax.lax.while_loop(cond, lambda s: step(s, value_and_grad, opts), state)
+
+
+def run_segment(
+    value_and_grad,
+    state: LbfgsState,
+    num_steps: int,
+    opts: LbfgsOptions,
+) -> LbfgsState:
+    """Run exactly ``num_steps`` iterations from an existing state.
+
+    Used by the paper's Algorithm 1: the solver advances ``r`` iterations
+    between snapshot/active-set refreshes (history is preserved across
+    segments, matching 'apply a solver ... for r iterations').
+    Stops early only on convergence/failure (iterations become no-ops).
+    """
+
+    def body(_, s):
+        do = jnp.logical_and(~s.converged, ~s.failed)
+
+        def advance(s):
+            return step(s, value_and_grad, opts)
+
+        return jax.lax.cond(do, advance, lambda s: s, s)
+
+    return jax.lax.fori_loop(0, num_steps, body, state)

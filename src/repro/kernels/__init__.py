@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical OT gradient path.
+
+gradpsi:  fused block-masked dual gradient (the paper's Algorithm 2 on TPU).
+screen:   Eq. 6/7 bound matrices -> verdicts -> tile skip flags.
+ops:      jit'd wrappers (padding, interpret-mode fallback, assembly).
+ref:      pure-jnp oracles used by the kernel test sweeps.
+"""

@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: interpret-mode selection (CPU container -> interpret=True; real TPU
+-> compiled Mosaic), padding of L and n up to tile multiples, and assembling
+kernel partials into the (value, grad_alpha, grad_beta) triple the solver
+consumes.  Padded tiles are marked skipped in the flag matrix, so they cost
+nothing and contribute exact zeros.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dual import DualProblem
+from repro.core.screening import ZERO
+from repro.kernels.gradpsi import DEFAULT_TILE_N, gradpsi_pallas, pick_tile_l
+from repro.kernels.screen import screen_pallas
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas on anything that is not a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("prob", "tile_l", "tile_n", "interpret"),
+)
+def dual_value_and_grad(
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    C: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    verdict: jnp.ndarray,           # (L, n) int32 from screening.verdicts
+    prob: DualProblem,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Block-masked Pallas evaluation of the dual value and gradients.
+
+    Returns (value, grad_alpha, grad_beta) for the MAXIMIZATION problem —
+    identical to repro.core.dual.dual_value_and_grad with the screened mask
+    (Theorem 2: masked entries are provably zero).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    L, g, n = prob.num_groups, prob.group_size, prob.n
+    if tile_l == 0:
+        tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
+        tile_l = min(tile_l, L) if L % min(tile_l, L) == 0 else 1
+        while L % tile_l:
+            tile_l //= 2
+        tile_l = max(tile_l, 1)
+
+    # pad n and L to tile multiples; padded area is flagged skipped AND gets
+    # +PAD_COST so f = alpha + beta - c < 0 there => exact-zero contribution
+    # even inside partially-real tiles.
+    from repro.core.groups import PAD_COST
+
+    n_pad = -(-n // tile_n) * tile_n
+    L_pad = -(-L // tile_l) * tile_l
+    Cp = _pad_axis(
+        _pad_axis(C.reshape(L, g, n), 2, tile_n, PAD_COST), 0, tile_l, PAD_COST
+    )
+    alphap = _pad_axis(alpha.reshape(L, g), 0, tile_l, 0.0).reshape(-1)
+    betap = _pad_axis(beta, 0, tile_n, 0.0)
+    vp = _pad_axis(_pad_axis(verdict, 1, tile_n, ZERO), 0, tile_l, ZERO)
+    vt = vp.reshape(L_pad // tile_l, tile_l, n_pad // tile_n, tile_n)
+    flags = jnp.any(vt != ZERO, axis=(1, 3)).astype(jnp.int32)
+
+    rowsum, colsum, psi = gradpsi_pallas(
+        alphap,
+        betap,
+        Cp.reshape(L_pad * g, n_pad),
+        flags,
+        num_groups=L_pad,
+        group_size=g,
+        tau=prob.reg.tau,
+        gamma=prob.reg.gamma,
+        tile_l=tile_l,
+        tile_n=tile_n,
+        interpret=interpret,
+    )
+    rowsum = rowsum.reshape(L_pad, g)[:L].reshape(-1)
+    colsum = colsum[:n]
+    value = alpha @ a + beta @ b - psi
+    return value, a - rowsum, b - colsum
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tau", "tile_l", "tile_n", "interpret")
+)
+def screen_verdicts(
+    z_snap, k_snap, o_snap, active, da_plus, da_full, da_neg, db, sqrt_g,
+    tau: float,
+    tile_l: int = 8,
+    tile_n: int = 128,
+    interpret: bool | None = None,
+):
+    """Pallas screening pass; pads (L, n) to tile multiples transparently."""
+    if interpret is None:
+        interpret = default_interpret()
+    L, n = z_snap.shape
+    pad2 = lambda x: _pad_axis(_pad_axis(x, 1, tile_n, 0.0), 0, tile_l, 0.0)
+    padL = lambda x: _pad_axis(x, 0, tile_l, 0.0)
+    padN = lambda x: _pad_axis(x, 0, tile_n, 0.0)
+    v, flags = screen_pallas(
+        pad2(z_snap), pad2(k_snap),
+        # padded k/o rows are zero => zlow <= 0 < tau => never ACTIVE
+        pad2(o_snap), pad2(active.astype(jnp.int8)),
+        padL(da_plus), padL(da_full), padL(da_neg), padN(db), padL(sqrt_g),
+        tau=float(tau), tile_l=tile_l, tile_n=tile_n, interpret=interpret,
+    )
+    return v[:L, :n], flags

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.screening import ACTIVE, CHECK, ZERO
+
+
+def gradpsi_ref(
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    C: jnp.ndarray,
+    flags: jnp.ndarray,            # (L_tiles, N_tiles) int32
+    *,
+    num_groups: int,
+    group_size: int,
+    tau: float,
+    gamma: float,
+    tile_l: int,
+    tile_n: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for gradpsi_pallas: same tile-masking semantics, plain jnp."""
+    L, g = num_groups, group_size
+    n = beta.shape[0]
+    F = (
+        alpha.reshape(L, g)[:, :, None].astype(jnp.float32)
+        + beta[None, None, :].astype(jnp.float32)
+        - C.reshape(L, g, n).astype(jnp.float32)
+    )
+    Fp = jnp.maximum(F, 0.0)
+    Z = jnp.sqrt(jnp.sum(Fp * Fp, axis=1))               # (L, n)
+    on = Z > tau
+    Zs = jnp.where(on, Z, 1.0)
+    s = jnp.where(on, 1.0 - tau / Zs, 0.0)
+    # expand tile flags to per-entry mask
+    mask = jnp.repeat(jnp.repeat(flags != 0, tile_l, axis=0), tile_n, axis=1)
+    s = jnp.where(mask, s, 0.0)
+    T = s[:, None, :] * Fp / gamma
+    psi = jnp.where(on, s * Zs * Zs / gamma * (1.0 - 0.5 * s) - (tau / gamma) * s * Zs, 0.0)
+    psi = jnp.where(mask, psi, 0.0)
+    return (
+        jnp.sum(T, axis=2).reshape(-1),
+        jnp.sum(T, axis=(0, 1)),
+        jnp.sum(psi),
+    )
+
+
+def screen_ref(
+    z_snap, k_snap, o_snap, active, da_plus, da_full, da_neg, db, sqrt_g,
+    *, tau: float, tile_l: int, tile_n: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for screen_pallas."""
+    zbar = z_snap + da_plus[:, None] + sqrt_g[:, None] * jnp.maximum(db, 0.0)[None, :]
+    zlow = (
+        k_snap
+        - da_full[:, None]
+        - sqrt_g[:, None] * jnp.abs(db)[None, :]
+        - o_snap
+        - da_neg[:, None]
+        - sqrt_g[:, None] * jnp.maximum(-db, 0.0)[None, :]
+    )
+    v = jnp.where(zbar <= tau, ZERO, CHECK)
+    v = jnp.where(active != 0, ACTIVE, v)
+    v = jnp.where(jnp.logical_and(v == CHECK, zlow > tau), ACTIVE, v)
+    v = v.astype(jnp.int32)
+    L, n = v.shape
+    vt = v.reshape(L // tile_l, tile_l, n // tile_n, tile_n)
+    flags = jnp.any(vt != ZERO, axis=(1, 3)).astype(jnp.int32)
+    return v, flags

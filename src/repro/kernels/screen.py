@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: screening bound matrices + verdicts (paper Eq. 6/7).
+
+Rank-1 "outer broadcast" pass over the (L, n) bound matrices:
+
+  z_bar[l, j] = z~[l, j] + ||[d_alpha_[l]]_+|| + sqrt(g_l) * [d_beta_j]_+
+  z_low[l, j] = k~ - ||d_alpha_[l]|| - sqrt(g_l)|d_beta_j|
+                - o~ - ||[d_alpha_[l]]_-|| - sqrt(g_l)[−d_beta_j]_+
+
+  verdict = ACTIVE where active mask (N),
+            ZERO   where z_bar <= tau,
+            CHECK  otherwise.
+
+One VPU pass, O(L n) bytes — this is the O(|L|(n+g)) cost of Lemma 3/6
+(the per-group delta norms are O(L g) and computed outside in plain jnp).
+The kernel also emits the per-tile OR-reduction consumed by gradpsi's skip
+flags, so the verdict matrix never has to round-trip through HBM twice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.screening import ZERO, CHECK, ACTIVE
+
+
+def _kernel(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
+            db_ref, sg_ref, verdict_ref, flag_ref, *, tau: float):
+    dap = dap_ref[...][:, None]                       # (TL, 1)
+    daf = daf_ref[...][:, None]
+    dan = dan_ref[...][:, None]
+    sg = sg_ref[...][:, None]
+    db = db_ref[...][None, :]                         # (1, TN)
+
+    zbar = z_ref[...] + dap + sg * jnp.maximum(db, 0.0)
+    zlow = (
+        k_ref[...]
+        - daf
+        - sg * jnp.abs(db)
+        - o_ref[...]
+        - dan
+        - sg * jnp.maximum(-db, 0.0)
+    )
+    active = act_ref[...] != 0
+    v = jnp.where(zbar <= tau, ZERO, CHECK)
+    v = jnp.where(active, ACTIVE, v)
+    # lower bound can also certify non-zero outside N within this eval
+    v = jnp.where(jnp.logical_and(v == CHECK, zlow > tau), ACTIVE, v)
+    verdict_ref[...] = v.astype(jnp.int32)
+    flag_ref[0, 0] = jnp.any(v != ZERO).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tau", "tile_l", "tile_n", "interpret")
+)
+def screen_pallas(
+    z_snap: jnp.ndarray,       # (L, n)
+    k_snap: jnp.ndarray,       # (L, n)
+    o_snap: jnp.ndarray,       # (L, n)
+    active: jnp.ndarray,       # (L, n) int8/bool persistent set N
+    da_plus: jnp.ndarray,      # (L,)  ||[d_alpha_[l]]_+||
+    da_full: jnp.ndarray,      # (L,)  ||d_alpha_[l]||
+    da_neg: jnp.ndarray,       # (L,)  ||[d_alpha_[l]]_-||
+    db: jnp.ndarray,           # (n,)  d_beta
+    sqrt_g: jnp.ndarray,       # (L,)
+    *,
+    tau: float,
+    tile_l: int = 8,
+    tile_n: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (verdict (L, n) int32, tile_flags (L/tile_l, n/tile_n) int32)."""
+    L, n = z_snap.shape
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (L // tile_l, n // tile_n)
+
+    row = pl.BlockSpec((tile_l,), lambda l, j: (l,))
+    col = pl.BlockSpec((tile_n,), lambda l, j: (j,))
+    mat = pl.BlockSpec((tile_l, tile_n), lambda l, j: (l, j))
+
+    verdict, flags = pl.pallas_call(
+        functools.partial(_kernel, tau=float(tau)),
+        grid=grid,
+        in_specs=[mat, mat, mat, mat, row, row, row, col, row],
+        out_specs=[mat, pl.BlockSpec((1, 1), lambda l, j: (l, j))],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, n), jnp.int32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(z_snap, k_snap, o_snap, active.astype(jnp.int8),
+      da_plus, da_full, da_neg, db, sqrt_g)
+    return verdict, flags

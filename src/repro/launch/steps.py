@@ -1,0 +1,83 @@
+"""Step functions lowered by the dry-run and driven by train.py / serve.py."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig, TrainConfig
+from repro.models import build_model
+from repro.training.optim import adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """(state, batch) -> (state, metrics); state = {"params", "opt"}."""
+    model = build_model(cfg)
+    remat = tcfg.remat != "none"
+    if tcfg.constrain_grads:
+        _, param_axes = model.init(jax.random.PRNGKey(0), abstract=True)
+
+    def train_step(state: Dict, batch: Dict):
+        def loss_fn(p):
+            return model.train_loss(p, batch, z_loss=tcfg.z_loss, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"]
+        )
+        if tcfg.constrain_grads:
+            # pin grads to the param shardings: GSPMD then reduce-scatters
+            # gradient partial sums instead of all-reduce + slice (§Perf)
+            from repro.sharding.partition import constrain
+
+            grads = jax.tree_util.tree_map(
+                lambda g, ax: constrain(g, *ax),
+                grads,
+                param_axes,
+                is_leaf=lambda x: isinstance(x, tuple)
+                and all(isinstance(a, str) or a is None for a in x),
+            )
+        new_params, new_opt, om = adamw_update(
+            state["params"], grads, state["opt"], tcfg.optimizer
+        )
+        metrics = dict(metrics, **om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def prefill_step(params, tokens, caches, memory=None):
+        if cfg.family == "encdec":
+            memory = model.encode(params, memory)
+        return model.prefill(params, tokens, caches, memory=memory)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: greedy next token + cache update."""
+    model = build_model(cfg)
+
+    def serve_step(params, token, caches, index, memory=None):
+        # enc-dec: cross-attention K/V live in the cache after prefill, so the
+        # encoder never runs during decode (memory stays None).
+        logits, caches = model.decode_step(params, token, caches, index, memory=memory)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_token, caches
+
+    return serve_step
+
+
+def abstract_train_state(cfg: ModelConfig, ocfg: OptimizerConfig):
+    """Sharding-free abstract state (dry-run attaches shardings itself)."""
+    model = build_model(cfg)
+    params, axes = model.init(jax.random.PRNGKey(0), abstract=True)
+    opt = init_opt_state(params, ocfg, abstract=True)
+    from repro.training.optim import opt_state_logical_axes
+
+    opt_axes = opt_state_logical_axes(axes, ocfg, "master" in opt)
+    return {"params": params, "opt": opt}, {"params": axes, "opt": opt_axes}

@@ -1,0 +1,10 @@
+"""Model zoo: one builder per architecture family."""
+from repro.configs.base import ModelConfig
+from repro.models.lm import build_lm
+from repro.models.encdec import build_encdec
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return build_encdec(cfg)
+    return build_lm(cfg)

@@ -1,0 +1,354 @@
+"""Attention variants: GQA, MLA (multi-head latent), and cross-attention.
+
+All functions are pure; params are dicts built by ParamMaker.  Decode paths
+take a KV cache dict {k, v, index} updated with dynamic_update_slice (MLA
+caches the compressed latent instead — its whole point).  Logical sharding
+constraints are applied at the activation level; rules decide physical axes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.common import (
+    ParamMaker,
+    apply_rotary,
+    causal_mask,
+    rmsnorm,
+    rotary_cos_sin,
+    softmax_fp32,
+)
+from repro.sharding.partition import constrain
+
+
+# ---------------------------------------------------------------------------
+# GQA
+
+
+def init_gqa(mk: ParamMaker, cfg: ModelConfig):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    mk("wq", (d, H, hd), ("embed", "heads", "head_dim"))
+    mk("wk", (d, K, hd), ("embed", "kv_heads", "head_dim"))
+    mk("wv", (d, K, hd), ("embed", "kv_heads", "head_dim"))
+    mk("wo", (H, hd, d), ("heads", "head_dim", "embed"))
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.kv_quant:
+        return {
+            "k": jnp.zeros((batch, max_len, K, hd), jnp.int8),
+            "v": jnp.zeros((batch, max_len, K, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, max_len, K), jnp.float32),
+            "v_scale": jnp.zeros((batch, max_len, K), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((batch, max_len, K, hd), dtype),
+    }
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    """ShapeDtypeStruct cache stand-in (dry-run serve_step input)."""
+    K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    sds = jax.ShapeDtypeStruct
+    if cfg.kv_quant:
+        return {
+            "k": sds((batch, max_len, K, hd), jnp.int8),
+            "v": sds((batch, max_len, K, hd), jnp.int8),
+            "k_scale": sds((batch, max_len, K), jnp.float32),
+            "v_scale": sds((batch, max_len, K), jnp.float32),
+        }
+    return {
+        "k": sds((batch, max_len, K, hd), dtype),
+        "v": sds((batch, max_len, K, hd), dtype),
+    }
+
+
+def cache_logical_axes(cfg: Optional[ModelConfig] = None) -> Dict:
+    axes = {
+        "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    }
+    if cfg is not None and cfg.kv_quant:
+        axes["k_scale"] = ("batch", "kv_seq", "kv_heads")
+        axes["v_scale"] = ("batch", "kv_seq", "kv_heads")
+    return axes
+
+
+def _q8_token(x: jnp.ndarray):
+    """Per-(token, head) int8 quantization of (B, S, K, hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _gqa_scores_ctx(q, k, v, mask):
+    """q (B,S,H,hd), k/v (B,T,K,hd) with H = K * G."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k) / jnp.sqrt(hd).astype(jnp.float32)
+    scores = scores.astype(jnp.float32) + mask  # mask broadcast (S, T)
+    w = softmax_fp32(scores).astype(v.dtype)
+    ctx = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return ctx.reshape(B, S, H, hd)
+
+
+def apply_gqa(
+    params: Dict,
+    x: jnp.ndarray,                     # (B, S, D)
+    positions: jnp.ndarray,             # (B, S) int32
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    dt = x.dtype
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = constrain(q, "batch", "seq", "heads", None)
+
+    if cfg.use_rope:
+        cos, sin = rotary_cos_sin(positions, hd, cfg.rope_theta)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+
+    if cache is not None:
+        idx = cache_index if cache_index is not None else 0
+        idx = jnp.asarray(idx)
+        quant = "k_scale" in cache
+        if quant:
+            k_q, k_s = _q8_token(k)
+            v_q, v_s = _q8_token(v)
+            writes = [("k", k_q), ("v", v_q), ("k_scale", k_s), ("v_scale", v_s)]
+        else:
+            writes = [
+                ("k", k.astype(cache["k"].dtype)),
+                ("v", v.astype(cache["v"].dtype)),
+            ]
+        new_cache = {}
+        for name, val in writes:
+            if idx.ndim == 1:
+                # per-slot positions (continuous batching): vmap the update
+                new_cache[name] = jax.vmap(
+                    lambda c, nv, i: jax.lax.dynamic_update_slice_in_dim(c, nv, i, 0)
+                )(cache[name], val, idx)
+            else:
+                new_cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[name], val, idx, 1
+                )
+        cache = new_cache
+        if quant:
+            k = _dq8(cache["k"], cache["k_scale"], dt)
+            v = _dq8(cache["v"], cache["v_scale"], dt)
+        else:
+            k, v = cache["k"].astype(dt), cache["v"].astype(dt)
+        T = k.shape[1]
+        if causal:
+            # valid keys: position <= query position (query at idx + s)
+            if idx.ndim == 1:
+                q_pos = idx[:, None, None] + jnp.arange(x.shape[1])[None, :, None]
+                k_pos = jnp.arange(T)[None, None, :]
+                # (B, S, T) -> broadcast over (kv, group) score dims later
+                mask = jnp.where(k_pos <= q_pos, 0.0, -1e30).astype(jnp.float32)
+                mask = mask[:, None, None, :, :]  # (B,1,1,S,T) for bkgst scores
+            else:
+                q_pos = idx + jnp.arange(x.shape[1])[:, None]
+                k_pos = jnp.arange(T)[None, :]
+                mask = jnp.where(k_pos <= q_pos, 0.0, -1e30).astype(jnp.float32)
+        else:
+            mask = jnp.zeros((x.shape[1], T), jnp.float32)
+    else:
+        mask = (
+            causal_mask(x.shape[1], x.shape[1])
+            if causal
+            else jnp.zeros((x.shape[1], x.shape[1]), jnp.float32)
+        )
+
+    ctx = _gqa_scores_ctx(q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(dt))
+    return constrain(out, "batch", "seq", "embed_act"), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder / vlm layers)
+
+
+def init_cross(mk: ParamMaker, cfg: ModelConfig, kv_dim: Optional[int] = None):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    kv_dim = kv_dim or d
+    mk("wq", (d, H, hd), ("embed", "heads", "head_dim"))
+    mk("wk", (kv_dim, K, hd), ("embed", "kv_heads", "head_dim"))
+    mk("wv", (kv_dim, K, hd), ("embed", "kv_heads", "head_dim"))
+    mk("wo", (H, hd, d), ("heads", "head_dim", "embed"))
+    mk("q_norm", (d,), ("embed_act",), init="ones")
+
+
+def apply_cross(
+    params: Dict,
+    x: jnp.ndarray,                # (B, S, D) queries
+    memory: jnp.ndarray,           # (B, M, Dm) keys/values source
+    cfg: ModelConfig,
+    memory_kv: Optional[Dict] = None,   # precomputed {k, v} (decode fast path)
+) -> Tuple[jnp.ndarray, Dict]:
+    dt = x.dtype
+    hd = cfg.resolved_head_dim
+    xq = rmsnorm(x, params["q_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(dt))
+    if memory_kv is None:
+        k = jnp.einsum("bmd,dhk->bmhk", memory, params["wk"].astype(dt))
+        v = jnp.einsum("bmd,dhk->bmhk", memory, params["wv"].astype(dt))
+        memory_kv = {"k": k, "v": v}
+    k, v = memory_kv["k"].astype(dt), memory_kv["v"].astype(dt)
+    mask = jnp.zeros((x.shape[1], k.shape[1]), jnp.float32)
+    ctx = _gqa_scores_ctx(q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"].astype(dt))
+    return constrain(out, "batch", "seq", "embed_act"), memory_kv
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, minicpm3 / deepseek family)
+
+
+def init_mla(mk: ParamMaker, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.num_heads
+    m: MLAConfig = cfg.mla
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    mk("q_down", (d, m.q_lora_rank), ("embed", "q_lora"))
+    mk("q_norm", (m.q_lora_rank,), ("q_lora",), init="ones")
+    mk("q_up", (m.q_lora_rank, H, qk), ("q_lora", "heads", "head_dim"))
+    mk("kv_down", (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "kv_lora"))
+    mk("kv_norm", (m.kv_lora_rank,), ("kv_lora",), init="ones")
+    mk(
+        "kv_up",
+        (m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+        ("kv_lora", "heads", "head_dim"),
+    )
+    mk("wo", (H, m.v_head_dim, d), ("heads", "head_dim", "embed"))
+
+
+def mla_cache_struct(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    m = cfg.mla
+    sds = jax.ShapeDtypeStruct
+    return {
+        "latent": sds((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": sds((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    m = cfg.mla
+    return {
+        "latent": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_cache_logical_axes() -> Dict:
+    return {
+        "latent": ("batch", "kv_seq", "kv_lora"),
+        "k_rope": ("batch", "kv_seq", None),
+    }
+
+
+def apply_mla(
+    params: Dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """MLA with the 'absorbed' decode path: attention runs in latent space.
+
+    Train/prefill: expand latent -> per-head K/V (matmul-heavy, MXU-friendly).
+    Decode: absorb kv_up into q and out (scores = q_nope' . latent), so the
+    per-step cost is O(T * kv_lora_rank) instead of O(T * H * head_dim).
+    """
+    dt = x.dtype
+    m: MLAConfig = cfg.mla
+    H = cfg.num_heads
+    B, S, _ = x.shape
+
+    ql = rmsnorm(jnp.einsum("bsd,dr->bsr", x, params["q_down"].astype(dt)),
+                 params["q_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, params["q_up"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["kv_down"].astype(dt))
+    latent = rmsnorm(kv[..., : m.kv_lora_rank], params["kv_norm"], cfg.rms_eps)
+    k_rope = kv[..., m.kv_lora_rank:]
+
+    cos, sin = rotary_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, cos, sin)
+    k_rope = apply_rotary(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is not None:
+        idx = jnp.asarray(cache_index if cache_index is not None else 0)
+        if idx.ndim == 1:
+            upd = jax.vmap(
+                lambda c, new, i: jax.lax.dynamic_update_slice_in_dim(c, new, i, 0)
+            )
+            cl = upd(cache["latent"], latent.astype(cache["latent"].dtype), idx)
+            cr = upd(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx)
+        else:
+            cl = jax.lax.dynamic_update_slice_in_dim(
+                cache["latent"], latent.astype(cache["latent"].dtype), idx, 1)
+            cr = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, 1)
+        cache = {"latent": cl, "k_rope": cr}
+        latent_all, k_rope_all = cl.astype(dt), cr.astype(dt)
+        T = latent_all.shape[1]
+        if idx.ndim == 1:
+            q_pos = idx[:, None, None] + jnp.arange(S)[None, :, None]
+            mask = jnp.where(jnp.arange(T)[None, None, :] <= q_pos, 0.0, -1e30)
+            mask = mask[:, None]          # (B,1,S,T) for bhst scores
+        else:
+            q_pos = idx + jnp.arange(S)[:, None]
+            mask = jnp.where(jnp.arange(T)[None, :] <= q_pos, 0.0, -1e30)
+            mask = mask[None, None]       # (1,1,S,T)
+
+        # absorbed scores: q_nope' = q_nope @ kv_up[..., :nope]  (per head)
+        kv_up_k = params["kv_up"].astype(dt)[..., : m.qk_nope_head_dim]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, kv_up_k)
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_lat, latent_all)
+            + jnp.einsum("bshk,btk->bhst", q_rope, k_rope_all)
+        ).astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        w = softmax_fp32(scores * scale + mask).astype(dt)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", w, latent_all)
+        kv_up_v = params["kv_up"].astype(dt)[..., m.qk_nope_head_dim:]
+        ctx = jnp.einsum("bshr,rhv->bshv", ctx_lat, kv_up_v)
+    else:
+        # train/prefill: expand latent to per-head K/V
+        kvu = jnp.einsum("bsr,rhk->bshk", latent, params["kv_up"].astype(dt))
+        k_nope = kvu[..., : m.qk_nope_head_dim]
+        v = kvu[..., m.qk_nope_head_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        scores = jnp.einsum("bshk,bthk->bhst", qf, k).astype(jnp.float32) * scale
+        scores = scores + causal_mask(S, S)[None, None]
+        w = softmax_fp32(scores).astype(dt)
+        ctx = jnp.einsum("bhst,bthv->bshv", w, v)
+
+    out = jnp.einsum("bshv,hvd->bsd", ctx, params["wo"].astype(dt))
+    return constrain(out, "batch", "seq", "embed_act"), cache

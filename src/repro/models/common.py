@@ -1,0 +1,202 @@
+"""Model-definition substrate: param construction, norms, rotary, masking.
+
+Params are nested dicts of arrays.  ``ParamMaker`` builds them while
+recording each leaf's LOGICAL sharding axes (see sharding/partition.py);
+in abstract mode it produces ShapeDtypeStructs instead of arrays, which is
+how the multi-pod dry-run materializes 398B-parameter trees without
+allocating a byte.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamMaker:
+    """Builds a param tree + parallel logical-axes tree.
+
+    maker = ParamMaker(rng, dtype="bfloat16", abstract=True)
+    with maker.scope("layer0"):
+        w = maker("wq", (d, h), ("embed", "heads"))
+    params, axes = maker.collect()
+    """
+
+    def __init__(self, rng: jax.Array, dtype: str, abstract: bool = False):
+        self._rng = rng
+        self.dtype = jnp.dtype(dtype)
+        self.abstract = abstract
+        self.params: Dict = {}
+        self.axes: Dict = {}
+        self._path: Tuple[str, ...] = ()
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._path = self._path + (name,)
+        try:
+            yield self
+        finally:
+            self._path = self._path[:-1]
+
+    def _insert(self, tree, name, value):
+        node = tree
+        for part in self._path:
+            node = node.setdefault(part, {})
+        assert name not in node, f"duplicate param {self._path + (name,)}"
+        node[name] = value
+
+    def next_rng(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def __call__(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Sequence[Optional[str]],
+        init: str = "normal",
+        scale: float = 0.02,
+    ) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(tuple(shape), self.dtype)
+        elif init == "zeros":
+            value = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            value = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            value = (
+                jax.random.normal(self.next_rng(), shape, jnp.float32) * scale
+            ).astype(self.dtype)
+        elif init == "slog":  # mamba A_log init: log(1..d_state)
+            value = jnp.broadcast_to(
+                jnp.log(jnp.arange(1, shape[-1] + 1, dtype=jnp.float32)), shape
+            ).astype(self.dtype)
+        else:
+            raise ValueError(init)
+        self._insert(self.params, name, value)
+        self._insert(self.axes, name, tuple(axes))
+        return value
+
+    def collect(self):
+        return self.params, self.axes
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(i, str) or i is None for i in x)
+
+
+def make_stack(mk: ParamMaker, name: str, n: int, init_one) -> None:
+    """Build n stacked copies of a sub-module along a leading 'layers' axis.
+
+    init_one(sub_maker) populates one layer's params.  In abstract mode a
+    single layer is built and stacked by metadata (no allocation) — this is
+    how 100-layer x multi-billion-param trees stay free in the dry-run.
+    """
+    if mk.abstract:
+        sub = ParamMaker(jax.random.PRNGKey(0), str(mk.dtype), abstract=True)
+        init_one(sub)
+        p0, a0 = sub.collect()
+        params = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), p0
+        )
+    else:
+        outs = []
+        for _ in range(n):
+            sub = ParamMaker(mk.next_rng(), str(mk.dtype), abstract=False)
+            init_one(sub)
+            outs.append(sub.collect())
+        p0, a0 = outs[0]
+        params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[p for p, _ in outs]
+        )
+    axes = jax.tree_util.tree_map(
+        lambda a: ("layers",) + a, a0, is_leaf=_is_axes
+    )
+    mk._insert(mk.params, name, params)
+    mk._insert(mk.axes, name, axes)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+
+
+def init_norm(mk: "ParamMaker", name: str, d: int, kind: str = "rmsnorm"):
+    with mk.scope(name):
+        mk("scale", (d,), ("embed_act",), init="ones")
+        if kind == "layernorm":
+            mk("bias", (d,), ("embed_act",), init="zeros")
+
+
+def apply_norm(params: Dict, x: jnp.ndarray, kind: str = "rmsnorm", eps: float = 1e-5):
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params["bias"], eps)
+    return rmsnorm(x, params["scale"], eps)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rotary_cos_sin(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (..., S) -> cos/sin (..., S, dim/2), fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, D) with cos/sin (..., S, D/2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def causal_mask(q_len: int, kv_len: int, dtype=jnp.float32) -> jnp.ndarray:
+    """(q_len, kv_len) additive mask; queries are the LAST q_len positions."""
+    q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    k_pos = jnp.arange(kv_len)[None, :]
+    return jnp.where(k_pos <= q_pos, 0.0, -1e30).astype(dtype)
+
+
+def swiglu(x_gate: jnp.ndarray, x_up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def softmax_fp32(logits: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=axis)
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, z_loss: float = 0.0
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over all positions (+ optional z-loss); logits (..., V)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    zl = z_loss * jnp.mean(jnp.square(lse)) if z_loss else 0.0
+    return ce + zl, ce
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,219 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB).
+
+Per the assignment, the modality frontend is stubbed: ``input_specs()``
+provides precomputed frame embeddings (B, n_frames, d_model) — the conv
+subsampler is not modeled.  The transformer backbone is faithful: bidirectional
+encoder (layernorm + GELU FFN), causal decoder with cross-attention, learned
+decoder positions, sinusoidal encoder positions, tied output head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (
+    ParamMaker,
+    apply_norm,
+    cross_entropy,
+    init_norm,
+    make_stack,
+)
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.sharding.partition import constrain
+
+
+def _sinusoid(length: int, channels: int) -> np.ndarray:
+    log_ts = np.log(10000.0) / (channels // 2 - 1)
+    inv = np.exp(-log_ts * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+def _init_enc_block(mk: ParamMaker, cfg: ModelConfig):
+    init_norm(mk, "norm_attn", cfg.d_model, cfg.norm)
+    with mk.scope("attn"):
+        attn.init_gqa(mk, cfg)
+    init_norm(mk, "norm_ffn", cfg.d_model, cfg.norm)
+    with mk.scope("mlp"):
+        init_mlp(mk, cfg.d_model, cfg.d_ff, cfg.act)
+
+
+def _init_dec_block(mk: ParamMaker, cfg: ModelConfig):
+    init_norm(mk, "norm_self", cfg.d_model, cfg.norm)
+    with mk.scope("self"):
+        attn.init_gqa(mk, cfg)
+    init_norm(mk, "norm_cross", cfg.d_model, cfg.norm)
+    with mk.scope("cross"):
+        attn.init_cross(mk, cfg)
+    init_norm(mk, "norm_ffn", cfg.d_model, cfg.norm)
+    with mk.scope("mlp"):
+        init_mlp(mk, cfg.d_model, cfg.d_ff, cfg.act)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDec:
+    cfg: ModelConfig
+
+    def init(self, rng: jax.Array, abstract: bool = False):
+        cfg = self.cfg
+        mk = ParamMaker(rng, cfg.param_dtype, abstract=abstract)
+        mk("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        mk("dec_pos", (cfg.max_decode_len, cfg.d_model), ("seq", "embed"))
+        make_stack(mk, "encoder", cfg.encoder_layers, lambda m: _init_enc_block(m, cfg))
+        init_norm(mk, "enc_norm", cfg.d_model, cfg.norm)
+        make_stack(mk, "decoder", cfg.num_layers, lambda m: _init_dec_block(m, cfg))
+        init_norm(mk, "final_norm", cfg.d_model, cfg.norm)
+        return mk.collect()
+
+    # -- encoder --------------------------------------------------------------
+    def encode(self, params, frames: jnp.ndarray, remat: bool = False):
+        """frames (B, F, D) stub embeddings -> encoder memory (B, F, D)."""
+        cfg = self.cfg
+        B, F, D = frames.shape
+        pos = jnp.asarray(_sinusoid(F, D))[None].astype(frames.dtype)
+        x = constrain(frames + pos, "batch", "frames", "embed_act")
+        fpos = jnp.broadcast_to(jnp.arange(F)[None, :], (B, F))
+
+        def body(x, p):
+            h = apply_norm(p["norm_attn"], x, cfg.norm, cfg.rms_eps)
+            y, _ = attn.apply_gqa(p["attn"], h, fpos, cfg, causal=False)
+            x = x + y
+            h = apply_norm(p["norm_ffn"], x, cfg.norm, cfg.rms_eps)
+            return x + apply_mlp(p["mlp"], h, cfg.act), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        if cfg.unroll_layers:
+            take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+            for i in range(cfg.encoder_layers):
+                x, _ = body(x, take(params["encoder"], i))
+        else:
+            x, _ = jax.lax.scan(body, x, params["encoder"])
+        return apply_norm(params["enc_norm"], x, cfg.norm, cfg.rms_eps)
+
+    # -- decoder --------------------------------------------------------------
+    def _dec_backbone(self, params, x, pos, memory, caches, index, remat):
+        cfg = self.cfg
+
+        def body(x, xs):
+            p, c = xs
+            h = apply_norm(p["norm_self"], x, cfg.norm, cfg.rms_eps)
+            sc = None if c is None else c["self"]
+            y, sc = attn.apply_gqa(p["self"], h, pos, cfg, sc, index)
+            x = x + y
+            h = apply_norm(p["norm_cross"], x, cfg.norm, cfg.rms_eps)
+            kv = None if c is None else c["cross_kv"]
+            y, kv = attn.apply_cross(p["cross"], h, memory, cfg, kv)
+            x = x + y
+            h = apply_norm(p["norm_ffn"], x, cfg.norm, cfg.rms_eps)
+            x = x + apply_mlp(p["mlp"], h, cfg.act)
+            c = None if c is None else {"self": sc, "cross_kv": kv}
+            return x, c
+
+        if remat:
+            body = jax.checkpoint(body)
+        if cfg.unroll_layers:
+            take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+            outs = []
+            for i in range(cfg.num_layers):
+                c_i = None if caches is None else take(caches, i)
+                x, c_i = body(x, (take(params["decoder"], i), c_i))
+                outs.append(c_i)
+            new_caches = (
+                None if caches is None
+                else jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+            )
+            return x, new_caches
+        return jax.lax.scan(body, x, (params["decoder"], caches))
+
+    def _embed_dec(self, params, tokens, start: int | jnp.ndarray):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.compute_dtype)
+        B, S = tokens.shape
+        x = params["embed"].astype(dt)[tokens]
+        p = jax.lax.dynamic_slice_in_dim(params["dec_pos"].astype(dt), start, S, 0)
+        return constrain(x + p[None], "batch", "seq", "embed_act")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.rms_eps)
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+
+    # -- entry points -----------------------------------------------------------
+    def train_loss(self, params, batch, z_loss: float = 0.0, remat: bool = True,
+                   aux_weights=(0.0, 0.0)):
+        frames, tokens = batch["frames"], batch["tokens"]
+        memory = self.encode(params, frames, remat)
+        if "labels" in batch:
+            inputs, labels = tokens, batch["labels"]
+        else:
+            inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        B, S = inputs.shape
+        x = self._embed_dec(params, inputs, 0)
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, _ = self._dec_backbone(params, x, pos, memory, None, None, remat)
+        loss, ce = cross_entropy(self._logits(params, x), labels, z_loss)
+        return loss, {"ce": ce, "loss": loss,
+                      "moe_lb": jnp.zeros(()), "moe_dropped": jnp.zeros(())}
+
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        sc = (attn.cache_struct if abstract else attn.make_cache)(cfg, batch, max_len, dtype)
+        K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        F = cfg.num_audio_frames
+        if abstract:
+            kv = {
+                "k": jax.ShapeDtypeStruct((batch, F, K, hd), dtype),
+                "v": jax.ShapeDtypeStruct((batch, F, K, hd), dtype),
+            }
+            one = {"self": sc, "cross_kv": kv}
+            return jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + tuple(s.shape), s.dtype),
+                one,
+            )
+        kv = {
+            "k": jnp.zeros((batch, F, K, hd), dtype),
+            "v": jnp.zeros((batch, F, K, hd), dtype),
+        }
+        one = {"self": sc, "cross_kv": kv}
+        return jax.tree_util.tree_map(
+            lambda s: jnp.broadcast_to(s, (cfg.num_layers,) + s.shape).copy(), one
+        )
+
+    def cache_logical_axes(self):
+        ca = attn.cache_logical_axes(self.cfg)
+        axes = {
+            "self": ca,
+            "cross_kv": {
+                "k": ("batch", "frames", "kv_heads", "head_dim"),
+                "v": ("batch", "frames", "kv_heads", "head_dim"),
+            },
+        }
+        return jax.tree_util.tree_map(
+            lambda a: ("layers",) + a, axes, is_leaf=lambda x: isinstance(x, tuple)
+        )
+
+    def prefill(self, params, tokens, caches, memory=None):
+        B, S = tokens.shape
+        x = self._embed_dec(params, tokens, 0)
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, caches = self._dec_backbone(params, x, pos, memory, caches, 0, False)
+        return self._logits(params, x[:, -1:, :]), caches
+
+    def decode_step(self, params, token, caches, index, memory=None):
+        B = token.shape[0]
+        x = self._embed_dec(params, token, index)
+        pos = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+        x, caches = self._dec_backbone(params, x, pos, memory, caches, index, False)
+        return self._logits(params, x), caches
+
+
+def build_encdec(cfg: ModelConfig) -> EncDec:
+    return EncDec(cfg)

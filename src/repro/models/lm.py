@@ -1,0 +1,503 @@
+"""Decoder-only LM assembly for all decoder families.
+
+One module covers: dense GQA (yi, smollm), MoE (qwen2-moe, phi3.5-moe), MLA
+(minicpm3), hybrid Mamba+attn+MoE (jamba), xLSTM, and the vision-cross-attn
+variant (llama-3.2-vision).  Layers are stacked and driven by ``lax.scan``
+(homogeneous stacks) or scan-over-periods with an unrolled in-period pattern
+(hybrid/vlm/xlstm), keeping HLO size O(1) in depth — essential for compiling
+100-layer x 512-device dry-runs on one CPU.
+
+Three entry points per model (built by ``build_lm``):
+  train_loss(params, batch)                  -> (loss, metrics)
+  prefill(params, tokens, extras)            -> (logits_last, caches)
+  decode_step(params, token, caches, index)  -> (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ParamMaker,
+    apply_norm,
+    cross_entropy,
+    init_norm,
+    make_stack,
+)
+from repro.models.mlp import apply_mlp, init_mlp
+from repro.sharding.partition import constrain
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_dropped_frac")
+
+
+def _zero_aux():
+    return jnp.zeros((len(AUX_KEYS),), jnp.float32)
+
+
+def _aux_vec(aux: Dict) -> jnp.ndarray:
+    return jnp.stack([aux[k].astype(jnp.float32) for k in AUX_KEYS])
+
+
+# ---------------------------------------------------------------------------
+# per-family layer init/apply
+# Each family defines:
+#   init_block(sub_mk, cfg)              one scan step's params
+#   apply_block(params, x, pos, cfg, cache, index) -> (x, new_cache, aux_vec)
+#   block_cache(cfg, batch, max_len, dtype, abstract) per scan step
+#   num_steps(cfg)  (scan length; layers per step for periodic families)
+
+
+def _init_dense_block(mk: ParamMaker, cfg: ModelConfig):
+    init_norm(mk, "norm_attn", cfg.d_model, cfg.norm)
+    with mk.scope("attn"):
+        if cfg.mla is not None:
+            attn.init_mla(mk, cfg)
+        else:
+            attn.init_gqa(mk, cfg)
+    init_norm(mk, "norm_ffn", cfg.d_model, cfg.norm)
+    if cfg.moe is not None:
+        with mk.scope("moe"):
+            moe_mod.init_moe(mk, cfg)
+    else:
+        with mk.scope("mlp"):
+            init_mlp(mk, cfg.d_model, cfg.d_ff, cfg.act)
+
+
+def _apply_dense_block(params, x, pos, cfg: ModelConfig, cache, index):
+    h = apply_norm(params["norm_attn"], x, cfg.norm, cfg.rms_eps)
+    if cfg.mla is not None:
+        y, cache = attn.apply_mla(params["attn"], h, pos, cfg, cache, index)
+    else:
+        y, cache = attn.apply_gqa(params["attn"], h, pos, cfg, cache, index)
+    x = x + y
+    h = apply_norm(params["norm_ffn"], x, cfg.norm, cfg.rms_eps)
+    if cfg.moe is not None:
+        y, aux = moe_mod.apply_moe(params["moe"], h, cfg)
+        aux_vec = _aux_vec(aux)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg.act)
+        aux_vec = _zero_aux()
+    return x + y, cache, aux_vec
+
+
+def _dense_cache(cfg, batch, max_len, dtype, abstract):
+    fn = attn.mla_cache_struct if cfg.mla is not None else attn.cache_struct
+    mk_fn = attn.mla_make_cache if cfg.mla is not None else attn.make_cache
+    return (fn if abstract else mk_fn)(cfg, batch, max_len, dtype)
+
+
+def _dense_cache_axes(cfg):
+    return (
+        attn.mla_cache_logical_axes() if cfg.mla is not None
+        else attn.cache_logical_axes(cfg)
+    )
+
+
+# hybrid (jamba): period of `attn_period` layers, attention at the middle
+# slot, the rest mamba; FFN alternates dense / MoE per in-period parity.
+
+
+def _hybrid_layout(cfg: ModelConfig):
+    period = cfg.attn_period
+    n_periods = cfg.num_layers // period
+    attn_slot = period // 2
+    moe_slots = tuple(i for i in range(period) if i % 2 == 1)
+    mlp_slots = tuple(i for i in range(period) if i % 2 == 0)
+    return period, n_periods, attn_slot, moe_slots, mlp_slots
+
+
+def _init_hybrid_block(mk: ParamMaker, cfg: ModelConfig):
+    period, _, attn_slot, moe_slots, mlp_slots = _hybrid_layout(cfg)
+    with mk.scope("attn"):
+        attn.init_gqa(mk, cfg)
+    make_stack(mk, "mamba", period - 1, lambda m: ssm_mod.init_mamba(m, cfg))
+    make_stack(mk, "moe", len(moe_slots), lambda m: moe_mod.init_moe(m, cfg))
+    make_stack(
+        mk, "mlp", len(mlp_slots),
+        lambda m: init_mlp(m, cfg.d_model, cfg.d_ff, cfg.act),
+    )
+    for i in range(period):
+        init_norm(mk, f"norm_mix_{i}", cfg.d_model, cfg.norm)
+        init_norm(mk, f"norm_ffn_{i}", cfg.d_model, cfg.norm)
+
+
+def _apply_hybrid_block(params, x, pos, cfg: ModelConfig, cache, index):
+    period, _, attn_slot, moe_slots, mlp_slots = _hybrid_layout(cfg)
+    take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+    aux_total = _zero_aux()
+    new_cache = {"attn": None, "mamba": []}
+    mamba_i = 0
+    for i in range(period):
+        h = apply_norm(params[f"norm_mix_{i}"], x, cfg.norm, cfg.rms_eps)
+        if i == attn_slot:
+            y, ac = attn.apply_gqa(
+                params["attn"], h, pos, cfg,
+                None if cache is None else cache["attn"], index,
+            )
+            new_cache["attn"] = ac
+        else:
+            st = None if cache is None else take(cache["mamba"], mamba_i)
+            y, st = ssm_mod.apply_mamba(take(params["mamba"], mamba_i), h, cfg, st)
+            new_cache["mamba"].append(st)
+            mamba_i += 1
+        x = x + y
+        h = apply_norm(params[f"norm_ffn_{i}"], x, cfg.norm, cfg.rms_eps)
+        if i in moe_slots:
+            y, aux = moe_mod.apply_moe(take(params["moe"], moe_slots.index(i)), h, cfg)
+            aux_total = aux_total + _aux_vec(aux)
+        else:
+            y = apply_mlp(take(params["mlp"], mlp_slots.index(i)), h, cfg.act)
+        x = x + y
+    if cache is None:
+        cache_out = None
+    else:
+        cache_out = {
+            "attn": new_cache["attn"],
+            "mamba": jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *new_cache["mamba"]
+            ),
+        }
+    return x, cache_out, aux_total
+
+
+def _hybrid_cache(cfg, batch, max_len, dtype, abstract):
+    period = cfg.attn_period
+    ac = (attn.cache_struct if abstract else attn.make_cache)(cfg, batch, max_len, dtype)
+    if abstract:
+        st0 = ssm_mod.mamba_state_struct(cfg, batch, dtype)
+        ms = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((period - 1,) + tuple(s.shape), s.dtype), st0
+        )
+    else:
+        st0 = ssm_mod.mamba_make_state(cfg, batch, dtype)
+        ms = jax.tree_util.tree_map(
+            lambda s: jnp.broadcast_to(s, (period - 1,) + s.shape).copy(), st0
+        )
+    return {"attn": ac, "mamba": ms}
+
+
+def _hybrid_cache_axes(cfg):
+    return {
+        "attn": attn.cache_logical_axes(cfg),
+        "mamba": jax.tree_util.tree_map(
+            lambda a: (None,) + a,
+            ssm_mod.mamba_state_logical_axes(),
+            is_leaf=lambda x: isinstance(x, tuple),
+        ),
+    }
+
+
+# xlstm: period of `slstm_every` blocks: slot 0 sLSTM, rest mLSTM.
+
+
+def _init_xlstm_block(mk: ParamMaker, cfg: ModelConfig):
+    period = cfg.ssm.slstm_every
+    init_norm(mk, "norm_s", cfg.d_model, cfg.norm)
+    with mk.scope("slstm"):
+        ssm_mod.init_slstm(mk, cfg)
+    make_stack(mk, "mlstm", period - 1, lambda m: ssm_mod.init_mlstm(m, cfg))
+    for i in range(period - 1):
+        init_norm(mk, f"norm_m_{i}", cfg.d_model, cfg.norm)
+
+
+def _apply_xlstm_block(params, x, pos, cfg: ModelConfig, cache, index):
+    period = cfg.ssm.slstm_every
+    take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+    h = apply_norm(params["norm_s"], x, cfg.norm, cfg.rms_eps)
+    st = None if cache is None else cache["slstm"]
+    y, st = ssm_mod.apply_slstm(params["slstm"], h, cfg, st)
+    x = x + y
+    new_m = []
+    for i in range(period - 1):
+        h = apply_norm(params[f"norm_m_{i}"], x, cfg.norm, cfg.rms_eps)
+        mst = None if cache is None else take(cache["mlstm"], i)
+        y, mst = ssm_mod.apply_mlstm(take(params["mlstm"], i), h, cfg, mst)
+        new_m.append(mst)
+        x = x + y
+    if cache is None:
+        cache_out = None
+    else:
+        cache_out = {
+            "slstm": st,
+            "mlstm": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_m),
+        }
+    return x, cache_out, _zero_aux()
+
+
+def _xlstm_cache(cfg, batch, max_len, dtype, abstract):
+    period = cfg.ssm.slstm_every
+    if abstract:
+        s = ssm_mod.slstm_state_struct(cfg, batch)
+        m0 = ssm_mod.mlstm_state_struct(cfg, batch, dtype)
+        m = jax.tree_util.tree_map(
+            lambda t: jax.ShapeDtypeStruct((period - 1,) + tuple(t.shape), t.dtype), m0
+        )
+    else:
+        s = ssm_mod.slstm_make_state(cfg, batch)
+        m0 = ssm_mod.mlstm_make_state(cfg, batch, dtype)
+        m = jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (period - 1,) + t.shape).copy(), m0
+        )
+    return {"slstm": s, "mlstm": m}
+
+
+def _xlstm_cache_axes(cfg):
+    return {
+        "slstm": ssm_mod.slstm_state_logical_axes(),
+        "mlstm": jax.tree_util.tree_map(
+            lambda a: (None,) + a,
+            ssm_mod.mlstm_state_logical_axes(),
+            is_leaf=lambda x: isinstance(x, tuple),
+        ),
+    }
+
+
+# vlm: period of `cross_attn_period` layers: last slot cross-attends to the
+# (stub-provided) image patch embeddings.
+
+
+def _init_vlm_block(mk: ParamMaker, cfg: ModelConfig):
+    period = cfg.cross_attn_period
+    make_stack(mk, "self", period - 1, lambda m: _init_dense_block(m, dataclasses.replace(cfg, moe=None)))
+    init_norm(mk, "norm_cross", cfg.d_model, cfg.norm)
+    with mk.scope("cross"):
+        attn.init_cross(mk, cfg)
+    init_norm(mk, "norm_cross_ffn", cfg.d_model, cfg.norm)
+    with mk.scope("cross_mlp"):
+        init_mlp(mk, cfg.d_model, cfg.d_ff, cfg.act)
+    mk("cross_gate", (1,), (None,), init="zeros")
+
+
+def _apply_vlm_block(params, x, pos, cfg: ModelConfig, cache, index, memory=None):
+    period = cfg.cross_attn_period
+    take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+    new_self = []
+    for i in range(period - 1):
+        c = None if cache is None else take(cache["self"], i)
+        x, c, _ = _apply_dense_block(take(params["self"], i), x, pos, cfg, c, index)
+        new_self.append(c)
+    h = apply_norm(params["norm_cross"], x, cfg.norm, cfg.rms_eps)
+    mem_kv = None if cache is None else cache.get("cross_kv")
+    y, mem_kv = attn.apply_cross(params["cross"], h, memory, cfg, mem_kv)
+    gate = jnp.tanh(params["cross_gate"].astype(x.dtype))
+    x = x + gate * y
+    h = apply_norm(params["norm_cross_ffn"], x, cfg.norm, cfg.rms_eps)
+    x = x + apply_mlp(params["cross_mlp"], h, cfg.act)
+    if cache is None:
+        cache_out = None
+    else:
+        cache_out = {
+            "self": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_self),
+            "cross_kv": mem_kv,
+        }
+    return x, cache_out, _zero_aux()
+
+
+def _vlm_cache(cfg, batch, max_len, dtype, abstract):
+    period = cfg.cross_attn_period
+    c0 = (attn.cache_struct if abstract else attn.make_cache)(cfg, batch, max_len, dtype)
+    if abstract:
+        selfc = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((period - 1,) + tuple(s.shape), s.dtype), c0
+        )
+        K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        kv = {
+            "k": jax.ShapeDtypeStruct((batch, cfg.num_image_tokens, K, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, cfg.num_image_tokens, K, hd), dtype),
+        }
+    else:
+        selfc = jax.tree_util.tree_map(
+            lambda s: jnp.broadcast_to(s, (period - 1,) + s.shape).copy(), c0
+        )
+        K, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        kv = {
+            "k": jnp.zeros((batch, cfg.num_image_tokens, K, hd), dtype),
+            "v": jnp.zeros((batch, cfg.num_image_tokens, K, hd), dtype),
+        }
+    return {"self": selfc, "cross_kv": kv}
+
+
+def _vlm_cache_axes(cfg):
+    ca = attn.cache_logical_axes(cfg)
+    return {
+        "self": jax.tree_util.tree_map(
+            lambda a: (None,) + a, ca, is_leaf=lambda x: isinstance(x, tuple)
+        ),
+        "cross_kv": {
+            "k": ("batch", "image", "kv_heads", "head_dim"),
+            "v": ("batch", "image", "kv_heads", "head_dim"),
+        },
+    }
+
+
+_FAMILIES = {
+    "dense": (_init_dense_block, _apply_dense_block, _dense_cache, _dense_cache_axes),
+    "moe": (_init_dense_block, _apply_dense_block, _dense_cache, _dense_cache_axes),
+    "hybrid": (_init_hybrid_block, _apply_hybrid_block, _hybrid_cache, _hybrid_cache_axes),
+    "ssm": (_init_xlstm_block, _apply_xlstm_block, _xlstm_cache, _xlstm_cache_axes),
+    "vlm": (_init_vlm_block, _apply_vlm_block, _vlm_cache, _vlm_cache_axes),
+}
+
+
+def num_scan_steps(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_period
+    if cfg.family == "ssm":
+        return cfg.num_layers // cfg.ssm.slstm_every
+    if cfg.family == "vlm":
+        return cfg.num_layers // cfg.cross_attn_period
+    return cfg.num_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+
+    # -- params -------------------------------------------------------------
+    def init(self, rng: jax.Array, abstract: bool = False):
+        cfg = self.cfg
+        mk = ParamMaker(rng, cfg.param_dtype, abstract=abstract)
+        mk("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"))
+        init_block = _FAMILIES[cfg.family][0]
+        make_stack(mk, "blocks", num_scan_steps(cfg), lambda m: init_block(m, cfg))
+        init_norm(mk, "final_norm", cfg.d_model, cfg.norm)
+        if not cfg.tie_embeddings:
+            mk("head", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+        return mk.collect()
+
+    # -- shared backbone ----------------------------------------------------
+    def _backbone(self, params, x, pos, caches, index, memory, remat: bool):
+        cfg = self.cfg
+        apply_block = _FAMILIES[cfg.family][1]
+
+        if cfg.family == "vlm":
+            block_fn = functools.partial(apply_block, memory=memory)
+        else:
+            block_fn = apply_block
+
+        def body(carry, xs):
+            x, aux = carry
+            p, c = xs
+            x, c, a = block_fn(p, x, pos, cfg, c, index)
+            return (x, aux + a), c
+
+        if remat:
+            body = jax.checkpoint(body)
+
+        if cfg.unroll_layers:
+            take = lambda tree, i: jax.tree_util.tree_map(lambda v: v[i], tree)
+            carry = (x, _zero_aux())
+            outs = []
+            for i in range(num_scan_steps(cfg)):
+                c_i = None if caches is None else take(caches, i)
+                carry, c_i = body(carry, (take(params["blocks"], i), c_i))
+                outs.append(c_i)
+            x, aux = carry
+            new_caches = (
+                None if caches is None
+                else jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+            )
+            return x, aux, new_caches
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, _zero_aux()), (params["blocks"], caches)
+        )
+        return x, aux, new_caches
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.dtype(cfg.compute_dtype))[tokens]
+        return constrain(x, "batch", "seq", "embed_act")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.rms_eps)
+        w = (params["embed"].T if cfg.tie_embeddings else params["head"]).astype(x.dtype)
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+        return constrain(logits, "batch", "seq", "vocab")
+
+    # -- entry points ---------------------------------------------------------
+    def forward(self, params, tokens, memory=None, remat: bool = False):
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = self._embed(params, tokens)
+        caches = _none_caches(self.cfg)
+        x, aux, _ = self._backbone(params, x, pos, caches, None, memory, remat)
+        return self._logits(params, x), aux
+
+    def train_loss(self, params, batch, z_loss: float = 0.0, remat: bool = True,
+                   aux_weights: Tuple[float, float] = (0.01, 1e-3)):
+        tokens = batch["tokens"]
+        memory = batch.get("memory")
+        if "labels" in batch:
+            inputs, labels = tokens, batch["labels"]
+        else:
+            inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        logits, aux = self.forward(params, inputs, memory, remat)
+        loss, ce = cross_entropy(logits, labels, z_loss)
+        lb, zr, dropped = aux[0], aux[1], aux[2]
+        total = loss + aux_weights[0] * lb + aux_weights[1] * zr
+        metrics = {
+            "ce": ce, "loss": total, "moe_lb": lb, "moe_dropped": dropped,
+        }
+        return total, metrics
+
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        cfg = self.cfg
+        cache_fn = _FAMILIES[cfg.family][2]
+        dtype = jnp.dtype(cfg.compute_dtype)
+        steps = num_scan_steps(cfg)
+        one = cache_fn(cfg, batch, max_len, dtype, abstract)
+        if abstract:
+            return jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((steps,) + tuple(s.shape), s.dtype), one
+            )
+        return jax.tree_util.tree_map(
+            lambda s: jnp.broadcast_to(s, (steps,) + s.shape).copy(), one
+        )
+
+    def cache_logical_axes(self):
+        axes = _FAMILIES[self.cfg.family][3](self.cfg)
+        return jax.tree_util.tree_map(
+            lambda a: ("layers",) + a, axes, is_leaf=lambda x: isinstance(x, tuple)
+        )
+
+    def prefill(self, params, tokens, caches, memory=None):
+        """Fill caches from position 0; returns (last-token logits, caches)."""
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = self._embed(params, tokens)
+        x, aux, caches = self._backbone(params, x, pos, caches, 0, memory, False)
+        return self._logits(params, x[:, -1:, :]), caches
+
+    def decode_step(self, params, token, caches, index, memory=None):
+        """token (B, 1) at position `index` (scalar, or (B,) per-slot vector
+        for continuous batching); returns (logits (B,1,V), caches)."""
+        B = token.shape[0]
+        index = jnp.asarray(index)
+        if index.ndim == 1:
+            pos = index[:, None].astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+        x = self._embed(params, token)
+        x, aux, caches = self._backbone(params, x, pos, caches, index, memory, False)
+        return self._logits(params, x), caches
+
+
+def _none_caches(cfg: ModelConfig):
+    """A scan-compatible pytree of Nones (no cache) per step: just None —
+    lax.scan accepts None leaves inside xs via a tuple of Nones trick."""
+    return None
+
+
+def build_lm(cfg: ModelConfig) -> LM:
+    assert cfg.family in _FAMILIES, cfg.family
+    return LM(cfg)

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamMaker, swiglu
+from repro.sharding.partition import constrain
+
+
+def init_mlp(mk: ParamMaker, d_model: int, d_ff: int, act: str = "swiglu"):
+    if act == "swiglu":
+        mk("w_gate", (d_model, d_ff), ("embed", "mlp"))
+        mk("w_up", (d_model, d_ff), ("embed", "mlp"))
+    else:
+        mk("w_in", (d_model, d_ff), ("embed", "mlp"))
+        mk("b_in", (d_ff,), ("mlp",), init="zeros")
+        mk("b_out", (d_model,), ("embed_act",), init="zeros")
+    mk("w_down", (d_ff, d_model), ("mlp", "embed"))
+
+
+def apply_mlp(params: Dict, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    dt = x.dtype
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+        h = swiglu(g, u)
+    else:
+        h = jax.nn.gelu(
+            jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dt))
+            + params["b_in"].astype(dt)
+        )
+    h = constrain(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+    if act != "swiglu":
+        out = out + params["b_out"].astype(dt)
+    return constrain(out, "batch", "seq", "embed_act")

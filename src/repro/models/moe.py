@@ -1,0 +1,211 @@
+"""Mixture-of-Experts with sort-based (megablox-style) dispatch.
+
+Instead of GShard's one-hot dispatch einsums — which inflate HLO FLOPs by
+O(seq) and would poison the roofline's MODEL_FLOPS/HLO_FLOPS ratio — tokens
+are argsorted by expert id, packed into per-expert capacity buffers with a
+scatter (memory-bound, ~0 FLOPs), processed with one batched einsum per
+weight, and combined with a scatter-add.  Capacity overflow drops tokens
+(standard), counted in aux stats.
+
+Expert weights are sharded over the "expert" logical axis (EP on the mesh's
+"model" axis); the scatter from token space (batch-sharded) into expert
+space lowers to the expected all-to-all.
+
+Beyond-paper hook: ``ot_balance`` routes via the screened group-sparse OT
+solver (tokens -> experts, classes = top-1 expert choice), using the paper's
+algorithm inside the model itself; see training/ot_routing.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamMaker, swiglu
+from repro.sharding.partition import constrain
+
+
+def init_moe(mk: ParamMaker, cfg: ModelConfig):
+    d = cfg.d_model
+    m = cfg.moe
+    E, ff = m.num_experts, m.expert_d_ff or cfg.d_ff
+    mk("router", (d, E), ("embed", "expert"))
+    mk("w_gate", (E, d, ff), ("expert", "embed", "expert_mlp"))
+    mk("w_up", (E, d, ff), ("expert", "embed", "expert_mlp"))
+    mk("w_down", (E, ff, d), ("expert", "expert_mlp", "embed"))
+    if m.num_shared_experts:
+        sff = m.shared_d_ff or m.num_shared_experts * ff
+        mk("shared_gate", (d, sff), ("embed", "mlp"))
+        mk("shared_up", (d, sff), ("embed", "mlp"))
+        mk("shared_down", (sff, d), ("mlp", "embed"))
+        mk("shared_gate_proj", (d, 1), ("embed", None))
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(tokens * m.top_k / m.num_experts * m.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # align to 8 for TPU-friendly shapes
+
+
+def apply_moe(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Returns (output (B,S,D), aux dict with losses/stats)."""
+    dt = x.dtype
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = m.num_experts, m.top_k
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if m.ot_balance:
+        # beyond-paper: balanced, sequence-local assignment via the screened
+        # group-sparse OT solver (training/ot_routing.py)
+        from repro.training.ot_routing import ot_route
+
+        topi, topw = ot_route(
+            logits, num_seqs=B, seq_len=S, top_k=k,
+            gamma=m.ot_gamma, rho=m.ot_rho,
+        )
+        topw = topw.astype(jnp.float32)
+    else:
+        topw, topi = jax.lax.top_k(probs, k)                 # (T, k)
+        topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    eid = topi.reshape(-1)                                   # (T*k,)
+    wgt = topw.reshape(-1).astype(dt)
+
+    from repro.sharding.partition import data_shard_count
+
+    D = data_shard_count()
+    if m.local_dispatch and D > 1 and T % D == 0:
+        out, counts, keep_frac = _dispatch_local(
+            params, xt, eid.reshape(T, k), wgt.reshape(T, k), cfg, D
+        )
+        dropped = 1.0 - keep_frac
+    else:
+        out, counts, dropped = _dispatch_global(params, xt, eid, wgt, cfg)
+
+    if m.num_shared_experts:
+        sg = jnp.einsum("td,df->tf", xt, params["shared_gate"].astype(dt))
+        su = jnp.einsum("td,df->tf", xt, params["shared_up"].astype(dt))
+        sy = jnp.einsum("tf,fd->td", swiglu(sg, su), params["shared_down"].astype(dt))
+        gate = jax.nn.sigmoid(
+            jnp.einsum("td,do->to", xt, params["shared_gate_proj"].astype(dt))
+        )
+        out = out + gate * sy
+
+    # aux: switch-style load-balance + router z-loss
+    frac = counts.astype(jnp.float32) / jnp.maximum(jnp.sum(counts), 1)
+    pmean = jnp.mean(probs, axis=0)
+    lb_loss = E * jnp.sum(frac * pmean)
+    z_loss = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    aux = {
+        "moe_lb_loss": lb_loss,
+        "moe_z_loss": z_loss,
+        "moe_dropped_frac": jnp.asarray(dropped, jnp.float32),
+    }
+    return out.reshape(B, S, d), aux
+
+
+def _expert_ffn(params, h, dt):
+    """Batched per-expert SwiGLU on capacity buffers h (E, C, d)."""
+    g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", swiglu(g, u), params["w_down"].astype(dt))
+
+
+def _dispatch_global(params, xt, eid, wgt, cfg: ModelConfig):
+    """Global sort-based dispatch (baseline).
+
+    Under GSPMD the global scatter into the expert/capacity buffer combines
+    partial buffers with a full-size all-reduce across the data shards —
+    correct but collective-heavy (see EXPERIMENTS.md §Perf iteration log);
+    ``local_dispatch`` removes it."""
+    dt = xt.dtype
+    m = cfg.moe
+    T, d = xt.shape
+    E, k = m.num_experts, m.top_k
+    tok = jnp.repeat(jnp.arange(T), k)
+
+    order = jnp.argsort(eid)                                 # stable
+    eid_s, tok_s, wgt_s = eid[order], tok[order], wgt[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[eid_s].add(1)
+    start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - start[eid_s]
+    cap = capacity(cfg, T)
+    keep = pos < cap
+    dest = jnp.where(keep, eid_s * cap + pos, E * cap)       # overflow slot
+
+    buf = jnp.zeros((E * cap + 1, d), dt).at[dest].set(xt[tok_s])
+    h = constrain(
+        buf[: E * cap].reshape(E, cap, d), "expert", "expert_cap", "embed_act"
+    )
+    y = _expert_ffn(params, h, dt)
+    y = constrain(y, "expert", "expert_cap", "embed_act")
+
+    y_flat = jnp.concatenate([y.reshape(E * cap, d), jnp.zeros((1, d), dt)])
+    y_tok = y_flat[dest] * wgt_s[:, None]                    # overflow -> 0
+    out = jnp.zeros((T, d), dt).at[tok_s].add(y_tok)
+    dropped = jnp.sum(~keep) / (T * k)
+    return out, counts, dropped
+
+
+def _dispatch_local(params, xt, topi, topw, cfg: ModelConfig, D: int):
+    """Shard-local dispatch: tokens are packed into PER-DATA-SHARD capacity
+    slots, so the scatter/gather never crosses the data axes; tokens only
+    meet expert weights across the "model" axis inside the expert einsum.
+
+    Structure: reshape tokens (T, d) -> (D, T/D, d) with dim0 pinned to the
+    data axes; vmap the sort/pack/combine over dim0 (slice-local ops);
+    capacity buffers carry an explicit shard dim merged into the einsum's
+    capacity axis.  Eliminates the (E*cap, d) all-reduce of the global
+    scatter (§Perf iteration: jamba/qwen/phi train cells)."""
+    dt = xt.dtype
+    m = cfg.moe
+    T, d = xt.shape
+    E, k = m.num_experts, m.top_k
+    Tl = T // D
+    cap_l = capacity(cfg, Tl)
+
+    xs = constrain(xt.reshape(D, Tl, d), "batch", None, "embed_act")
+    eid = topi.reshape(D, Tl * k)
+    wgt = topw.reshape(D, Tl * k).astype(dt)
+
+    def pack(x_l, eid_l, wgt_l):
+        tok = jnp.repeat(jnp.arange(Tl), k)
+        order = jnp.argsort(eid_l)
+        eid_s, tok_s, wgt_s = eid_l[order], tok[order], wgt_l[order]
+        counts = jnp.zeros((E,), jnp.int32).at[eid_s].add(1)
+        start = jnp.cumsum(counts) - counts
+        pos = jnp.arange(Tl * k) - start[eid_s]
+        keep = pos < cap_l
+        dest = jnp.where(keep, eid_s * cap_l + pos, E * cap_l)
+        buf = jnp.zeros((E * cap_l + 1, d), dt).at[dest].set(x_l[tok_s])
+        return buf[: E * cap_l].reshape(E, cap_l, d), (dest, tok_s, wgt_s, counts, keep)
+
+    h, (dest, tok_s, wgt_s, counts, keep) = jax.vmap(pack)(xs, eid, wgt)
+    # (D, E, cap_l, d) -> (E, D*cap_l, d): capacity axis carries the shard dim
+    h = constrain(h, "batch", None, None, "embed_act")
+    h = h.transpose(1, 0, 2, 3).reshape(E, D * cap_l, d)
+    h = constrain(h, "expert", "expert_cap", "embed_act")
+
+    y = _expert_ffn(params, h, dt)
+    y = constrain(y, "expert", "expert_cap", "embed_act")
+
+    y = y.reshape(E, D, cap_l, d).transpose(1, 0, 2, 3)      # (D, E, cap_l, d)
+    y = constrain(y, "batch", None, None, "embed_act")
+
+    def combine(y_l, dest_l, tok_l, wgt_l):
+        y_flat = jnp.concatenate([y_l.reshape(E * cap_l, d), jnp.zeros((1, d), dt)])
+        y_tok = y_flat[dest_l] * wgt_l[:, None]
+        return jnp.zeros((Tl, d), dt).at[tok_l].add(y_tok)
+
+    out = jax.vmap(combine)(y, dest, tok_s, wgt_s)           # (D, Tl, d)
+    out = constrain(out, "batch", None, "embed_act").reshape(T, d)
+    keep_frac = jnp.mean(keep.astype(jnp.float32))
+    return out, jnp.sum(counts, axis=0), keep_frac

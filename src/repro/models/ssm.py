@@ -1,0 +1,467 @@
+"""State-space / recurrent blocks: Mamba (jamba) and xLSTM (mLSTM + sLSTM).
+
+Mamba: faithful Mamba-1 selective scan (per-(channel,state) decay), computed
+as a chunked ``lax.scan`` with ``jax.checkpoint`` at chunk boundaries so the
+backward pass stores only chunk-boundary states (seq/chunk x B x d_inner x
+d_state) instead of every step.  DESIGN.md discusses the TPU trade-off vs
+the Mamba-2/SSD matmul form (used as a §Perf beyond-paper experiment).
+
+xLSTM: mLSTM as chunkwise gated linear attention with matrix memory and the
+paper's q.n normalizer; sLSTM as a faithful exp-gated scalar-memory scan
+with per-head recurrent weights and the m-stabilizer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamMaker, rmsnorm
+from repro.sharding.partition import constrain
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,C), w (C,K) -> (B,S,C)."""
+    K = w.shape[1]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i : i + S, :] * w[:, i].astype(x.dtype) for i in range(K))
+    return y + b.astype(x.dtype)
+
+
+def _conv_step(x_t: jnp.ndarray, conv_state: jnp.ndarray, w, b):
+    """Single-token conv: x_t (B,C), conv_state (B,K-1,C)."""
+    K = w.shape[1]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (jamba's SSM layer)
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank, s.d_state
+
+
+def init_mamba(mk: ParamMaker, cfg: ModelConfig):
+    d = cfg.d_model
+    di, dtr, st = mamba_dims(cfg)
+    s = cfg.ssm
+    mk("in_proj", (d, 2 * di), ("embed", "mlp"))
+    mk("conv_w", (di, s.d_conv), ("mlp", "conv"))
+    mk("conv_b", (di,), ("mlp",), init="zeros")
+    mk("x_proj", (di, dtr + 2 * st), ("mlp", None))
+    mk("dt_w", (dtr, di), (None, "mlp"))
+    mk("dt_b", (di,), ("mlp",), init="zeros")
+    mk("A_log", (di, st), ("mlp", "state"), init="slog")
+    mk("D", (di,), ("mlp",), init="ones")
+    mk("out_proj", (di, d), ("mlp", "embed"))
+
+
+def _selective_scan(u, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Mamba-1 recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t,
+    y_t = C_t . h_t.   u/dt (B,S,di); A (di,st); Bm/Cm (B,S,st).
+
+    Chunked scan + checkpoint: O(S/chunk) boundary states saved for bwd.
+    Returns (ys (B,S,di), h_final (B,di,st)).
+    """
+    Bsz, S, di = u.shape
+    st = A.shape[1]
+    nchunks = max(S // chunk, 1)
+    chunk = S // nchunks
+    assert S % chunk == 0, (S, chunk)
+
+    resh = lambda x: x.reshape(Bsz, nchunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+    u_c, dt_c, B_c, C_c = resh(u), resh(dt), resh(Bm), resh(Cm)
+
+    def chunk_fn(h0, xs):
+        uc, dtc, bc, cc = xs          # (B, chunk, ...)
+
+        def step(h, inp):
+            u_t, dt_t, b_t, c_t = inp               # (B,di),(B,di),(B,st),(B,st)
+            dA = jnp.exp(dt_t[:, :, None] * A)      # (B,di,st)
+            dBu = (dt_t * u_t)[:, :, None] * b_t[:, None, :]
+            h = dA * h + dBu
+            y = jnp.einsum("bds,bs->bd", h, c_t)
+            return h, y
+
+        tstep = lambda x: x.swapaxes(0, 1)          # (chunk, B, ...)
+        h, ys = jax.lax.scan(step, h0, (tstep(uc), tstep(dtc), tstep(bc), tstep(cc)))
+        return h, ys.swapaxes(0, 1)                 # (B, chunk, di)
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, st), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_fn, h0, (u_c, dt_c, B_c, C_c))
+    return ys.swapaxes(0, 1).reshape(Bsz, S, di), h_final
+
+
+def apply_mamba(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """state: {"conv": (B,K-1,di), "ssm": (B,di,st)} or None (train).
+
+    S > 1 with state  => prefill: full scan from the given state, state out.
+    S == 1 with state => decode : single fused step.
+    """
+    dt_ = x.dtype
+    di, dtr, st = mamba_dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", "seq", "mlp")
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if state is None or S > 1:
+        xc = jax.nn.silu(_causal_conv(xin, params["conv_w"], params["conv_b"]))
+        proj = jnp.einsum("bsd,dp->bsp", xc, params["x_proj"].astype(dt_))
+        dt_raw = jnp.einsum("bsr,rd->bsd", proj[..., :dtr], params["dt_w"].astype(dt_))
+        delta = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_b"].astype(jnp.float32))
+        Bm = proj[..., dtr : dtr + st].astype(jnp.float32)
+        Cm = proj[..., dtr + st :].astype(jnp.float32)
+        h0 = None if state is None else state["ssm"]
+        y, h_final = _selective_scan(
+            xc.astype(jnp.float32), delta, A, Bm, Cm, cfg.ssm.chunk, h0
+        )
+        y = y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+        y = (y.astype(dt_)) * jax.nn.silu(z)
+        if state is None:
+            new_state = None
+        else:
+            K = cfg.ssm.d_conv
+            conv_state = xin[:, S - (K - 1):, :]
+            new_state = {"conv": conv_state, "ssm": h_final}
+    else:
+        x_t = xin[:, 0, :]
+        xc_t, conv_state = _conv_step(x_t, state["conv"], params["conv_w"], params["conv_b"])
+        xc_t = jax.nn.silu(xc_t)
+        proj = jnp.einsum("bd,dp->bp", xc_t, params["x_proj"].astype(dt_))
+        dt_raw = jnp.einsum("br,rd->bd", proj[..., :dtr], params["dt_w"].astype(dt_))
+        delta = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_b"].astype(jnp.float32))
+        Bm = proj[..., dtr : dtr + st].astype(jnp.float32)
+        Cm = proj[..., dtr + st :].astype(jnp.float32)
+        dA = jnp.exp(delta[:, :, None] * A)
+        dBu = (delta * xc_t.astype(jnp.float32))[:, :, None] * Bm[:, None, :]
+        h = dA * state["ssm"] + dBu
+        y = jnp.einsum("bds,bs->bd", h, Cm)
+        y = y + params["D"].astype(jnp.float32) * xc_t.astype(jnp.float32)
+        y = (y.astype(dt_) * jax.nn.silu(z[:, 0, :]))[:, None, :]
+        new_state = {"conv": conv_state, "ssm": h}
+
+    out = jnp.einsum("bse,ed->bsd", y if y.ndim == 3 else y, params["out_proj"].astype(dt_))
+    return constrain(out, "batch", "seq", "embed_act"), new_state
+
+
+def mamba_state_struct(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, _, st = mamba_dims(cfg)
+    sds = jax.ShapeDtypeStruct
+    return {
+        "conv": sds((batch, cfg.ssm.d_conv - 1, di), dtype),
+        "ssm": sds((batch, di, st), jnp.float32),
+    }
+
+
+def mamba_make_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, _, st = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, st), jnp.float32),
+    }
+
+
+def mamba_state_logical_axes() -> Dict:
+    return {"conv": ("batch", None, "mlp"), "ssm": ("batch", "mlp", "state")}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunkwise) and sLSTM (scalar memory, scan)
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    di = int(cfg.ssm.proj_factor * cfg.d_model)
+    di = -(-di // cfg.num_heads) * cfg.num_heads
+    return di, di // cfg.num_heads
+
+
+def init_mlstm(mk: ParamMaker, cfg: ModelConfig):
+    d = cfg.d_model
+    di, dh = mlstm_dims(cfg)
+    H = cfg.num_heads
+    mk("up_proj", (d, 2 * di), ("embed", "mlp"))
+    mk("conv_w", (di, 4), ("mlp", "conv"))
+    mk("conv_b", (di,), ("mlp",), init="zeros")
+    # block-diagonal per-head projections (xLSTM design): (H, dh, dh)
+    mk("wq", (H, dh, dh), ("heads", None, None))
+    mk("wk", (H, dh, dh), ("heads", None, None))
+    mk("wv", (H, dh, dh), ("heads", None, None))
+    mk("w_i", (di, H), ("mlp", "heads"))
+    mk("b_i", (H,), ("heads",), init="zeros")
+    mk("w_f", (di, H), ("mlp", "heads"))
+    mk("b_f", (H,), ("heads",), init="ones")
+    mk("out_norm", (di,), ("mlp",), init="ones")
+    mk("down_proj", (di, d), ("mlp", "embed"))
+
+
+def _mlstm_chunkwise(q, k, v, log_f, i_gate, chunk: int, carry0=None):
+    """Chunkwise gated linear attention with matrix memory + normalizer.
+
+    q,k,v (B,S,H,dh); log_f,i_gate (B,S,H).  Recurrence per head:
+      C_t = f_t C_{t-1} + i_t k_t v_t^T ,  n_t = f_t n_{t-1} + i_t k_t
+      h_t = (q_t C_t) / max(|q_t . n_t|, 1)
+    """
+    B, S, H, dh = q.shape
+    nchunks = max(S // chunk, 1)
+    c = S // nchunks
+    resh = lambda x: x.reshape(B, nchunks, c, *x.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc, fc, ic = map(resh, (q, k, v, log_f, i_gate))
+
+    def chunk_fn(carry, xs):
+        Cm, n = carry                         # (B,H,dh,dh), (B,H,dh)
+        qq, kk, vv, lf, ii = xs               # (B,c,H,*)
+        L = jnp.cumsum(lf, axis=1)            # (B,c,H) cumulative log decay
+        dec_q = jnp.exp(L)                    # decay from chunk start to t
+        # intra-chunk: A[t,s] = exp(L_t - L_s) i_s (q_t.k_s) for s<=t
+        scores = jnp.einsum("bthd,bshd->bhts", qq, kk)
+        decay = L[:, :, None, :] - L[:, None, :, :]           # (B,t,s,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        gates = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        A = scores * gates.transpose(0, 3, 1, 2) * ii.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhts,bshd->bthd", A, vv)
+        # normalizer intra: sum_s gates[t,s] i_s k_s (no q)
+        An = gates.transpose(0, 3, 1, 2) * ii.transpose(0, 2, 1)[:, :, None, :]
+        n_run = jnp.einsum("bhts,bshd->bthd", An, kk)
+        # inter-chunk
+        y_inter = jnp.einsum("bthd,bhde->bthe", qq * dec_q[..., None], Cm)
+        n_tot = n_run + dec_q[..., None] * n[:, None, :, :]
+        y = y_intra + y_inter
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", qq, n_tot)), 1.0
+        )
+        h = y / denom[..., None]
+        # state update to end of chunk
+        Lc = L[:, -1:, :]                     # (B,1,H) total decay
+        w = jnp.exp(Lc - L) * ii              # (B,c,H)
+        Cm = jnp.exp(Lc)[:, 0, :, None, None] * Cm + jnp.einsum(
+            "bshd,bshe->bhde", kk * w[..., None], vv
+        )
+        n = jnp.exp(Lc)[:, 0, :, None] * n + jnp.einsum("bshd,bsh->bhd", kk, w)
+        return (Cm, n), h
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    if carry0 is None:
+        carry0 = (
+            jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+        )
+    carry, hs = jax.lax.scan(chunk_fn, carry0, (qc, kc, vc, fc, ic))
+    return hs.swapaxes(0, 1).reshape(B, S, H, dh), carry
+
+
+def apply_mlstm(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    dt_ = x.dtype
+    di, dh = mlstm_dims(cfg)
+    H = cfg.num_heads
+    B, S, _ = x.shape
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(dt_))
+    xu, z = jnp.split(up, 2, axis=-1)
+    xu = constrain(xu, "batch", "seq", "mlp")
+
+    if state is None or S > 1:
+        xc = jax.nn.silu(_causal_conv(xu, params["conv_w"], params["conv_b"]))
+        xch = xc.reshape(B, S, H, dh)
+        xuh = xu.reshape(B, S, H, dh)
+        q = jnp.einsum("bshd,hde->bshe", xch, params["wq"].astype(dt_))
+        k = jnp.einsum("bshd,hde->bshe", xch, params["wk"].astype(dt_)) / math.sqrt(dh)
+        v = jnp.einsum("bshd,hde->bshe", xuh, params["wv"].astype(dt_))
+        rs = lambda t: t.astype(jnp.float32)
+        log_f = jax.nn.log_sigmoid(
+            jnp.einsum("bsd,dh->bsh", xc, params["w_f"].astype(dt_)).astype(jnp.float32)
+            + params["b_f"].astype(jnp.float32)
+        )
+        i_gate = jax.nn.sigmoid(
+            jnp.einsum("bsd,dh->bsh", xc, params["w_i"].astype(dt_)).astype(jnp.float32)
+            + params["b_i"].astype(jnp.float32)
+        )
+        carry0 = None if state is None else (state["C"], state["n"])
+        h, (Cf, nf) = _mlstm_chunkwise(
+            rs(q), rs(k), rs(v), log_f, i_gate, cfg.ssm.mlstm_chunk, carry0
+        )
+        h = h.reshape(B, S, di).astype(dt_)
+        if state is None:
+            new_state = None
+        else:
+            new_state = {"conv": xu[:, S - 3:, :], "C": Cf, "n": nf}
+    else:
+        x_t = xu[:, 0, :]
+        xc_t, conv_state = _conv_step(x_t, state["conv"], params["conv_w"], params["conv_b"])
+        xc_t = jax.nn.silu(xc_t)
+        xch = xc_t.reshape(B, H, dh)
+        xuh = x_t.reshape(B, H, dh)
+        q = jnp.einsum("bhd,hde->bhe", xch, params["wq"].astype(dt_)).astype(jnp.float32)
+        k = (
+            jnp.einsum("bhd,hde->bhe", xch, params["wk"].astype(dt_)).astype(jnp.float32)
+            / math.sqrt(dh)
+        )
+        v = jnp.einsum("bhd,hde->bhe", xuh, params["wv"].astype(dt_)).astype(jnp.float32)
+        f = jax.nn.sigmoid(
+            (xc_t @ params["w_f"].astype(dt_)).astype(jnp.float32) + params["b_f"].astype(jnp.float32)
+        )
+        ig = jax.nn.sigmoid(
+            (xc_t @ params["w_i"].astype(dt_)).astype(jnp.float32) + params["b_i"].astype(jnp.float32)
+        )
+        Cm = f[:, :, None, None] * state["C"] + ig[:, :, None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k, v
+        )
+        n = f[:, :, None] * state["n"] + ig[:, :, None] * k
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), 1.0)
+        h = (jnp.einsum("bhd,bhde->bhe", q, Cm) / denom[..., None]).reshape(B, 1, di).astype(dt_)
+        new_state = {"conv": conv_state, "C": Cm, "n": n}
+
+    h = rmsnorm(h, params["out_norm"], cfg.rms_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["down_proj"].astype(dt_))
+    return constrain(out, "batch", "seq", "embed_act"), new_state
+
+
+def mlstm_state_struct(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, dh = mlstm_dims(cfg)
+    H = cfg.num_heads
+    sds = jax.ShapeDtypeStruct
+    return {
+        "conv": sds((batch, 3, di), dtype),
+        "C": sds((batch, H, dh, dh), jnp.float32),
+        "n": sds((batch, H, dh), jnp.float32),
+    }
+
+
+def mlstm_make_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, dh = mlstm_dims(cfg)
+    H = cfg.num_heads
+    return {
+        "conv": jnp.zeros((batch, 3, di), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+    }
+
+
+def mlstm_state_logical_axes() -> Dict:
+    return {
+        "conv": ("batch", None, "mlp"),
+        "C": ("batch", "heads", None, None),
+        "n": ("batch", "heads", None),
+    }
+
+
+def init_slstm(mk: ParamMaker, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    for gate in ("i", "f", "z", "o"):
+        mk(f"w_{gate}", (d, d), ("embed", "mlp"))
+        mk(f"r_{gate}", (H, dh, dh), ("heads", None, None), scale=0.01)
+        mk(f"b_{gate}", (d,), ("mlp",), init="ones" if gate == "f" else "zeros")
+    mk("out_norm", (d,), ("embed_act",), init="ones")
+    # gated FFN (xLSTM uses ~4/3 factor after sLSTM blocks)
+    f = -(-4 * d // 3 // 8) * 8
+    mk("ffn_gate", (d, f), ("embed", "mlp"))
+    mk("ffn_up", (d, f), ("embed", "mlp"))
+    mk("ffn_down", (f, d), ("mlp", "embed"))
+
+
+def apply_slstm(
+    params: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Faithful sLSTM: exp gating + m-stabilizer, per-head recurrence."""
+    dt_ = x.dtype
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    B, S, _ = x.shape
+
+    pre = {
+        g: jnp.einsum("bsd,de->bse", x, params[f"w_{g}"].astype(dt_)).astype(jnp.float32)
+        + params[f"b_{g}"].astype(jnp.float32)
+        for g in ("i", "f", "z", "o")
+    }
+    R = {g: params[f"r_{g}"].astype(jnp.float32) for g in ("i", "f", "z", "o")}
+
+    def step(carry, xs):
+        h, c, n, m = carry                      # (B,H,dh) each; m stabilizer
+        pi, pf, pz, po = xs                     # (B,d) fp32
+        rec = lambda g: jnp.einsum("bhd,hde->bhe", h, R[g])
+        it = pi.reshape(B, H, dh) + rec("i")
+        ft = pf.reshape(B, H, dh) + rec("f")
+        zt = jnp.tanh(pz.reshape(B, H, dh) + rec("z"))
+        ot = jax.nn.sigmoid(po.reshape(B, H, dh) + rec("o"))
+        m_new = jnp.maximum(ft + m, it)
+        i_e = jnp.exp(it - m_new)
+        f_e = jnp.exp(ft + m - m_new)
+        c = f_e * c + i_e * zt
+        n = f_e * n + i_e
+        h = ot * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (h, c, n, m_new), h
+
+    if state is None or S > 1:
+        if state is None:
+            z0 = jnp.zeros((B, H, dh), jnp.float32)
+            carry0 = (z0, z0, z0, z0)
+        else:
+            carry0 = (state["h"], state["c"], state["n"], state["m"])
+        xs = tuple(p.swapaxes(0, 1) for p in (pre["i"], pre["f"], pre["z"], pre["o"]))
+        carry1, hs = jax.lax.scan(step, carry0, xs)
+        y = hs.swapaxes(0, 1).reshape(B, S, d).astype(dt_)
+        new_state = (
+            None
+            if state is None
+            else {"h": carry1[0], "c": carry1[1], "n": carry1[2], "m": carry1[3]}
+        )
+    else:
+        carry1, h1 = step(
+            (state["h"], state["c"], state["n"], state["m"]),
+            tuple(p[:, 0, :] for p in (pre["i"], pre["f"], pre["z"], pre["o"])),
+        )
+        y = h1.reshape(B, 1, d).astype(dt_)
+        new_state = {"h": carry1[0], "c": carry1[1], "n": carry1[2], "m": carry1[3]}
+
+    y = rmsnorm(y, params["out_norm"], cfg.rms_eps)
+    g = jnp.einsum("bsd,df->bsf", y, params["ffn_gate"].astype(dt_))
+    u = jnp.einsum("bsd,df->bsf", y, params["ffn_up"].astype(dt_))
+    y = y + jnp.einsum(
+        "bsf,fd->bsd", jax.nn.silu(g) * u, params["ffn_down"].astype(dt_)
+    )
+    return constrain(y, "batch", "seq", "embed_act"), new_state
+
+
+def slstm_state_struct(cfg: ModelConfig, batch: int) -> Dict:
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    sds = jax.ShapeDtypeStruct
+    return {k: sds((batch, H, dh), jnp.float32) for k in ("h", "c", "n", "m")}
+
+
+def slstm_make_state(cfg: ModelConfig, batch: int) -> Dict:
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    return {k: jnp.zeros((batch, H, dh), jnp.float32) for k in ("h", "c", "n", "m")}
+
+
+def slstm_state_logical_axes() -> Dict:
+    return {k: ("batch", "heads", None) for k in ("h", "c", "n", "m")}

@@ -1,0 +1,146 @@
+"""Batched serving engine: continuous request batching over a decode step.
+
+A minimal production-shaped serving loop:
+  * requests arrive with a prompt and a max_new_tokens budget,
+  * the engine packs up to ``max_batch`` active requests into fixed slots
+    (static shapes: XLA recompiles nothing as requests come and go),
+  * prefill fills a slot's KV cache; every engine tick runs ONE fused decode
+    step for all active slots; finished slots are recycled.
+
+Per-slot position bookkeeping uses a length vector; the decode step runs at
+a common cache index frontier per slot via per-slot masking.  For the
+assignment's scale the fused-batch design (one jit'd step, slot recycling)
+is the part that matters; scheduling frills (priority, chunked prefill) are
+left as documented extension points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.utils.logging import get_logger
+
+log = get_logger("serving")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.caches = self.model.init_cache(max_batch, max_len)
+        self._last_tokens = np.zeros((max_batch, 1), np.int32)
+
+        model = self.model
+
+        def prefill_one(params, caches, tokens, slot):
+            """Prefill a single slot (batch-1 forward into slot's cache rows)."""
+            logits, new_caches = model.prefill(
+                params, tokens, jax.tree_util.tree_map(lambda c: c, caches)
+            )
+            return logits, new_caches
+
+        def decode(params, tokens, caches, index_vec):
+            # per-slot positions: use a common frontier = per-slot length
+            # (static-shape trick: index is the max; per-slot mask via cache)
+            logits, caches = model.decode_step(
+                params, tokens, caches, index_vec
+            )
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt[:, None], caches
+
+        self._decode = jax.jit(decode)
+
+    # -- slot management -----------------------------------------------------
+    def try_admit(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self._prefill_slot(i, req)
+                return True
+        return False
+
+    def _prefill_slot(self, slot: int, req: Request):
+        S = len(req.prompt)
+        assert S + req.max_new_tokens <= self.max_len
+        tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+        # batch-1 prefill into a fresh cache, then splice into the slot row
+        # (the batch axis differs per leaf — recurrent states nest deeper —
+        # so locate it from the cache's logical axes)
+        one_cache = self.model.init_cache(1, self.max_len)
+        logits, one_cache = self.model.prefill(self.params, tokens, one_cache)
+        axes = self.model.cache_logical_axes()
+
+        def splice(full, one, ax):
+            b = ax.index("batch")
+            sl = tuple(
+                slice(slot, slot + 1) if i == b else slice(None)
+                for i in range(full.ndim)
+            )
+            return full.at[sl].set(one)
+
+        self.caches = jax.tree_util.tree_map(
+            splice, self.caches, one_cache, axes,
+            is_leaf=lambda x: not isinstance(x, dict),
+        )
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(nxt)
+        self.slots[slot] = req
+        self.lengths[slot] = S
+        self._last_tokens[slot, 0] = nxt
+        log.info("admitted request %d into slot %d (prompt %d tokens)", req.rid, slot, S)
+
+    # -- one engine tick -------------------------------------------------------
+    def tick(self) -> List[Request]:
+        """One fused decode step for all active slots; returns finished."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return []
+        # per-slot positions (continuous batching): each slot decodes at its
+        # own frontier; inactive slots harmlessly decode at index 0 (their
+        # cache rows are overwritten on the next prefill)
+        index = jnp.asarray(self.lengths, jnp.int32)
+        tokens = jnp.asarray(self._last_tokens)
+        nxt, self.caches = self._decode(self.params, tokens, self.caches, index)
+        nxt = np.asarray(nxt)
+        finished = []
+        for i in active:
+            req = self.slots[i]
+            req.out_tokens.append(int(nxt[i, 0]))
+            self.lengths[i] += 1
+            self._last_tokens[i, 0] = int(nxt[i, 0])
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+                self.lengths[i] = 0
+                log.info("request %d finished (%d tokens)", req.rid, len(req.out_tokens))
+        return finished
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        while pending or any(s is not None for s in self.slots):
+            while pending and self.try_admit(pending[0]):
+                pending.pop(0)
+            done.extend(self.tick())
+        return done

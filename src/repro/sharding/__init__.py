@@ -1,0 +1,10 @@
+from repro.sharding.partition import (
+    Rules,
+    constrain,
+    current_rules,
+    default_rules,
+    replicated_rules,
+    sharding_tree,
+    spec_tree,
+    use_rules,
+)

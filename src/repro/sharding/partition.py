@@ -1,0 +1,184 @@
+"""Logical-axis sharding: names -> mesh axes (MaxText-style rules).
+
+Params and activations are annotated with LOGICAL axis names at model-def
+time; a Rules table maps them to physical mesh axes.  Defaults implement
+FSDP over the data axes x tensor-parallel over "model" x expert-parallel
+over "model", which is what the production dry-run uses.  The perf pass
+swaps rule tables without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis name -> tuple of mesh axis names (or () = replicated)."""
+
+    table: Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+    def lookup(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        for k, v in self.table:
+            if k == name:
+                return v
+        return ()
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        phys = []
+        used = set()
+        for ax in axes:
+            mesh_axes = tuple(a for a in self.lookup(ax) if a not in used)
+            used.update(mesh_axes)
+            if len(mesh_axes) == 0:
+                phys.append(None)
+            elif len(mesh_axes) == 1:
+                phys.append(mesh_axes[0])
+            else:
+                phys.append(mesh_axes)
+        return P(*phys)
+
+
+def default_rules(mesh_axis_names: Sequence[str]) -> Rules:
+    """FSDP(data axes) x TP(model) x EP(model)."""
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh_axis_names)
+    model = ("model",) if "model" in mesh_axis_names else ()
+    table = (
+        ("batch", fsdp),
+        ("vocab", model),
+        ("embed", fsdp),           # ZeRO-3 style param sharding
+        ("embed_act", ()),         # activation d_model stays unsharded
+        ("mlp", model),
+        ("heads", model),
+        ("kv_heads", ()),
+        ("head_dim", ()),
+        ("expert", model),
+        ("expert_cap", fsdp),      # capacity dim shards over data axes (EP)
+        ("expert_mlp", ()),
+        ("layers", ()),
+        ("seq", ()),
+        ("kv_seq", ()),
+        ("frames", ()),
+        ("image", ()),
+        ("q_lora", ()),
+        ("kv_lora", ()),
+        ("state", ()),
+        ("conv", ()),
+    )
+    return Rules(table=table)
+
+
+def replicated_rules(mesh_axis_names: Sequence[str]) -> Rules:
+    """Everything replicated — single-host smoke tests."""
+    return Rules(table=(("batch", ()),))
+
+
+def fit_spec(shape, spec: P, mesh_sizes: Dict[str, int]) -> P:
+    """Drop mesh axes that do not evenly divide their array dimension.
+
+    Explicit input shardings (and some constraints) require even tiling;
+    e.g. 9 attention heads cannot shard over a 16-way 'model' axis — the
+    fitted spec replicates that dim instead.  Axes are dropped from the
+    right (the minor-most contribution) until the product divides.
+    """
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        while axes:
+            factor = 1
+            for a in axes:
+                factor *= mesh_sizes.get(a, 1)
+            if factor and dim % factor == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    return P(*out)
+
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules], mesh: Optional[Mesh] = None):
+    """Install rules (and mesh sizes) so model-code ``constrain`` calls
+    become sharding constraints."""
+    prev = getattr(_ctx, "state", None)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+    _ctx.state = (rules, sizes)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def current_rules() -> Optional[Rules]:
+    st = getattr(_ctx, "state", None)
+    return st[0] if st else None
+
+
+def data_shard_count() -> int:
+    """Product of mesh-axis sizes the 'batch' logical axis maps to (1 if no
+    rules context installed) — used by shard-local MoE dispatch."""
+    st = getattr(_ctx, "state", None)
+    if not st or st[0] is None or st[1] is None:
+        return 1
+    rules, sizes = st
+    n = 1
+    for a in rules.lookup("batch"):
+        n *= sizes.get(a, 1)
+    return n
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint on logical axes; no-op outside use_rules."""
+    st = getattr(_ctx, "state", None)
+    if not st or st[0] is None:
+        return x
+    rules, sizes = st
+    spec = rules.spec(axes)
+    if sizes:
+        spec = fit_spec(x.shape, spec, sizes)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def spec_tree(logical_tree, rules: Rules):
+    """Map a pytree of logical-axes tuples to PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda axes: rules.spec(axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(a, str) or a is None for a in x),
+    )
+
+
+def sharding_tree(logical_tree, rules: Rules, mesh: Mesh, shapes=None):
+    """Logical axes -> NamedShardings; divisibility-fitted when shapes given."""
+    specs = spec_tree(logical_tree, rules)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if shapes is not None:
+        specs = jax.tree_util.tree_map(
+            lambda s, sp: fit_spec(tuple(s.shape), sp, sizes),
+            shapes,
+            specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,7 @@
+from repro.training.optim import adamw_update, init_opt_state, lr_schedule
+from repro.training.checkpoint import CheckpointManager
+from repro.training.trainer import Trainer
+from repro.training.losses import ot_alignment_loss
+from repro.training.compression import apply_error_feedback, init_error_state
+from repro.training.elastic import StragglerWatchdog, remesh_state
+from repro.training.ot_routing import ot_route

@@ -1,0 +1,56 @@
+"""Gradient compression for cross-pod all-reduce: int8 with error feedback.
+
+At 2 pods x 50 GB/s ICI, all-reducing fp32 gradients of an N-param model
+costs ~8N bytes on the wire; int8 + per-tensor scale cuts that 4x.  Error
+feedback (Seide et al. 2014; Karimireddy et al. 2019) accumulates the
+quantization residual locally and re-injects it next step, preserving
+convergence (tests/test_compression.py checks the EF contraction property
+and end-to-end convergence on a quadratic).
+
+The trainer applies this to the gradient *before* the optimizer: in the
+GSPMD-sharded step this models the wire format of the cross-pod reduction
+(the actual all-reduce stays in XLA; on real hardware the compressor pairs
+with a shard_map'ed ppermute ring over the 'pod' axis — see
+DESIGN.md for the deployment note).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params) -> Dict:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g: jnp.ndarray, err: jnp.ndarray):
+    """Returns (g_hat fp32, new_err).  g_hat = dequant(quant(g + err))."""
+    x = g.astype(jnp.float32) + err
+    q, scale = _q8(x)
+    g_hat = q.astype(jnp.float32) * scale
+    return g_hat, x - g_hat
+
+
+def apply_error_feedback(grads, err_state):
+    """Tree-wide int8 EF pass; returns (compressed grads, new error state)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out = [compress_decompress(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )
+
+
+def wire_bytes_saved(params) -> Tuple[int, int]:
+    """(fp32 bytes, int8 bytes) per all-reduce for reporting."""
+    n = sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+    return 4 * n, n + 4 * len(jax.tree_util.tree_leaves(params))

@@ -1,0 +1,136 @@
+"""AdamW + LR schedules from scratch (no optax in this environment).
+
+State layout (a plain dict so sharding specs mirror params exactly):
+  {"m": like-params fp32, "v": like-params fp32,
+   "master": fp32 params (only when params are low-precision and
+             master_weights is on), "step": scalar int32}
+
+Weight decay follows the usual rule: only >=2-D tensors decay (norm scales
+and biases don't).  Gradient clipping is by global norm (fp32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.utils.tree import tree_global_norm
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def _needs_master(params, cfg: OptimizerConfig) -> bool:
+    leaves = jax.tree_util.tree_leaves(params)
+    return cfg.master_weights and any(l.dtype != jnp.float32 for l in leaves)
+
+
+def init_opt_state(params, cfg: OptimizerConfig, abstract: bool = False) -> Dict:
+    f32 = lambda x: (
+        jax.ShapeDtypeStruct(tuple(x.shape), jnp.float32)
+        if abstract
+        else jnp.zeros(x.shape, jnp.float32)
+    )
+    state = {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        "step": (
+            jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.zeros((), jnp.int32)
+        ),
+    }
+    if _needs_master(params, cfg):
+        cast = lambda x: (
+            jax.ShapeDtypeStruct(tuple(x.shape), jnp.float32)
+            if abstract
+            else x.astype(jnp.float32)
+        )
+        state["master"] = jax.tree_util.tree_map(cast, params)
+    return state
+
+
+def opt_state_logical_axes(param_axes, cfg: OptimizerConfig, has_master: bool) -> Dict:
+    state = {"m": param_axes, "v": param_axes, "step": ()}
+    if has_master:
+        state["master"] = param_axes
+    return state
+
+
+def clip_by_global_norm(grads, max_norm: float) -> Tuple:
+    gnorm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    # scale in the leaf dtype's fp32 shadow: low-precision leaves (bf16/fp8
+    # param storage) have no implicit promotion against f32
+    return (
+        jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+        ),
+        gnorm,
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    state: Dict,
+    cfg: OptimizerConfig,
+) -> Tuple:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = tree_global_norm(grads)
+
+    b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    source = state.get("master", params)
+
+    def upd(p_master, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        p32 = p_master.astype(jnp.float32)
+        if p32.ndim >= 2 and cfg.weight_decay > 0:
+            delta = delta + cfg.weight_decay * p32
+        return p32 - lr * delta, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(source)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p32 = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_p32
+        new_params = jax.tree_util.tree_map(
+            lambda p32, p: p32.astype(p.dtype), new_p32, params
+        )
+    else:
+        new_params = jax.tree_util.tree_map(
+            lambda p32, p: p32.astype(p.dtype), new_p32, params
+        )
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

@@ -1,0 +1,148 @@
+"""Training loop: jit'd step, checkpoint/restart, watchdog, OT-align option.
+
+Runs identically on 1 CPU device (examples/smoke) and on a production mesh
+(GSPMD shards the same step function).  Fault tolerance: every run starts by
+probing the checkpoint dir and resuming from the latest committed step; the
+synthetic pipeline regenerates batch(step) deterministically so a restart
+continues the same trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import SyntheticLM, SyntheticLMConfig
+from repro.models import build_model
+from repro.sharding.partition import Rules, sharding_tree, use_rules
+from repro.training.checkpoint import CheckpointManager
+from repro.training.compression import apply_error_feedback, init_error_state
+from repro.training.elastic import StragglerWatchdog
+from repro.training.losses import group_features_by_class, ot_alignment_loss
+from repro.training.optim import adamw_update, init_opt_state
+from repro.utils.logging import get_logger
+
+log = get_logger("trainer")
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        data: SyntheticLM,
+        ckpt_dir: Optional[str] = None,
+        mesh=None,
+        rules: Optional[Rules] = None,
+    ):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.model = build_model(cfg)
+        self.data = data
+        self.mesh, self.rules = mesh, rules
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.watchdog = StragglerWatchdog()
+        self.metrics_history = []
+
+        params, self.param_axes = self.model.init(jax.random.PRNGKey(tcfg.seed))
+        opt = init_opt_state(params, tcfg.optimizer)
+        self.state = {"params": params, "opt": opt}
+        if tcfg.grad_compression == "int8_ef":
+            self.state["ef"] = init_error_state(params)
+
+        self.step_fn = jax.jit(self._make_step())
+        self.start_step = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self.state, self.start_step = self.ckpt.restore(self.state)
+            log.info("restored checkpoint at step %d", self.start_step)
+
+    # ------------------------------------------------------------------
+    def _make_step(self) -> Callable:
+        cfg, tcfg, model = self.cfg, self.tcfg, self.model
+        remat = tcfg.remat != "none"
+
+        def loss_fn(params, batch):
+            total, metrics = model.train_loss(
+                params, batch, z_loss=tcfg.z_loss, remat=remat
+            )
+            if tcfg.ot_align and "class" in batch:
+                # paper integration: align mean hidden representations of the
+                # two halves of the batch (source half labeled by `class`)
+                logits, _ = model.forward(params, batch["tokens"][:, :-1])
+                del logits  # features come from embeddings below (cheap proxy)
+                emb = params["embed"].astype(jnp.float32)
+                feats = jnp.mean(emb[batch["tokens"][:, :-1]], axis=1)
+                half = feats.shape[0] // 2
+                L = int(self.data.cfg.num_classes)
+                gsz = max(half // L, 1)
+                h_src = group_features_by_class(
+                    feats[:half], batch["class"][:half], L, gsz
+                )
+                ot, ot_metrics = ot_alignment_loss(
+                    h_src, feats[half:],
+                    num_classes=L, group_size=gsz,
+                    gamma=tcfg.ot_gamma, rho=tcfg.ot_rho,
+                )
+                total = total + tcfg.ot_align_weight * ot
+                metrics = dict(metrics, **ot_metrics)
+            return total, metrics
+
+        def step(state, batch):
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch
+            )
+            new_state = dict(state)
+            if "ef" in state:
+                grads, new_state["ef"] = apply_error_feedback(grads, state["ef"])
+            new_params, new_opt, om = adamw_update(
+                state["params"], grads, state["opt"], tcfg.optimizer
+            )
+            new_state["params"] = new_params
+            new_state["opt"] = new_opt
+            return new_state, dict(metrics, **om)
+
+        return step
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict:
+        steps = steps or self.tcfg.steps
+        ctx = use_rules(self.rules, self.mesh) if self.rules else _null_ctx()
+        with ctx:
+            for step in range(self.start_step, steps):
+                self.watchdog.step_start(step)
+                batch = {
+                    k: jnp.asarray(v) for k, v in self.data.batch(step).items()
+                }
+                self.state, metrics = self.step_fn(self.state, batch)
+                # block on one scalar so the watchdog times the actual step,
+                # not jax's async dispatch (sub-ms dispatch would make every
+                # real fluctuation look like a straggler)
+                jax.block_until_ready(metrics["loss"])
+                ev = self.watchdog.step_end()
+                if step % self.tcfg.log_every == 0 or step == steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    self.metrics_history.append({"step": step, **m})
+                    log.info(
+                        "step %5d loss=%.4f ce=%.4f gnorm=%.2f lr=%.2e%s",
+                        step, m.get("loss", 0), m.get("ce", 0),
+                        m.get("grad_norm", 0), m.get("lr", 0),
+                        " [straggler]" if ev else "",
+                    )
+                if self.ckpt and (step + 1) % self.tcfg.checkpoint_every == 0:
+                    self.ckpt.save(self.state, step + 1)
+        if self.ckpt:
+            self.ckpt.save(self.state, steps)
+            self.ckpt.wait()
+        return self.metrics_history[-1] if self.metrics_history else {}
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,15 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_global_norm,
+    tree_zeros_like,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_global_norm",
+    "tree_zeros_like",
+    "get_logger",
+]

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run alone overrides the device count).
+# Multi-device tests spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,71 @@
+"""Checkpoint manager: roundtrip, atomicity, retention, elastic reshard."""
+import json
+import shutil
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.training.checkpoint import CheckpointManager
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32)),
+                   "b": jnp.asarray(rng.normal(size=(8,)).astype(np.float32)).astype(jnp.bfloat16)},
+        "opt": {"m": {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,))},
+                "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    cm = CheckpointManager(tmp_path, async_write=False)
+    st = _state()
+    cm.save(st, 10)
+    restored, step = cm.restore(_state(seed=99))
+    assert step == 10
+    np.testing.assert_allclose(
+        np.asarray(restored["params"]["w"]), np.asarray(st["params"]["w"])
+    )
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_async_save_then_wait(tmp_path):
+    cm = CheckpointManager(tmp_path, async_write=True)
+    cm.save(_state(), 1)
+    cm.wait()
+    assert cm.latest_step() == 1
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    cm = CheckpointManager(tmp_path, async_write=False)
+    cm.save(_state(), 5)
+    # simulate a crash mid-write of step 6: directory without COMMITTED
+    d = tmp_path / "step_00000006"
+    d.mkdir()
+    (d / "index.json").write_text(json.dumps({"step": 6}))
+    assert cm.latest_step() == 5
+    _, step = cm.restore(_state())
+    assert step == 5
+
+
+def test_retention(tmp_path):
+    cm = CheckpointManager(tmp_path, keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        cm.save(_state(), s)
+    assert cm.all_steps() == [3, 4]
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    cm = CheckpointManager(tmp_path, async_write=False)
+    cm.save(_state(), 1)
+    bad = _state()
+    bad["params"]["w"] = jnp.zeros((5, 8))
+    try:
+        cm.restore(bad)
+        raised = False
+    except ValueError:
+        raised = True
+    assert raised

@@ -1,0 +1,201 @@
+"""Core OT library: regularizer math, dual, screening exactness, solver."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import groups as G
+from repro.core import screening as S
+from repro.core.dual import (
+    DualProblem,
+    dual_value_and_grad,
+    plan_from_duals,
+    primal_objective,
+    snapshot_norms,
+)
+from repro.core.lbfgs import LbfgsOptions
+from repro.core.ot import (
+    group_sparsity,
+    solve_groupsparse_ot,
+    squared_euclidean_cost,
+)
+from repro.core.regularizers import GroupSparseReg, grad_psi, psi_value
+from repro.core.sinkhorn import sinkhorn_log
+from repro.core.solver import SolveOptions, recover_plan, solve_dual
+
+
+def _problem(rng, L=5, g=8, n=40, rho=0.6, gamma=1.0, pad_to=4):
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
+    C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+    C /= C.max()
+    spec = G.spec_from_labels(labels, pad_to=pad_to)
+    C_pad = jnp.asarray(G.pad_cost_matrix(C, labels, spec))
+    a = jnp.asarray(G.pad_marginal(np.full(m, 1 / m, np.float32), labels, spec))
+    b = jnp.asarray(np.full(n, 1 / n, np.float32))
+    reg = GroupSparseReg.from_rho(gamma, rho)
+    prob = DualProblem(spec.num_groups, spec.group_size, n, reg)
+    return spec, C_pad, a, b, reg, prob, labels, Xs, Xt
+
+
+def test_conjugate_matches_bruteforce_sup():
+    """psi(f) = sup_{g>=0} f.g - Psi(g): check against projected gradient."""
+    rng = np.random.default_rng(0)
+    L, g = 3, 4
+    reg = GroupSparseReg(gamma=0.7, mu=0.4)
+    f = jnp.asarray(rng.normal(size=(L * g,)).astype(np.float32))
+    want = psi_value(f, L, reg)
+    # numeric sup via projected gradient ascent on g >= 0
+    gv = jnp.zeros_like(f)
+    lr = 0.1
+    for _ in range(3000):
+        grad = f - reg.gamma * (
+            gv
+            + reg.mu
+            * (gv.reshape(L, g) / jnp.maximum(
+                jnp.linalg.norm(gv.reshape(L, g), axis=1, keepdims=True), 1e-12
+            )).reshape(-1)
+        )
+        gv = jnp.maximum(gv + lr * grad, 0.0)
+    from repro.core.regularizers import primal_regularizer
+
+    got = f @ gv - primal_regularizer(gv[:, None], L, reg)
+    np.testing.assert_allclose(float(want), float(got), rtol=1e-3, atol=1e-4)
+
+
+def test_gradpsi_is_argmax_of_conjugate():
+    rng = np.random.default_rng(1)
+    L, g = 4, 5
+    reg = GroupSparseReg(gamma=0.5, mu=0.3)
+    f = jnp.asarray(rng.normal(size=(L * g,)).astype(np.float32))
+    gstar = grad_psi(f, L, reg)
+    assert bool(jnp.all(gstar >= 0))
+    # AD of psi_value must equal the closed form (Danskin)
+    gad = jax.grad(lambda ff: psi_value(ff, L, reg))(f)
+    np.testing.assert_allclose(np.asarray(gstar), np.asarray(gad), atol=1e-5)
+
+
+def test_closed_form_grad_matches_ad():
+    rng = np.random.default_rng(2)
+    spec, C, a, b, reg, prob, *_ = _problem(rng)
+    alpha = jnp.asarray(rng.normal(size=spec.m_pad).astype(np.float32) * 0.3)
+    beta = jnp.asarray(rng.normal(size=prob.n).astype(np.float32) * 0.3)
+    v, (ga, gb) = dual_value_and_grad(alpha, beta, C, a, b, prob)
+    ga_ad, gb_ad = jax.grad(
+        lambda x, y: dual_value_and_grad(x, y, C, a, b, prob)[0], argnums=(0, 1)
+    )(alpha, beta)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ga_ad), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_ad), atol=2e-5)
+
+
+@pytest.mark.parametrize("rho", [0.2, 0.6, 0.8])
+def test_screened_equals_dense_full_solve(rho):
+    """Theorem 2: identical objective value and iterate trajectory."""
+    rng = np.random.default_rng(3)
+    spec, C, a, b, reg, prob, *_ = _problem(rng, rho=rho)
+    opts_d = SolveOptions(grad_impl="dense", lbfgs=LbfgsOptions(max_iters=300))
+    opts_s = SolveOptions(grad_impl="screened", lbfgs=LbfgsOptions(max_iters=300))
+    rd = solve_dual(C, a, b, spec, reg, opts_d)
+    rs = solve_dual(C, a, b, spec, reg, opts_s)
+    assert rd.iterations == rs.iterations  # identical trajectory
+    np.testing.assert_allclose(rd.value, rs.value, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(rd.alpha), np.asarray(rs.alpha), atol=1e-6
+    )
+
+
+def test_pallas_impl_matches_dense_solution():
+    rng = np.random.default_rng(4)
+    spec, C, a, b, reg, prob, *_ = _problem(rng, L=4, g=8, n=32)
+    opts_d = SolveOptions(grad_impl="dense", lbfgs=LbfgsOptions(max_iters=250))
+    opts_p = SolveOptions(grad_impl="pallas", lbfgs=LbfgsOptions(max_iters=250))
+    rd = solve_dual(C, a, b, spec, reg, opts_d)
+    rp = solve_dual(C, a, b, spec, reg, opts_p)
+    # fp32 summation-order differences may shift the trajectory slightly;
+    # the converged objective must agree tightly.
+    np.testing.assert_allclose(rd.value, rp.value, rtol=2e-5, atol=2e-5)
+
+
+def test_tight_active_refresh_same_result():
+    rng = np.random.default_rng(5)
+    spec, C, a, b, reg, prob, *_ = _problem(rng)
+    r1 = solve_dual(C, a, b, spec, reg, SolveOptions(grad_impl="screened"))
+    r2 = solve_dual(
+        C, a, b, spec, reg,
+        SolveOptions(grad_impl="screened", tight_active_refresh=True),
+    )
+    np.testing.assert_allclose(r1.value, r2.value, rtol=1e-6)
+    # the tighter refresh can only (weakly) grow the certified-active set
+    assert r2.stats["active"] >= r1.stats["active"]
+
+
+def test_marginals_and_duality_gap_at_convergence():
+    rng = np.random.default_rng(6)
+    spec, C, a, b, reg, prob, labels, Xs, Xt = _problem(rng)
+    res = solve_dual(
+        C, a, b, spec, reg,
+        SolveOptions(lbfgs=LbfgsOptions(max_iters=800, gtol=1e-7)),
+    )
+    T = recover_plan(res, C, spec, reg)
+    row = jnp.sum(T, axis=1)
+    col = jnp.sum(T, axis=0)
+    assert float(jnp.max(jnp.abs(row - a))) < 5e-4
+    assert float(jnp.max(jnp.abs(col - b))) < 5e-4
+    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
+    primal = primal_objective(T, C, prob, row_mask)
+    # weak duality + small gap at convergence
+    assert float(primal) >= float(res.value) - 1e-4
+    assert float(primal) - float(res.value) < 5e-3
+
+
+def test_group_sparsity_increases_with_rho():
+    rng = np.random.default_rng(7)
+    m = 40
+    labels = np.repeat(np.arange(5), 8)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None] * 4.0
+    Xt = rng.normal(size=(m, 2)) + labels[:, None] * 4.0
+    sp = []
+    for rho in (0.2, 0.8):
+        sol = solve_groupsparse_ot(Xs, labels, Xt, gamma=1.0, rho=rho)
+        sp.append(group_sparsity(sol, labels, tol=1e-7))
+    assert sp[1] >= sp[0]
+    assert sp[1] > 0.5  # strong regularization => strongly group-sparse plan
+
+
+def test_barycentric_map_preserves_class_geometry():
+    rng = np.random.default_rng(8)
+    labels = np.repeat(np.arange(4), 6)
+    Xs = rng.normal(size=(24, 2)) + np.stack([labels * 5.0, -5.0 * np.ones(24)], 1)
+    Xt = rng.normal(size=(24, 2)) + np.stack([labels * 5.0, 5.0 * np.ones(24)], 1)
+    sol = solve_groupsparse_ot(Xs, labels, Xt, gamma=10.0, rho=0.4)
+    # barycentric map expresses each TARGET as the mean of the sources that
+    # send it mass (paper: X^T recovered as n T^T X^S) — so the mapped points
+    # sit at the SOURCE y-level, with x-coordinates matching the target's
+    # class column (class structure preserved by the group-sparse plan).
+    Xt_hat = sol.transport_sources(Xs)
+    assert abs(float(np.mean(Xt_hat[:, 1])) + 5.0) < 1.5
+    # class alignment: mapped x-coordinate correlates with the target's class
+    corr = np.corrcoef(Xt_hat[:, 0], labels * 5.0)[0, 1]
+    assert corr > 0.9
+
+
+def test_sinkhorn_baseline_matches_uniform_marginals():
+    rng = np.random.default_rng(9)
+    m = n = 16
+    C = jnp.asarray((rng.random((m, n)) ** 2).astype(np.float32))
+    a = jnp.full((m,), 1 / m)
+    b = jnp.full((n,), 1 / n)
+    res = sinkhorn_log(C, a, b, eps=0.05, max_iters=3000, tol=1e-9)
+    np.testing.assert_allclose(np.asarray(res.plan.sum(1)), np.asarray(a), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.plan.sum(0)), np.asarray(b), atol=1e-5)
+
+
+def test_solver_stats_reflect_sparsity():
+    rng = np.random.default_rng(10)
+    spec, C, a, b, reg, prob, *_ = _problem(rng, rho=0.8)
+    res = solve_dual(C, a, b, spec, reg, SolveOptions(grad_impl="screened"))
+    total = sum(res.stats.values())
+    assert total > 0
+    assert res.stats["zero"] / total > 0.3  # screening actually fires

@@ -1,0 +1,154 @@
+"""Kernel-vs-oracle sweeps: shapes x dtypes x screening density.
+
+Every Pallas kernel is validated in interpret mode against its pure-jnp
+oracle in ref.py, per the kernel contract (same tile-masking semantics).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import groups as G
+from repro.core import screening as S
+from repro.core.dual import DualProblem, dual_value_and_grad, snapshot_norms
+from repro.core.ot import squared_euclidean_cost
+from repro.core.regularizers import GroupSparseReg
+from repro.kernels import ops as kops
+from repro.kernels.gradpsi import gradpsi_pallas, pick_tile_l
+from repro.kernels.ref import gradpsi_ref, screen_ref
+from repro.kernels.screen import screen_pallas
+
+
+def _rand_problem(rng, L, g, n, dtype=jnp.float32):
+    alpha = jnp.asarray(rng.normal(size=L * g).astype(np.float32))
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    C = jnp.asarray((rng.normal(size=(L * g, n)) ** 2).astype(np.float32)).astype(dtype)
+    return alpha, beta, C
+
+
+SHAPES = [
+    # (L, g, n, tile_l, tile_n)
+    (8, 8, 128, 8, 128),       # single tile
+    (16, 8, 256, 8, 128),      # 2x2 tiles
+    (8, 16, 384, 4, 128),      # tall groups, 3 col tiles
+    (32, 8, 128, 8, 128),      # many row tiles
+    (2, 64, 256, 2, 128),      # few big groups
+    (16, 8, 256, 8, 256),      # wide col tile
+]
+
+
+@pytest.mark.parametrize("L,g,n,tl,tn", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("density", [1.0, 0.5, 0.0])
+def test_gradpsi_matches_oracle(L, g, n, tl, tn, dtype, density):
+    rng = np.random.default_rng(hash((L, g, n, str(dtype), density)) % 2**32)
+    alpha, beta, C = _rand_problem(rng, L, g, n, dtype)
+    grid = (L // tl, n // tn)
+    flags = jnp.asarray(
+        (rng.random(grid) < density).astype(np.int32)
+        if density < 1.0
+        else np.ones(grid, np.int32)
+    )
+    kw = dict(num_groups=L, group_size=g, tau=0.3, gamma=0.5,
+              tile_l=tl, tile_n=tn)
+    want = gradpsi_ref(alpha, beta, C, flags, **kw)
+    got = gradpsi_pallas(alpha, beta, C, flags, interpret=True, **kw)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 5e-4
+    for w, g_ in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g_), np.asarray(w), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("L,n", [(8, 128), (20, 300), (64, 1024), (3, 50)])
+def test_screen_matches_oracle(L, n):
+    rng = np.random.default_rng(L * 1000 + n)
+    z = jnp.asarray(np.abs(rng.normal(size=(L, n))).astype(np.float32))
+    k, o = z * 1.5, z * 0.3
+    act = jnp.asarray(rng.integers(0, 2, (L, n)).astype(np.int8))
+    dap = jnp.asarray(np.abs(rng.normal(size=L)).astype(np.float32) * 0.1)
+    daf, dan = dap * 1.2, dap * 0.5
+    db = jnp.asarray(rng.normal(size=n).astype(np.float32) * 0.1)
+    sg = jnp.asarray(np.sqrt(rng.integers(1, 20, L)).astype(np.float32))
+    tau = 0.8
+    tl, tn = 8, 128
+    v1, f1 = kops.screen_verdicts(z, k, o, act, dap, daf, dan, db, sg, tau,
+                                  tile_l=tl, tile_n=tn)
+    Lp, Np = -(-L // tl) * tl, -(-n // tn) * tn
+    pad2 = lambda x: jnp.pad(x, ((0, Lp - L), (0, Np - n)))
+    pad_ = lambda x, t: jnp.pad(x, (0, t - x.shape[0]))
+    v0, f0 = screen_ref(
+        pad2(z), pad2(k), pad2(o), pad2(act),
+        pad_(dap, Lp), pad_(daf, Lp), pad_(dan, Lp), pad_(db, Np), pad_(sg, Lp),
+        tau=tau, tile_l=tl, tile_n=tn,
+    )
+    assert bool(jnp.all(v0[:L, :n] == v1))
+    assert bool(jnp.all(f0 == f1))
+
+
+def test_ops_dual_matches_dense_allcompute():
+    """Pallas wrapper vs the dense closed form, no screening."""
+    rng = np.random.default_rng(3)
+    L, g, n = 16, 8, 200
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None]
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None]
+    C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+    C /= C.max()
+    spec = G.spec_from_labels(labels, pad_to=8)
+    C_pad = jnp.asarray(G.pad_cost_matrix(C, labels, spec))
+    a = jnp.asarray(G.pad_marginal(np.full(m, 1 / m, np.float32), labels, spec))
+    b = jnp.asarray(np.full(n, 1 / n, np.float32))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    prob = DualProblem(spec.num_groups, spec.group_size, n, reg)
+    alpha = jnp.asarray(rng.normal(size=spec.m_pad).astype(np.float32) * 0.3)
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32) * 0.3)
+
+    verdict = jnp.full((L, n), S.CHECK, jnp.int32)
+    v0, (ga0, gb0) = dual_value_and_grad(alpha, beta, C_pad, a, b, prob)
+    v1, ga1, gb1 = kops.dual_value_and_grad(alpha, beta, C_pad, a, b, verdict, prob)
+    np.testing.assert_allclose(float(v1), float(v0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ga1), np.asarray(ga0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb0), atol=1e-4)
+
+
+def test_ops_dual_screened_exactness():
+    """Masked Pallas eval == dense eval when the mask is a valid screen."""
+    rng = np.random.default_rng(7)
+    L, g, n = 16, 8, 200
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None]
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None]
+    C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+    C /= C.max()
+    spec = G.spec_from_labels(labels, pad_to=8)
+    C_pad = jnp.asarray(G.pad_cost_matrix(C, labels, spec))
+    a = jnp.asarray(G.pad_marginal(np.full(m, 1 / m, np.float32), labels, spec))
+    b = jnp.asarray(np.full(n, 1 / n, np.float32))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    prob = DualProblem(spec.num_groups, spec.group_size, n, reg)
+    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
+    sqrt_g = jnp.asarray(spec.sqrt_sizes())
+
+    alpha = jnp.asarray(rng.normal(size=spec.m_pad).astype(np.float32) * 0.3)
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32) * 0.3)
+    z, k, o = snapshot_norms(alpha, beta, C_pad, prob, row_mask)
+    st = S.take_snapshot(S.init_state(spec.m_pad, n, L), alpha, beta, z, k, o)
+    a2, b2 = alpha + 0.01, beta - 0.02
+    verd = S.verdicts(st, a2, b2, sqrt_g, reg.tau)
+    assert int(jnp.sum(verd == S.ZERO)) > 0  # screening actually fires
+
+    v0, (ga0, gb0) = dual_value_and_grad(a2, b2, C_pad, a, b, prob)
+    v1, ga1, gb1 = kops.dual_value_and_grad(a2, b2, C_pad, a, b, verd, prob)
+    np.testing.assert_allclose(float(v1), float(v0), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ga1), np.asarray(ga0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb0), atol=1e-4)
+
+
+def test_pick_tile_l_fits_vmem():
+    from repro.kernels.gradpsi import VMEM_BUDGET_BYTES
+
+    for g in [8, 64, 512, 4096]:
+        tl = pick_tile_l(g, 128)
+        assert tl >= 1
+        assert 2 * tl * g * 128 * 4 <= VMEM_BUDGET_BYTES or tl == 1

@@ -1,0 +1,84 @@
+"""Pure-JAX L-BFGS vs scipy on standard problems."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from scipy import optimize
+
+from repro.core.lbfgs import LbfgsOptions, run
+
+
+def test_quadratic_exact():
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(12, 12))
+    A = A @ A.T + 0.5 * np.eye(12)
+    b = rng.normal(size=12)
+    Aj, bj = jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32)
+
+    def vag(x):
+        g = Aj @ x - bj
+        return 0.5 * x @ Aj @ x - bj @ x, g
+
+    st = run(vag, jnp.zeros(12, jnp.float32), LbfgsOptions(max_iters=200, gtol=1e-6))
+    x_star = np.linalg.solve(A, b)
+    assert bool(st.converged)
+    np.testing.assert_allclose(np.asarray(st.x), x_star, atol=1e-3)
+
+
+def test_rosenbrock_matches_scipy():
+    def f_np(x):
+        return float(
+            100 * (x[1] - x[0] ** 2) ** 2 + (1 - x[0]) ** 2
+            + 100 * (x[3] - x[2] ** 2) ** 2 + (1 - x[2]) ** 2
+        )
+
+    def vag(x):
+        v = (
+            100 * (x[1] - x[0] ** 2) ** 2 + (1 - x[0]) ** 2
+            + 100 * (x[3] - x[2] ** 2) ** 2 + (1 - x[2]) ** 2
+        )
+        return v, jax.grad(
+            lambda y: 100 * (y[1] - y[0] ** 2) ** 2 + (1 - y[0]) ** 2
+            + 100 * (y[3] - y[2] ** 2) ** 2 + (1 - y[2]) ** 2
+        )(x)
+
+    x0 = jnp.asarray([-1.2, 1.0, -1.2, 1.0], jnp.float32)
+    st = run(vag, x0, LbfgsOptions(max_iters=500, gtol=1e-5))
+    res = optimize.minimize(
+        lambda x: f_np(x), np.asarray(x0), method="L-BFGS-B"
+    )
+    assert float(st.f) <= res.fun + 1e-4
+    np.testing.assert_allclose(np.asarray(st.x), np.ones(4), atol=1e-2)
+
+
+def test_history_cycling_stable():
+    """More iterations than history size exercises the circular buffer."""
+
+    def vag(x):
+        return jnp.sum(jnp.cosh(x * 0.5)), jnp.sinh(x * 0.5) * 0.5
+
+    x0 = jnp.linspace(-3, 3, 40).astype(jnp.float32)
+    st = run(vag, x0, LbfgsOptions(history=4, max_iters=300, gtol=1e-6))
+    assert bool(st.converged)
+    assert float(jnp.max(jnp.abs(st.x))) < 1e-3
+
+
+def test_segment_runs_match_single_run():
+    """run_segment x k must follow the same trajectory as one run."""
+    from repro.core.lbfgs import init_state, run_segment
+
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(8, 8))
+    A = A @ A.T + np.eye(8)
+    Aj = jnp.asarray(A, jnp.float32)
+
+    def vag(x):
+        return 0.5 * x @ Aj @ x, Aj @ x
+
+    opts = LbfgsOptions(max_iters=1000, gtol=0.0, ftol=0.0)
+    x0 = jnp.ones(8, jnp.float32)
+    s1 = init_state(x0, vag, opts)
+    for _ in range(4):
+        s1 = run_segment(vag, s1, 5, opts)
+    s2 = init_state(x0, vag, opts)
+    s2 = run_segment(vag, s2, 20, opts)
+    np.testing.assert_allclose(np.asarray(s1.x), np.asarray(s2.x), atol=1e-6)

@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+The safety of the paper's screening is exactly the kind of invariant
+hypothesis shines on: for ANY snapshot point and ANY current point, the
+Eq. 6 value must upper-bound the true group norm and the Eq. 7 value must
+lower-bound it — otherwise Lemma 2/5 break and the solver silently returns
+wrong gradients.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import screening as S
+from repro.core.dual import DualProblem, snapshot_norms
+from repro.core.regularizers import GroupSparseReg, psi_from_z, scale_from_z
+from repro.sharding.partition import fit_spec
+from jax.sharding import PartitionSpec as P
+
+_f32 = st.floats(-10.0, 10.0, allow_nan=False, width=32)
+
+
+def _arrays(rng_seed, L, g, n, scale):
+    rng = np.random.default_rng(rng_seed)
+    C = (rng.random((L * g, n)) * scale).astype(np.float32)
+    a0 = (rng.normal(size=L * g) * scale * 0.3).astype(np.float32)
+    b0 = (rng.normal(size=n) * scale * 0.3).astype(np.float32)
+    da = (rng.normal(size=L * g) * scale * 0.1).astype(np.float32)
+    db = (rng.normal(size=n) * scale * 0.1).astype(np.float32)
+    return C, a0, b0, da, db
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    L=st.integers(1, 6),
+    g=st.integers(1, 9),
+    n=st.integers(1, 17),
+    scale=st.floats(0.01, 100.0),
+)
+def test_bounds_always_valid(seed, L, g, n, scale):
+    """Lemma 1 & 4 for arbitrary snapshot/current pairs."""
+    C, a0, b0, da, db = _arrays(seed, L, g, n, scale)
+    prob = DualProblem(L, g, n, GroupSparseReg(1.0, 1.0))
+    row_mask = jnp.ones((L * g,), bool)
+    sqrt_g = jnp.full((L,), np.sqrt(g), jnp.float32)
+
+    alpha0, beta0 = jnp.asarray(a0), jnp.asarray(b0)
+    z, k, o = snapshot_norms(alpha0, beta0, jnp.asarray(C), prob, row_mask)
+    state = S.take_snapshot(
+        S.init_state(L * g, n, L), alpha0, beta0, z, k, o
+    )
+    alpha1, beta1 = alpha0 + jnp.asarray(da), beta0 + jnp.asarray(db)
+    zbar = S.upper_bound(state, alpha1, beta1, sqrt_g)
+    zlow = S.lower_bound(state, alpha1, beta1, sqrt_g)
+    z_true, _, _ = snapshot_norms(alpha1, beta1, jnp.asarray(C), prob, row_mask)
+    tol = 1e-4 * max(scale, 1.0)
+    assert bool(jnp.all(zbar >= z_true - tol)), "upper bound violated"
+    assert bool(jnp.all(zlow <= z_true + tol)), "lower bound violated"
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    z=st.lists(st.floats(0.0, 50.0, width=32), min_size=1, max_size=32),
+    gamma=st.floats(0.01, 10.0),
+    mu=st.floats(0.01, 10.0),
+)
+def test_soft_threshold_properties(z, gamma, mu):
+    """scale in [0,1); psi >= 0 is NOT required, but psi(0)=0 and
+    monotonicity of the scale in z must hold."""
+    reg = GroupSparseReg(gamma=gamma, mu=mu)
+    Z = jnp.asarray(sorted(z), jnp.float32)
+    s = scale_from_z(Z, reg)
+    assert bool(jnp.all(s >= 0)) and bool(jnp.all(s < 1.0))
+    assert bool(jnp.all(jnp.diff(s) >= -1e-6))  # monotone in z
+    assert float(scale_from_z(jnp.zeros((1,)), reg)[0]) == 0.0
+    assert float(psi_from_z(jnp.zeros((1,)), reg)[0]) == 0.0
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    data=st.integers(1, 16),
+    model=st.integers(1, 16),
+)
+def test_fit_spec_always_divides(dims, data, model):
+    """fit_spec output must always evenly tile the shape."""
+    sizes = {"data": data, "model": model}
+    spec = P(*(["data", "model", ("data", "model"), None][: len(dims)]))
+    fitted = fit_spec(tuple(dims), spec, sizes)
+    for dim, entry in zip(dims, tuple(fitted)):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        f = 1
+        for a in axes:
+            f *= sizes[a]
+        assert dim % f == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 200))
+def test_int8_error_feedback_bounded(seed, n):
+    """EF residual stays bounded by one quantization step (contraction)."""
+    from repro.training.compression import compress_decompress
+
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    for _ in range(5):
+        g_hat, err = compress_decompress(g, err)
+        scale = float(jnp.max(jnp.abs(g + 0 * err))) / 127.0 + 1e-12
+        assert float(jnp.max(jnp.abs(err))) <= 4.0 * scale + 1e-6

@@ -1,0 +1,71 @@
+"""Roofline tooling: analytic param model vs real trees, HLO parsing."""
+import sys
+from pathlib import Path
+
+import jax
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.roofline import active_params, scan_trips
+from repro.configs import get_config, list_archs
+from repro.launch.dryrun import _shape_bytes, parse_collectives
+from repro.models import build_model
+from repro.models.common import count_params
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "yi-6b", "smollm-135m",
+                                  "minicpm3-4b", "whisper-medium",
+                                  "llama-3.2-vision-90b", "xlstm-1.3b"])
+def test_active_params_matches_total_for_non_moe(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), abstract=True)
+    total = count_params(params)
+    act = active_params(cfg)
+    assert abs(act - total) / total < 0.05, (act, total)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "phi3.5-moe-42b-a6.6b",
+                                  "jamba-1.5-large-398b"])
+def test_active_params_below_total_for_moe(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0), abstract=True)
+    total = count_params(params)
+    act = active_params(cfg)
+    assert act < 0.75 * total
+    assert act > 0.02 * total
+
+
+def test_scan_trips():
+    assert scan_trips(get_config("yi-9b")) == 48
+    assert scan_trips(get_config("jamba-1.5-large-398b")) == 9     # 72/8
+    assert scan_trips(get_config("xlstm-1.3b")) == 6               # 48/8
+    assert scan_trips(get_config("llama-3.2-vision-90b")) == 20    # 100/5
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("bf16[8]{0}") == 16
+    assert _shape_bytes("(f32[4], bf16[2,2])") == 16 + 8
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_parse_collectives():
+    hlo = """
+  %ag = bf16[4096,1024]{1,0} all-gather(%p0), replica_groups=...
+  %ar.1 = f32[512]{0} all-reduce(%x), to_apply=%sum
+  %ars = (f32[256]{0}, f32[256]{0}) all-reduce-start(%y)
+  %ard = f32[256]{0} all-reduce-done(%ars)
+  %cp = bf16[64]{0} collective-permute(%z), source_target_pairs=...
+  %fusion.1 = f32[10] fusion(%w), calls=%comp
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["result_bytes"] == 4096 * 1024 * 2
+    assert out["all-reduce"]["count"] == 2          # sync + start (done skipped)
+    assert out["all-reduce"]["result_bytes"] == 512 * 4 + (256 * 4 * 2) // 2
+    assert out["collective-permute"]["count"] == 1
+    # wire model: AR counts 2x
+    assert out["all-reduce"]["wire_bytes"] == 2.0 * out["all-reduce"]["result_bytes"]

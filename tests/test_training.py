@@ -1,0 +1,153 @@
+"""Training substrate: optimizer, trainer loop, checkpoint restart,
+compression, watchdog, OT-align loss integration."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, TrainConfig
+from repro.data.pipeline import SyntheticLM, SyntheticLMConfig
+from repro.training.compression import apply_error_feedback, init_error_state
+from repro.training.elastic import StragglerWatchdog
+from repro.training.losses import group_features_by_class, ot_alignment_loss
+from repro.training.optim import adamw_update, init_opt_state, lr_schedule
+from repro.training.trainer import Trainer
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = OptimizerConfig(lr=0.05, warmup_steps=0, decay_steps=1000,
+                          weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_adamw_master_weights_bf16():
+    cfg = OptimizerConfig(lr=0.01, warmup_steps=0, master_weights=True,
+                          weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = init_opt_state(params, cfg)
+    assert "master" in state
+    for _ in range(5):
+        params, state, _ = adamw_update(
+            params, {"w": jnp.ones((4,), jnp.bfloat16)}, state, cfg
+        )
+    assert params["w"].dtype == jnp.bfloat16
+    assert state["master"]["w"].dtype == jnp.float32
+    # master accumulates sub-bf16-precision updates
+    assert float(jnp.max(jnp.abs(state["master"]["w"].astype(jnp.float32)
+                                 - params["w"].astype(jnp.float32)))) < 0.01
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, decay_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 120, 5)]
+    assert lrs[0] < lrs[1]                      # warmup
+    assert max(lrs) <= 1e-3 + 1e-9
+    assert lrs[-1] >= cfg.lr * cfg.min_lr_ratio - 1e-9
+
+
+def _tiny_trainer(tmp_path, steps=6, **tkw):
+    cfg = get_config("smollm-135m").reduced(num_layers=2, d_model=64, d_ff=128,
+                                            vocab_size=128)
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2),
+        steps=steps, log_every=2, checkpoint_every=3, **tkw,
+    )
+    data = SyntheticLM(SyntheticLMConfig(vocab_size=128, seq_len=32, global_batch=4))
+    return Trainer(cfg, tcfg, data, ckpt_dir=str(tmp_path / "ckpt"))
+
+
+def test_trainer_loss_decreases(tmp_path):
+    tr = _tiny_trainer(tmp_path, steps=30)
+    tr.run()
+    hist = tr.metrics_history
+    assert hist[-1]["ce"] < hist[0]["ce"]
+
+
+def test_trainer_restart_resumes_identically(tmp_path):
+    tr1 = _tiny_trainer(tmp_path, steps=6)
+    tr1.run()
+    w1 = np.asarray(tr1.state["params"]["embed"])
+    # new trainer on the same dir restores the final checkpoint
+    tr2 = _tiny_trainer(tmp_path, steps=6)
+    assert tr2.start_step == 6
+    w2 = np.asarray(tr2.state["params"]["embed"])
+    np.testing.assert_allclose(w1, w2)
+    # crash-restart mid-run: train 12 total in one go vs 6+6 resumed
+    tr3 = _tiny_trainer(tmp_path, steps=12)
+    tr3.run()
+    tmp2 = tmp_path / "fresh"
+    tr4 = _tiny_trainer(tmp2, steps=12)
+    tr4.run()
+    np.testing.assert_allclose(
+        np.asarray(tr3.state["params"]["embed"]),
+        np.asarray(tr4.state["params"]["embed"]),
+        atol=1e-5,
+    )
+
+
+def test_compression_error_feedback_converges():
+    """SGD + int8 EF still drives a quadratic to its optimum."""
+    w = jnp.asarray([2.0, -3.0, 1.5])
+    err = {"w": jnp.zeros(3)}
+    params = {"w": w}
+    for _ in range(400):
+        g = {"w": 2 * params["w"]}
+        g, err = apply_error_feedback(g, err)
+        params = {"w": params["w"] - 0.02 * g["w"]}
+    assert float(jnp.max(jnp.abs(params["w"]))) < 5e-2
+
+
+def test_watchdog_flags_stragglers():
+    wd = StragglerWatchdog(window=20, ratio_threshold=2.0, min_samples=5)
+    for step in range(20):
+        wd.observe(step, 0.1)
+    ev = wd.observe(20, 0.5)
+    assert ev is not None and ev.ratio == pytest.approx(5.0)
+    assert wd.observe(21, 0.11) is None
+
+
+def test_ot_alignment_loss_grad_flows():
+    rng = np.random.default_rng(0)
+    L, g, d = 4, 6, 8
+    h_src = jnp.asarray(rng.normal(size=(L * g, d)).astype(np.float32))
+    h_tgt = jnp.asarray(rng.normal(size=(L * g, d)).astype(np.float32) + 2.0)
+
+    def loss(src):
+        v, _ = ot_alignment_loss(src, h_tgt, num_classes=L, group_size=g,
+                                 gamma=5.0, rho=0.5, max_iters=40)
+        return v
+
+    v = loss(h_src)
+    gr = jax.grad(loss)(h_src)
+    assert np.isfinite(float(v)) and float(v) > 0
+    assert float(jnp.max(jnp.abs(gr))) > 0
+    # moving sources toward targets reduces the OT distance
+    v2 = loss(h_src + 0.5 * (jnp.mean(h_tgt, 0) - jnp.mean(h_src, 0)))
+    assert float(v2) < float(v)
+
+
+def test_group_features_by_class_layout():
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32))
+    labels = jnp.asarray([0, 1, 0, 2, 1, 0, 2, 1, 0, 2])
+    out = group_features_by_class(h, labels, num_classes=3, group_size=4)
+    assert out.shape == (12, 4)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_trainer_with_ot_align(tmp_path):
+    tr = _tiny_trainer(tmp_path, steps=4, ot_align=True, ot_align_weight=0.05)
+    tr.run()
+    assert "ot_distance" in tr.metrics_history[-1]
+
+
+def test_trainer_with_compression(tmp_path):
+    tr = _tiny_trainer(tmp_path, steps=4, grad_compression="int8_ef")
+    tr.run()
+    assert np.isfinite(tr.metrics_history[-1]["loss"])
