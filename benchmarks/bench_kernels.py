@@ -1,10 +1,16 @@
-"""Kernel-path microbenchmark: screened vs dense dual gradient on XLA-CPU,
-plus the modeled TPU HBM-traffic saving of the block-masked Pallas kernel.
+"""Kernel-path benchmark: dense vs screened XLA vs the two Pallas grid modes
+(dense grid / compacted grid) across screening densities.
 
-Interpret-mode Pallas timing is meaningless (Python per-block), so the
-wall-clock comparison here uses the XLA paths; the Pallas kernel's benefit
-is reported as bytes-of-C-not-read, which is what the v5e roofline converts
-to time (the kernel is ~1.2 flop/byte, firmly bandwidth-bound).
+Interpret-mode Pallas wall-clock is Python-per-grid-step, so it is reported
+separately (``interpret_wall_us``) and is meaningful only *relatively*: the
+compacted grid issues fewer steps, so its interpret time drops with density
+exactly like its TPU step count would.  The TPU-facing numbers are modeled:
+bytes-of-C read (what the v5e roofline converts to time for this ~1.2
+flop/byte, bandwidth-bound kernel) and grid steps issued (the compact
+kernel's count is read back from its in-kernel step counter, not assumed).
+
+Writes ``BENCH_kernels.json`` — a list of rows, one per density plus one at
+a real mid-optimization iterate — tracked across PRs for perf trajectory.
 """
 from __future__ import annotations
 
@@ -22,12 +28,15 @@ from repro.core.dual import DualProblem, dual_value_and_grad, snapshot_norms
 from repro.core.ot import squared_euclidean_cost
 from repro.core.regularizers import GroupSparseReg
 from repro.data.pipeline import DomainPairConfig, make_domain_pair
+from repro.kernels import ops as kops
+from repro.kernels.gradpsi import build_tile_schedule, gradpsi_pallas, gradpsi_pallas_compact
 
 V5E_HBM = 819e9
 
 
-def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready()
+def _time(fn, *args, iters=10):
+    out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -35,7 +44,81 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters
 
 
-def main(L: int = 64, g: int = 16, n: int = 1024, out: str | None = None):
+def _density_row(alpha, beta, a, b, C_pad, prob, pp, flags, label, *,
+                 t_dense_us, iters=3):
+    """One BENCH row: steps/bytes/wall for each impl at the given flags."""
+    Lt, Nt = pp.grid
+    total = Lt * Nt
+    live = int(jnp.sum(flags != 0))
+    tile_bytes = pp.tile_l * pp.g * pp.tile_n * jnp.dtype(pp.Cp.dtype).itemsize
+
+    # XLA screened reference (masked closed form) at this density
+    mask = jnp.repeat(jnp.repeat(flags == 0, pp.tile_l, 0), pp.tile_n, 1)
+    mask = mask[: prob.num_groups, : prob.n]
+    screened = jax.jit(
+        lambda al, be: dual_value_and_grad(
+            al, be, C_pad, a, b, prob, zero_mask=mask
+        )
+    )
+    t_screened = _time(screened, alpha, beta)
+
+    # pallas kernels, interpret mode (CPU container) — relative wall only
+    alphap, betap = kops.pad_tile_inputs(alpha, beta, pp)
+    kw = dict(num_groups=pp.L_pad, group_size=pp.g,
+              tau=prob.reg.tau, gamma=prob.reg.gamma,
+              tile_l=pp.tile_l, tile_n=pp.tile_n, interpret=True)
+    grid_fn = jax.jit(lambda f: gradpsi_pallas(alphap, betap, pp.Cp, f, **kw))
+    t_grid = _time(grid_fn, flags, iters=iters)
+
+    sched, nact = build_tile_schedule(flags)
+    compact_fn = jax.jit(
+        lambda s_, n_: gradpsi_pallas_compact(alphap, betap, pp.Cp, s_, n_, **kw)
+    )
+    *_, steps = compact_fn(sched, nact)
+    t_compact = _time(compact_fn, sched, nact, iters=iters)
+    steps = int(steps)
+
+    bytes_dense = total * tile_bytes
+    bytes_grid = max(live, 1) * tile_bytes      # skipped steps elide the DMA
+    bytes_compact = steps * tile_bytes
+
+    return {
+        "density": label,
+        "live_tiles": live,
+        "total_tiles": total,
+        "live_frac": round(live / total, 4),
+        "impl": {
+            "xla_dense": {
+                "wall_us": round(t_dense_us, 1),
+                "grid_steps": total,
+                "c_bytes": bytes_dense,
+                "v5e_hbm_us": round(bytes_dense / V5E_HBM * 1e6, 2),
+            },
+            "xla_screened": {
+                "wall_us": round(t_screened * 1e6, 1),
+                "grid_steps": total,
+                "c_bytes": bytes_dense,   # XLA reads all of C, masks after
+                "v5e_hbm_us": round(bytes_dense / V5E_HBM * 1e6, 2),
+            },
+            "pallas_grid": {
+                "interpret_wall_us": round(t_grid * 1e6, 1),
+                "grid_steps": total,
+                "c_bytes": bytes_grid,
+                "v5e_hbm_us": round(bytes_grid / V5E_HBM * 1e6, 2),
+            },
+            "pallas_compact": {
+                "interpret_wall_us": round(t_compact * 1e6, 1),
+                "grid_steps": steps,
+                "c_bytes": bytes_compact,
+                "v5e_hbm_us": round(bytes_compact / V5E_HBM * 1e6, 2),
+            },
+        },
+    }
+
+
+def main(L: int = 64, g: int = 16, n: int = 1024,
+         out: str | None = "BENCH_kernels.json",
+         densities=(1.0, 0.5, 0.25, 0.1, 0.02)):
     Xs, ys, Xt, _ = make_domain_pair(
         DomainPairConfig(num_classes=L, samples_per_class=g, dim=8)
     )
@@ -52,8 +135,24 @@ def main(L: int = 64, g: int = 16, n: int = 1024, out: str | None = None):
     row_mask = jnp.asarray(spec.row_mask().reshape(-1))
     sqrt_g = jnp.asarray(spec.sqrt_sizes())
 
-    # measure screening at a REAL mid-optimization iterate (a random point
-    # screens ~everything and says nothing about the working regime)
+    pp = kops.prepare_padded_problem(C_pad, prob)
+    rng = np.random.default_rng(0)
+    alpha = jnp.asarray(rng.normal(size=spec.m_pad).astype(np.float32) * 0.1)
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32) * 0.1)
+
+    dense = jax.jit(lambda al, be: dual_value_and_grad(al, be, C_pad, a, b, prob))
+    t_dense_us = _time(dense, alpha, beta) * 1e6
+
+    rows = []
+    for d in densities:
+        f = (rng.random(pp.grid) < d).astype(np.int32)
+        rows.append(_density_row(
+            alpha, beta, a, b, C_pad, prob, pp, jnp.asarray(f), d,
+            t_dense_us=t_dense_us,
+        ))
+
+    # one row at a REAL mid-optimization iterate (a random point screens
+    # ~everything and says nothing about the working regime)
     from repro.core.lbfgs import LbfgsOptions
     from repro.core.solver import SolveOptions, solve_dual
 
@@ -63,34 +162,25 @@ def main(L: int = 64, g: int = 16, n: int = 1024, out: str | None = None):
                      lbfgs=LbfgsOptions(max_iters=20, gtol=0.0)),
     )
     st = res.screen_state
-    a2, b2 = res.alpha, res.beta
-    verdict = S.verdicts(st, a2, b2, sqrt_g, reg.tau)
-    zero_frac = float(jnp.mean(verdict == S.ZERO))
+    pstate = kops.pad_screen_state(st, sqrt_g, pp)
+    flags_real = kops.screen_tile_flags(
+        pstate, res.alpha, res.beta, pp, reg.tau
+    )
+    rows.append(_density_row(
+        res.alpha, res.beta, a, b, C_pad, prob, pp, flags_real, "real_iterate",
+        t_dense_us=t_dense_us,
+    ))
 
-    dense = jax.jit(lambda al, be: dual_value_and_grad(al, be, C_pad, a, b, prob))
-    t_dense = _time(dense, a2, b2)
-
-    from repro.core.screening import tile_flags
-    flags = tile_flags(verdict, 8, 128)
-    tile_live = float(jnp.mean(flags))
-    bytes_full = C_pad.size * 4
-    bytes_masked = bytes_full * tile_live
-
-    rows = [{
+    header = {
         "L": spec.num_groups, "g": spec.group_size, "n": n,
-        "zero_frac": round(zero_frac, 4),
-        "tile_live_frac": round(tile_live, 4),
-        "xla_dense_us": round(t_dense * 1e6, 1),
-        "C_bytes_full": int(bytes_full),
-        "C_bytes_masked": int(bytes_masked),
-        "v5e_time_full_us": round(bytes_full / V5E_HBM * 1e6, 2),
-        "v5e_time_masked_us": round(bytes_masked / V5E_HBM * 1e6, 2),
-        # cap at the tile-count granularity: one live tile is the floor
-        "modeled_speedup": round(
-            1.0 / max(tile_live, 1.0 / max(flags.size, 1)), 2
-        ),
-    }]
-    print(json.dumps(rows[0], indent=2))
+        "tile_l": pp.tile_l, "tile_n": pp.tile_n,
+        "backend": jax.default_backend(),
+    }
+    rows = [dict(header, **r) for r in rows]
+    for r in rows:
+        c = r["impl"]["pallas_compact"]
+        print(f"density={r['density']} live={r['live_tiles']}/{r['total_tiles']}"
+              f" compact_steps={c['grid_steps']} compact_bytes={c['c_bytes']}")
     if out:
         with open(out, "w") as f:
             json.dump(rows, f, indent=2)
@@ -102,6 +192,6 @@ if __name__ == "__main__":
     ap.add_argument("--L", type=int, default=64)
     ap.add_argument("--g", type=int, default=16)
     ap.add_argument("--n", type=int, default=1024)
-    ap.add_argument("--out", default="bench_kernels.json")
+    ap.add_argument("--out", default="BENCH_kernels.json")
     args = ap.parse_args()
     main(args.L, args.g, args.n, args.out)

@@ -55,10 +55,13 @@ def main() -> None:
     if "kernels" not in args.skip:
         from benchmarks import bench_kernels
 
-        rows = bench_kernels.main(out="bench_kernels.json")
+        rows = bench_kernels.main(out="BENCH_kernels.json")
         for r in rows:
-            print(f"kernel_gradpsi,{r['xla_dense_us']},"
-                  f"modeled_tpu_speedup={r['modeled_speedup']}x")
+            c = r["impl"]["pallas_compact"]
+            d = r["impl"]["xla_dense"]
+            speedup = round(d["c_bytes"] / max(c["c_bytes"], 1), 2)
+            print(f"kernel_gradpsi_d{r['density']},{c['grid_steps']},"
+                  f"modeled_tpu_speedup={speedup}x")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,17 @@ class DualProblem:
     def m_pad(self) -> int:
         return self.num_groups * self.group_size
 
+    def tile_padded_shape(self, tile_l: int, tile_n: int) -> Tuple[int, int]:
+        """(L_pad, n_pad): group/column counts rounded up to tile multiples.
+
+        The single definition of the kernel-facing problem geometry — the
+        padded cost matrix, the screening snapshots, and the tile-flag grid
+        all derive their shapes from it (see kernels/ops.py).
+        """
+        L_pad = -(-self.num_groups // tile_l) * tile_l
+        n_pad = -(-self.n // tile_n) * tile_n
+        return L_pad, n_pad
+
 
 def _group_norms_relu(F: jnp.ndarray, L: int, g: int) -> jnp.ndarray:
     """Z[l, j] = ||[F]_+ rows of group l, column j||_2  for F of (L*g, n)."""

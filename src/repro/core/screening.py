@@ -63,13 +63,28 @@ def init_state(m_pad: int, n: int, L: int, dtype=jnp.float32) -> ScreenState:
     )
 
 
-def _grouped_norms(x: jnp.ndarray, L: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def grouped_norms(x: jnp.ndarray, L: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(||[x_[l]]_+||, ||x_[l]||, ||[x_[l]]_-||) per group for x of (L*g,)."""
     xg = x.reshape(L, -1)
     plus = jnp.linalg.norm(jnp.maximum(xg, 0.0), axis=1)
     full = jnp.linalg.norm(xg, axis=1)
     neg = jnp.linalg.norm(jnp.minimum(xg, 0.0), axis=1)
     return plus, full, neg
+
+
+def delta_norms(
+    state: ScreenState,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-eval displacement norms feeding Eqs. 6/7:
+    ``(||[d_alpha]_+||, ||d_alpha||, ||[d_alpha]_-||)`` per group plus the raw
+    ``d_beta`` vector.  O(L(g+1) + n) — this is the only per-evaluation cost
+    of screening once the (L, n) snapshots are frozen.
+    """
+    L = state.z_snap.shape[0]
+    da_plus, da_full, da_neg = grouped_norms(alpha - state.alpha_snap, L)
+    return da_plus, da_full, da_neg, beta - state.beta_snap
 
 
 def upper_bound(
@@ -83,9 +98,8 @@ def upper_bound(
     O(L (n + g)) given snapshots: two grouped reductions + one rank-1
     broadcast add over the (L, n) matrix.
     """
-    L = state.z_snap.shape[0]
-    da_plus, _, _ = _grouped_norms(alpha - state.alpha_snap, L)
-    db_plus = jnp.maximum(beta - state.beta_snap, 0.0)
+    da_plus, _, _, db = delta_norms(state, alpha, beta)
+    db_plus = jnp.maximum(db, 0.0)
     return state.z_snap + da_plus[:, None] + sqrt_g[:, None] * db_plus[None, :]
 
 
@@ -100,9 +114,7 @@ def lower_bound(
             - o~ - ||[d_alpha_[l]]_-|| - sqrt(g_l)[d_beta_j]_-_norm
     (for scalar d_beta_j:  ||[d_beta_j]_-||_2 = relu(-d_beta_j)).
     """
-    L = state.k_snap.shape[0]
-    _, da_full, da_neg = _grouped_norms(alpha - state.alpha_snap, L)
-    db = beta - state.beta_snap
+    _, da_full, da_neg, db = delta_norms(state, alpha, beta)
     db_abs = jnp.abs(db)
     db_negn = jnp.maximum(-db, 0.0)
     return (
@@ -179,9 +191,9 @@ def tile_flags(verdict: jnp.ndarray, tile_l: int, tile_n: int) -> jnp.ndarray:
 
 
 def skip_stats(verdict: jnp.ndarray) -> dict:
-    """Counters matching the paper's Theorem 1 bookkeeping."""
+    """Counters matching the paper's Theorem 1 bookkeeping (host-side ints)."""
     return {
-        "zero": jnp.sum(verdict == ZERO),
-        "check": jnp.sum(verdict == CHECK),
-        "active": jnp.sum(verdict == ACTIVE),
+        "zero": int(jnp.sum(verdict == ZERO)),
+        "check": int(jnp.sum(verdict == CHECK)),
+        "active": int(jnp.sum(verdict == ACTIVE)),
     }

@@ -44,6 +44,8 @@ class SolveOptions:
     snapshot_every: int = 10          # r in Algorithm 1
     max_rounds: int = 200             # cap on s_r
     grad_impl: str = "screened"       # 'dense' | 'screened' | 'pallas'
+    pallas_impl: str = "auto"         # 'grid' | 'compact' | 'auto': kernel
+    #   grid mode for grad_impl='pallas' (see kernels/ops.py docstring)
     tight_active_refresh: bool = False  # beyond-paper: refresh N *after* the
     #   snapshot update (Delta = 0 => lower bound k~ - o~, strictly tighter
     #   than Eq. 7 evaluated pre-update; N stays a performance hint so
@@ -88,8 +90,17 @@ def make_value_and_grad(
     sqrt_g: jnp.ndarray,
     grad_impl: str,
     screen_state: Optional[screening.ScreenState],
+    padded=None,                       # kernels.ops.PaddedProblem (pallas)
+    pallas_impl: str = "auto",
 ):
-    """Build the (negated, minimized) value_and_grad oracle for L-BFGS."""
+    """Build the (negated, minimized) value_and_grad oracle for L-BFGS.
+
+    For the pallas impl the screening state is padded to the kernel grid
+    HERE — once per snapshot round — so each evaluation only computes the
+    O(L + n) delta norms, runs the fused screening kernel for tile flags,
+    and feeds them straight to the gradient kernel.  The padded cost matrix
+    (``padded``) is prepared once per solve by :func:`solve_dual`.
+    """
     m_pad = prob.m_pad
 
     if grad_impl == "dense":
@@ -121,13 +132,18 @@ def make_value_and_grad(
         assert screen_state is not None
         from repro.kernels import ops as kops
 
+        pp = padded
+        if pp is None:
+            pp = kops.prepare_padded_problem(C, prob)
+        pstate = kops.pad_screen_state(screen_state, sqrt_g, pp)
+
         def vag(x):
             alpha, beta = _split(x, m_pad)
-            verdict = screening.verdicts(
-                screen_state, alpha, beta, sqrt_g, prob.reg.tau
+            flags = kops.screen_tile_flags(
+                pstate, alpha, beta, pp, prob.reg.tau
             )
-            v, ga, gb = kops.dual_value_and_grad(
-                alpha, beta, C, a, b, verdict, prob
+            v, ga, gb = kops.dual_value_and_grad_padded(
+                alpha, beta, a, b, flags, pp, prob, impl=pallas_impl
             )
             return -v, -jnp.concatenate([ga, gb])
 
@@ -152,6 +168,15 @@ def _solve_jit(
     m_pad, n, L = prob.m_pad, prob.n, prob.num_groups
     x0 = jnp.zeros((m_pad + n,), C.dtype)
 
+    # one-time padded-problem preparation: the padded copy of C (the largest
+    # array in the problem) is made here, outside the round loop, instead of
+    # once per gradient evaluation.
+    padded = None
+    if opts.grad_impl == "pallas":
+        from repro.kernels import ops as kops
+
+        padded = kops.prepare_padded_problem(C, prob)
+
     screen0 = screening.init_state(m_pad, n, L, C.dtype)
     # valid snapshots at the init point (alpha = beta = 0)
     z0, k0, o0 = snapshot_norms(
@@ -159,7 +184,10 @@ def _solve_jit(
     )
     screen0 = screening.take_snapshot(screen0, x0[:m_pad], x0[m_pad:], z0, k0, o0)
 
-    vag0 = make_value_and_grad(C, a, b, prob, sqrt_g, opts.grad_impl, screen0)
+    vag0 = make_value_and_grad(
+        C, a, b, prob, sqrt_g, opts.grad_impl, screen0,
+        padded=padded, pallas_impl=opts.pallas_impl,
+    )
     lb0 = init_state(x0, vag0, opts.lbfgs)
 
     # stats: [zero, check, active] verdict counts accumulated per round
@@ -167,7 +195,10 @@ def _solve_jit(
 
     def round_body(carry):
         lb, scr, rnd, stats = carry
-        vag = make_value_and_grad(C, a, b, prob, sqrt_g, opts.grad_impl, scr)
+        vag = make_value_and_grad(
+            C, a, b, prob, sqrt_g, opts.grad_impl, scr,
+            padded=padded, pallas_impl=opts.pallas_impl,
+        )
         lb = run_segment(vag, lb, opts.snapshot_every, opts.lbfgs)
 
         alpha, beta = _split(lb.x, m_pad)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused, block-masked dual gradient for group-sparse OT.
+"""Pallas TPU kernels: fused, screened dual gradient for group-sparse OT.
 
 This is the paper's Algorithm 2 adapted to the TPU memory hierarchy (see
 DESIGN.md §2).  One kernel instance owns a (TILE_L groups x g rows) x TILE_N
@@ -11,19 +11,28 @@ columns tile and fuses the whole gradient pipeline in VMEM:
     psi contribution                (closed form in Z)
 
 Screening enters through per-tile skip flags (int32, 0 = every (l, j) in the
-tile is certified-zero by the Eq. 6 upper bound).  Skipped tiles:
+tile is certified-zero by the Eq. 6 upper bound).  Two execution modes share
+the math (DESIGN.md §3):
 
-  * run no compute (``@pl.when(flag != 0)``), and
-  * remap their C-tile index to (l, 0, 0) — consecutive skipped steps then
-    request the same block, so Mosaic's revisit elision drops the HBM->VMEM
-    DMA.  That converts the paper's "skipped FLOPs" into skipped HBM traffic,
-    which is what matters for this memory-bound kernel (~1.2 FLOP/byte).
+``gradpsi_pallas`` — dense grid (L_tiles, N_tiles).  Skipped tiles run no
+  compute (``@pl.when``) and remap their C-tile index to (l, 0, 0), so
+  consecutive skipped steps request the same block and Mosaic's revisit
+  elision drops the HBM->VMEM DMA.  FLOPs and HBM traffic scale with
+  surviving tiles, but the *grid itself* still issues one step per tile.
 
-Grid = (L_tiles, N_tiles), N innermost so grad_alpha accumulates per l-run.
+``gradpsi_pallas_compact`` — compacted grid.  :func:`build_tile_schedule`
+  packs the coordinates of surviving tiles into a scalar-prefetched list
+  (on-device cumsum + scatter) and the kernel runs a *dynamic* 1-D grid of
+  exactly ``max(num_active, 1)`` steps, so grid steps — not just FLOPs and
+  DMAs — are proportional to surviving tiles.  Each step writes its partial
+  results into a per-step slot; a masked scatter-add outside the kernel
+  assembles them (unvisited slots hold garbage and are dropped, never read).
+
 Outputs are partials assembled by ops.py:
-  ga_part  (L, g)        accumulated over the j-run for each l tile,
-  gb_part  (L_tiles, n)  one row of column-sums per l tile (reduced outside),
-  psi_sum  (1, 1)        accumulated over the whole grid.
+  T_rowsum (m_pad,), T_colsum (n,), psi_total scalar — callers form
+  value = alpha@a + beta@b - psi, grad_alpha = a - rowsum, grad_beta = b -
+  colsum.  The compact kernel additionally returns the grid-step count
+  actually issued (the scaling contract asserted by tests).
 """
 from __future__ import annotations
 
@@ -38,6 +47,12 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_TILE_N = 128
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # C tile + T tile + slack
 
+# Above this fraction of live tiles the dense grid wins: compaction pays an
+# O(T) schedule build plus per-step partial-output traffic, while the dense
+# grid's only overhead for a skipped tile is an empty (DMA-elided) grid step.
+# See DESIGN.md §3 for the model behind the 0.5 crossover.
+COMPACT_DENSITY_THRESHOLD = 0.5
+
 
 def pick_tile_l(g: int, tile_n: int, dtype_bytes: int = 4) -> int:
     """Largest TILE_L (power of two, <=8) whose working set fits VMEM."""
@@ -49,8 +64,37 @@ def pick_tile_l(g: int, tile_n: int, dtype_bytes: int = 4) -> int:
     return 1
 
 
-def _kernel(flags_ref, alpha_ref, beta_ref, c_ref,
-            ga_ref, gb_ref, psi_ref, *, tau: float, gamma: float):
+def resolve_tile_l(L: int, g: int, tile_n: int, dtype_bytes: int = 4) -> int:
+    """VMEM-fitting TILE_L, halved until it divides L (minimizes padding).
+
+    Shared by ops.py and the solver so the screening flag grid and the
+    gradient grid always agree on tiling.
+    """
+    t = pick_tile_l(g, tile_n, dtype_bytes)
+    t = min(t, L)
+    while t > 1 and L % t:
+        t //= 2
+    return max(t, 1)
+
+
+def _gradpsi_tile(alpha, beta, c, *, tau: float, gamma: float):
+    """Shared per-tile math: returns (T (TL, g, TN), psi_sum scalar)."""
+    f = alpha[:, :, None] + beta[None, None, :] - c
+    fp = jnp.maximum(f, 0.0)
+    zsq = jnp.sum(fp * fp, axis=1)                   # (TL, TN)
+    z = jnp.sqrt(zsq)
+    on = z > tau
+    zs = jnp.where(on, z, 1.0)
+    s = jnp.where(on, 1.0 - tau / zs, 0.0)           # (TL, TN)
+    t = s[:, None, :] * fp * (1.0 / gamma)           # (TL, g, TN)
+    # psi closed form (regularizers.psi_from_z)
+    mu_s_z = (tau / gamma) * s * zs                  # mu*s*z with tau=mu*gamma
+    psi = jnp.where(on, s * zs * zs / gamma * (1.0 - 0.5 * s) - mu_s_z, 0.0)
+    return t, jnp.sum(psi)
+
+
+def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref,
+                  ga_ref, gb_ref, psi_ref, *, tau: float, gamma: float):
     l = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -71,18 +115,8 @@ def _kernel(flags_ref, alpha_ref, beta_ref, c_ref,
         alpha = alpha_ref[...].astype(jnp.float32)       # (TL, g)
         beta = beta_ref[...].astype(jnp.float32)         # (TN,)
         c = c_ref[...].astype(jnp.float32)               # (TL, g, TN)
-        f = alpha[:, :, None] + beta[None, None, :] - c
-        fp = jnp.maximum(f, 0.0)
-        zsq = jnp.sum(fp * fp, axis=1)                   # (TL, TN)
-        z = jnp.sqrt(zsq)
-        on = z > tau
-        zs = jnp.where(on, z, 1.0)
-        s = jnp.where(on, 1.0 - tau / zs, 0.0)           # (TL, TN)
-        t = s[:, None, :] * fp * (1.0 / gamma)           # (TL, g, TN)
-        # psi closed form (regularizers.psi_from_z)
-        mu_s_z = (tau / gamma) * s * zs                  # mu*s*z with tau=mu*gamma
-        psi = jnp.where(on, s * zs * zs / gamma * (1.0 - 0.5 * s) - mu_s_z, 0.0)
-        psi_ref[0, 0] += jnp.sum(psi)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+        psi_ref[0, 0] += psi
         ga_ref[...] += jnp.sum(t, axis=2)                # (TL, g)
         gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]   # (1, TN)
 
@@ -106,10 +140,8 @@ def gradpsi_pallas(
     tile_n: int = DEFAULT_TILE_N,
     interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (T_rowsum (m_pad,), T_colsum (n,), psi_total scalar).
+    """Dense-grid kernel: returns (T_rowsum (m_pad,), T_colsum (n,), psi).
 
-    Callers assemble: value = alpha@a + beta@b - psi_total,
-                      grad_alpha = a - T_rowsum,  grad_beta = b - T_colsum.
     n and L must be padded to tile multiples (ops.py handles padding).
     """
     L, g = num_groups, group_size
@@ -145,7 +177,7 @@ def gradpsi_pallas(
     )
 
     ga_part, gb_part, psi = pl.pallas_call(
-        functools.partial(_kernel, tau=float(tau), gamma=float(gamma)),
+        functools.partial(_dense_kernel, tau=float(tau), gamma=float(gamma)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((L, g), jnp.float32),
@@ -156,3 +188,134 @@ def gradpsi_pallas(
     )(flags, alpha_g, beta, C3)
 
     return ga_part.reshape(-1), jnp.sum(gb_part, axis=0), psi[0, 0]
+
+
+def build_tile_schedule(flags: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact the (L_tiles, N_tiles) flag matrix into an active-tile list.
+
+    Returns ``(sched (2, T) int32, num_active () int32)`` where
+    ``sched[:, s] = (l, j)`` of the s-th surviving tile in row-major order
+    and entries past ``num_active`` repeat the last surviving coordinate
+    (so the pipeline's block lookahead lands on an already-resident tile).
+    All on-device: one cumsum + one scatter, O(T) with T = L_tiles * N_tiles.
+    """
+    Lt, Nt = flags.shape
+    T = Lt * Nt
+    flat = flags.reshape(-1) != 0
+    num_active = jnp.sum(flat).astype(jnp.int32)
+    pos = jnp.cumsum(flat).astype(jnp.int32) - 1      # rank among survivors
+    idx = jnp.arange(T, dtype=jnp.int32)
+    dest = jnp.where(flat, pos, T)                    # dead tiles -> dropped
+    order = jnp.zeros((T,), jnp.int32).at[dest].set(idx, mode="drop")
+    last = jnp.where(num_active > 0, order[jnp.maximum(num_active - 1, 0)], 0)
+    order = jnp.where(idx < num_active, order, last)
+    sched = jnp.stack([order // Nt, order % Nt])
+    return sched, num_active
+
+
+def _compact_kernel(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
+                    ga_ref, gb_ref, psi_ref, steps_ref,
+                    *, tau: float, gamma: float):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _():
+        steps_ref[0, 0] = 0
+
+    steps_ref[0, 0] += 1
+
+    alpha = alpha_ref[...].astype(jnp.float32)           # (TL, g)
+    beta = beta_ref[...].astype(jnp.float32)             # (TN,)
+    c = c_ref[...].astype(jnp.float32)                   # (TL, g, TN)
+    t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+    # per-step slots: every visited block is written exactly once, so no
+    # cross-step accumulation state and no uninitialized revisits.
+    ga_ref[...] = jnp.sum(t, axis=2)[None]               # (1, TL, g)
+    gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]       # (1, TN)
+    psi_ref[0, 0] = psi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "tau", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_pallas_compact(
+    alpha: jnp.ndarray,        # (m_pad,) fp32
+    beta: jnp.ndarray,         # (n,) fp32
+    C: jnp.ndarray,            # (m_pad, n) fp32 or bf16
+    sched: jnp.ndarray,        # (2, T) int32 from build_tile_schedule
+    num_active: jnp.ndarray,   # () int32 surviving-tile count
+    *,
+    num_groups: int,
+    group_size: int,
+    tau: float,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compacted-grid kernel: grid steps scale with surviving tiles.
+
+    Returns (T_rowsum (m_pad,), T_colsum (n,), psi, steps_issued ()).
+    With ``num_active == 0`` one sentinel step runs (a grid cannot be empty)
+    and its outputs are masked to exact zeros.
+    """
+    L, g = num_groups, group_size
+    n = beta.shape[0]
+    if tile_l == 0:
+        tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    Lt, Nt = L // tile_l, n // tile_n
+    T = Lt * Nt
+    assert sched.shape == (2, T), (sched.shape, (2, T))
+
+    alpha_g = alpha.reshape(L, g)
+    C3 = C.reshape(L, g, n)
+    num_active = num_active.astype(jnp.int32)
+    nact = num_active.reshape(1)
+    num_steps = jnp.maximum(num_active, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_steps,),
+        in_specs=[
+            pl.BlockSpec((tile_l, g), lambda s, sc, na: (sc[0, s], 0)),
+            pl.BlockSpec((tile_n,), lambda s, sc, na: (sc[1, s],)),
+            pl.BlockSpec((tile_l, g, tile_n),
+                         lambda s, sc, na: (sc[0, s], 0, sc[1, s])),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda s, sc, na: (s, 0, 0)),
+            pl.BlockSpec((1, tile_n), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (0, 0)),
+        ],
+    )
+
+    ga_steps, gb_steps, psi_steps, steps = pl.pallas_call(
+        functools.partial(_compact_kernel, tau=float(tau), gamma=float(gamma)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, tile_l, g), jnp.float32),
+            jax.ShapeDtypeStruct((T, tile_n), jnp.float32),
+            jax.ShapeDtypeStruct((T, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sched, nact, alpha_g, beta, C3)
+
+    # assemble: slots past num_active were never visited (garbage) — route
+    # them to an out-of-range segment so the scatter drops them.
+    idx = jnp.arange(T, dtype=jnp.int32)
+    valid = idx < num_active
+    seg_l = jnp.where(valid, sched[0], Lt)
+    seg_n = jnp.where(valid, sched[1], Nt)
+    ga = jnp.zeros((Lt, tile_l, g), jnp.float32).at[seg_l].add(
+        ga_steps, mode="drop"
+    )
+    gb = jnp.zeros((Nt, tile_n), jnp.float32).at[seg_n].add(
+        gb_steps, mode="drop"
+    )
+    psi = jnp.sum(jnp.where(valid[:, None], psi_steps, 0.0))
+    return ga.reshape(-1), gb.reshape(-1), psi, steps[0, 0]

@@ -5,18 +5,45 @@ Handles: interpret-mode selection (CPU container -> interpret=True; real TPU
 kernel partials into the (value, grad_alpha, grad_beta) triple the solver
 consumes.  Padded tiles are marked skipped in the flag matrix, so they cost
 nothing and contribute exact zeros.
+
+The hot path is structured around two prepared states (DESIGN.md §4):
+
+  * :class:`PaddedProblem` — the tile-padded cost matrix plus geometry,
+    built ONCE per solve by :func:`prepare_padded_problem` (previously every
+    gradient evaluation re-padded and copied C, the largest array in the
+    problem).
+  * :class:`PaddedScreenState` — tile-padded screening snapshots, built once
+    per snapshot round by :func:`pad_screen_state`; per evaluation only the
+    O(L + n) delta-norm vectors are computed and fed to the fused screening
+    kernel, which hands tile flags straight to the gradient kernel without
+    materializing the (L, n) verdict matrix in HBM.
+
+Gradient execution mode (``impl``):
+  'grid'     dense (L_tiles, N_tiles) grid, skipped tiles elide DMA/compute,
+  'compact'  dynamic grid over the compacted surviving-tile list,
+  'auto'     runtime switch on surviving-tile density
+             (<= COMPACT_DENSITY_THRESHOLD -> compact).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import screening
 from repro.core.dual import DualProblem
-from repro.core.screening import ZERO
-from repro.kernels.gradpsi import DEFAULT_TILE_N, gradpsi_pallas, pick_tile_l
+from repro.core.screening import ScreenState
+from repro.kernels.gradpsi import (
+    COMPACT_DENSITY_THRESHOLD,
+    DEFAULT_TILE_N,
+    build_tile_schedule,
+    gradpsi_pallas,
+    gradpsi_pallas_compact,
+    resolve_tile_l,
+)
 from repro.kernels.screen import screen_pallas
 
 
@@ -35,9 +62,207 @@ def _pad_axis(x: jnp.ndarray, axis: int, mult: int, value=0.0):
     return jnp.pad(x, pads, constant_values=value)
 
 
+def _meta():
+    return dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedProblem:
+    """One-time tile-padded problem geometry + the padded cost matrix.
+
+    ``Cp`` is (L_pad * g, n_pad) with +PAD_COST in the padded area, so
+    f = alpha + beta - c < 0 there and padded entries contribute exact
+    zeros even inside partially-real tiles.
+    """
+
+    Cp: jnp.ndarray
+    L: int = _meta()
+    g: int = _meta()
+    n: int = _meta()
+    L_pad: int = _meta()
+    n_pad: int = _meta()
+    tile_l: int = _meta()
+    tile_n: int = _meta()
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (self.L_pad // self.tile_l, self.n_pad // self.tile_n)
+
+    @property
+    def num_tiles(self) -> int:
+        lt, nt = self.grid
+        return lt * nt
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PaddedScreenState:
+    """Tile-padded screening snapshots (fixed within a snapshot round).
+
+    Padded rows/columns carry z~ = k~ = o~ = 0 and sqrt_g = 0, so their
+    upper bound is 0 <= tau (ZERO) and their lower bound never certifies
+    ACTIVE — padded-only tiles always flag as skipped.
+    """
+
+    z: jnp.ndarray              # (L_pad, n_pad)
+    k: jnp.ndarray              # (L_pad, n_pad)
+    o: jnp.ndarray              # (L_pad, n_pad)
+    act: jnp.ndarray            # (L_pad, n_pad) int8
+    sqrt_g: jnp.ndarray         # (L_pad,)
+    alpha_snap: jnp.ndarray     # (m_pad,)  unpadded snapshot point
+    beta_snap: jnp.ndarray      # (n,)
+
+
+def prepare_padded_problem(
+    C: jnp.ndarray,
+    prob: DualProblem,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+) -> PaddedProblem:
+    """Pad C to tile multiples ONCE (owned by solve_dual, reused per eval)."""
+    from repro.core.groups import PAD_COST
+
+    L, g, n = prob.num_groups, prob.group_size, prob.n
+    if tile_l == 0:
+        tile_l = resolve_tile_l(L, g, tile_n, jnp.dtype(C.dtype).itemsize)
+    L_pad, n_pad = prob.tile_padded_shape(tile_l, tile_n)
+    Cp = _pad_axis(
+        _pad_axis(C.reshape(L, g, n), 2, tile_n, PAD_COST), 0, tile_l, PAD_COST
+    )
+    return PaddedProblem(
+        Cp=Cp.reshape(L_pad * g, n_pad),
+        L=L, g=g, n=n, L_pad=L_pad, n_pad=n_pad,
+        tile_l=tile_l, tile_n=tile_n,
+    )
+
+
+def pad_tile_inputs(
+    alpha: jnp.ndarray, beta: jnp.ndarray, pp: PaddedProblem
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pad the per-eval dual variables to the kernel grid of ``pp``.
+
+    The single definition of the kernel input layout — shared by
+    :func:`dual_value_and_grad_padded` and the benchmarks.
+    """
+    alphap = _pad_axis(
+        alpha.reshape(pp.L, pp.g), 0, pp.tile_l, 0.0
+    ).reshape(-1)
+    betap = _pad_axis(beta, 0, pp.tile_n, 0.0)
+    return alphap, betap
+
+
+def pad_screen_state(
+    state: ScreenState, sqrt_g: jnp.ndarray, pp: PaddedProblem
+) -> PaddedScreenState:
+    """Pad the (L, n) snapshots to the kernel grid once per snapshot round."""
+    pad2 = lambda x: _pad_axis(
+        _pad_axis(x, 1, pp.tile_n, 0.0), 0, pp.tile_l, 0.0
+    )
+    return PaddedScreenState(
+        z=pad2(state.z_snap),
+        k=pad2(state.k_snap),
+        o=pad2(state.o_snap),
+        act=pad2(state.active.astype(jnp.int8)),
+        sqrt_g=_pad_axis(sqrt_g, 0, pp.tile_l, 0.0),
+        alpha_snap=state.alpha_snap,
+        beta_snap=state.beta_snap,
+    )
+
+
+def screen_tile_flags(
+    pstate: PaddedScreenState,
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    pp: PaddedProblem,
+    tau: float,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-eval fused screening -> (L_tiles, N_tiles) skip flags.
+
+    Computes the O(L + n) delta norms in jnp, then one Pallas pass over the
+    padded bound matrices; the verdict matrix never reaches HBM.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    L = pp.L
+    da_plus, da_full, da_neg = screening.grouped_norms(
+        alpha - pstate.alpha_snap, L
+    )
+    db = beta - pstate.beta_snap
+    padL = lambda x: _pad_axis(x, 0, pp.tile_l, 0.0)
+    padN = lambda x: _pad_axis(x, 0, pp.tile_n, 0.0)
+    _, flags = screen_pallas(
+        pstate.z, pstate.k, pstate.o, pstate.act,
+        padL(da_plus), padL(da_full), padL(da_neg), padN(db), pstate.sqrt_g,
+        tau=float(tau), tile_l=pp.tile_l, tile_n=pp.tile_n,
+        interpret=interpret, emit_verdict=False,
+    )
+    return flags
+
+
+@functools.partial(
+    jax.jit, static_argnames=("prob", "impl", "interpret")
+)
+def dual_value_and_grad_padded(
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    flags: jnp.ndarray,             # (L_tiles, N_tiles) int32 skip flags
+    pp: PaddedProblem,
+    prob: DualProblem,
+    impl: str = "auto",
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Screened Pallas evaluation against a prepared (pre-padded) problem.
+
+    Returns (value, grad_alpha, grad_beta) for the MAXIMIZATION problem —
+    identical to repro.core.dual.dual_value_and_grad with the screened mask
+    (Theorem 2: masked entries are provably zero).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    L, g = pp.L, pp.g
+    assert flags.shape == pp.grid, (flags.shape, pp.grid)
+
+    alphap, betap = pad_tile_inputs(alpha, beta, pp)
+    kw = dict(
+        num_groups=pp.L_pad, group_size=g,
+        tau=prob.reg.tau, gamma=prob.reg.gamma,
+        tile_l=pp.tile_l, tile_n=pp.tile_n, interpret=interpret,
+    )
+
+    def run_grid(flags):
+        rowsum, colsum, psi = gradpsi_pallas(alphap, betap, pp.Cp, flags, **kw)
+        return rowsum, colsum, psi, jnp.int32(pp.num_tiles)
+
+    def run_compact(flags):
+        sched, nact = build_tile_schedule(flags)
+        return gradpsi_pallas_compact(alphap, betap, pp.Cp, sched, nact, **kw)
+
+    if impl == "grid":
+        rowsum, colsum, psi, _ = run_grid(flags)
+    elif impl == "compact":
+        rowsum, colsum, psi, _ = run_compact(flags)
+    elif impl == "auto":
+        live = jnp.sum(flags != 0)
+        use_compact = live <= COMPACT_DENSITY_THRESHOLD * pp.num_tiles
+        rowsum, colsum, psi, _ = jax.lax.cond(
+            use_compact, run_compact, run_grid, flags
+        )
+    else:
+        raise ValueError(f"unknown pallas impl: {impl}")
+
+    rowsum = rowsum.reshape(pp.L_pad, g)[:L].reshape(-1)
+    colsum = colsum[: pp.n]
+    value = alpha @ a + beta @ b - psi
+    return value, a - rowsum, b - colsum
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("prob", "tile_l", "tile_n", "interpret"),
+    static_argnames=("prob", "tile_l", "tile_n", "interpret", "impl"),
 )
 def dual_value_and_grad(
     alpha: jnp.ndarray,
@@ -50,56 +275,19 @@ def dual_value_and_grad(
     tile_l: int = 0,
     tile_n: int = DEFAULT_TILE_N,
     interpret: bool | None = None,
+    impl: str = "auto",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Block-masked Pallas evaluation of the dual value and gradients.
+    """Block-masked Pallas evaluation from a raw verdict matrix.
 
-    Returns (value, grad_alpha, grad_beta) for the MAXIMIZATION problem —
-    identical to repro.core.dual.dual_value_and_grad with the screened mask
-    (Theorem 2: masked entries are provably zero).
+    Convenience wrapper (tests, one-shot evaluations): pads C per call.  The
+    solver's hot loop uses :func:`prepare_padded_problem` +
+    :func:`dual_value_and_grad_padded` instead.
     """
-    if interpret is None:
-        interpret = default_interpret()
-    L, g, n = prob.num_groups, prob.group_size, prob.n
-    if tile_l == 0:
-        tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
-        tile_l = min(tile_l, L) if L % min(tile_l, L) == 0 else 1
-        while L % tile_l:
-            tile_l //= 2
-        tile_l = max(tile_l, 1)
-
-    # pad n and L to tile multiples; padded area is flagged skipped AND gets
-    # +PAD_COST so f = alpha + beta - c < 0 there => exact-zero contribution
-    # even inside partially-real tiles.
-    from repro.core.groups import PAD_COST
-
-    n_pad = -(-n // tile_n) * tile_n
-    L_pad = -(-L // tile_l) * tile_l
-    Cp = _pad_axis(
-        _pad_axis(C.reshape(L, g, n), 2, tile_n, PAD_COST), 0, tile_l, PAD_COST
+    pp = prepare_padded_problem(C, prob, tile_l=tile_l, tile_n=tile_n)
+    flags = screening.tile_flags(verdict, pp.tile_l, pp.tile_n)
+    return dual_value_and_grad_padded(
+        alpha, beta, a, b, flags, pp, prob, impl=impl, interpret=interpret
     )
-    alphap = _pad_axis(alpha.reshape(L, g), 0, tile_l, 0.0).reshape(-1)
-    betap = _pad_axis(beta, 0, tile_n, 0.0)
-    vp = _pad_axis(_pad_axis(verdict, 1, tile_n, ZERO), 0, tile_l, ZERO)
-    vt = vp.reshape(L_pad // tile_l, tile_l, n_pad // tile_n, tile_n)
-    flags = jnp.any(vt != ZERO, axis=(1, 3)).astype(jnp.int32)
-
-    rowsum, colsum, psi = gradpsi_pallas(
-        alphap,
-        betap,
-        Cp.reshape(L_pad * g, n_pad),
-        flags,
-        num_groups=L_pad,
-        group_size=g,
-        tau=prob.reg.tau,
-        gamma=prob.reg.gamma,
-        tile_l=tile_l,
-        tile_n=tile_n,
-        interpret=interpret,
-    )
-    rowsum = rowsum.reshape(L_pad, g)[:L].reshape(-1)
-    colsum = colsum[:n]
-    value = alpha @ a + beta @ b - psi
-    return value, a - rowsum, b - colsum
 
 
 @functools.partial(

@@ -47,6 +47,20 @@ def gradpsi_ref(
     )
 
 
+def build_tile_schedule_ref(flags) -> Tuple[jnp.ndarray, int]:
+    """Oracle for gradpsi.build_tile_schedule: plain Python compaction."""
+    import numpy as np
+
+    flags = np.asarray(flags)
+    Lt, Nt = flags.shape
+    T = Lt * Nt
+    coords = [(l, j) for l in range(Lt) for j in range(Nt) if flags[l, j]]
+    num_active = len(coords)
+    pad = coords[-1] if coords else (0, 0)
+    coords = coords + [pad] * (T - num_active)
+    return jnp.asarray(np.array(coords, np.int32).T.reshape(2, T)), num_active
+
+
 def screen_ref(
     z_snap, k_snap, o_snap, active, da_plus, da_full, da_neg, db, sqrt_g,
     *, tau: float, tile_l: int, tile_n: int,

@@ -13,12 +13,15 @@ Rank-1 "outer broadcast" pass over the (L, n) bound matrices:
 One VPU pass, O(L n) bytes — this is the O(|L|(n+g)) cost of Lemma 3/6
 (the per-group delta norms are O(L g) and computed outside in plain jnp).
 The kernel also emits the per-tile OR-reduction consumed by gradpsi's skip
-flags, so the verdict matrix never has to round-trip through HBM twice.
+flags.  With ``emit_verdict=False`` (the solver's steady-state gradient
+path) only the tile flags are written back to HBM: the (L, n) verdict
+matrix lives and dies in VMEM and never round-trips between screening and
+the gradient kernel.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +30,8 @@ from jax.experimental import pallas as pl
 from repro.core.screening import ZERO, CHECK, ACTIVE
 
 
-def _kernel(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
-            db_ref, sg_ref, verdict_ref, flag_ref, *, tau: float):
+def _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
+                  db_ref, sg_ref, *, tau: float):
     dap = dap_ref[...][:, None]                       # (TL, 1)
     daf = daf_ref[...][:, None]
     dan = dan_ref[...][:, None]
@@ -49,12 +52,27 @@ def _kernel(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
     v = jnp.where(active, ACTIVE, v)
     # lower bound can also certify non-zero outside N within this eval
     v = jnp.where(jnp.logical_and(v == CHECK, zlow > tau), ACTIVE, v)
-    verdict_ref[...] = v.astype(jnp.int32)
+    return v.astype(jnp.int32)
+
+
+def _kernel_full(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
+                 db_ref, sg_ref, verdict_ref, flag_ref, *, tau: float):
+    v = _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref,
+                      dan_ref, db_ref, sg_ref, tau=tau)
+    verdict_ref[...] = v
+    flag_ref[0, 0] = jnp.any(v != ZERO).astype(jnp.int32)
+
+
+def _kernel_flags(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
+                  db_ref, sg_ref, flag_ref, *, tau: float):
+    v = _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref,
+                      dan_ref, db_ref, sg_ref, tau=tau)
     flag_ref[0, 0] = jnp.any(v != ZERO).astype(jnp.int32)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("tau", "tile_l", "tile_n", "interpret")
+    jax.jit,
+    static_argnames=("tau", "tile_l", "tile_n", "interpret", "emit_verdict"),
 )
 def screen_pallas(
     z_snap: jnp.ndarray,       # (L, n)
@@ -71,8 +89,13 @@ def screen_pallas(
     tile_l: int = 8,
     tile_n: int = 128,
     interpret: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (verdict (L, n) int32, tile_flags (L/tile_l, n/tile_n) int32)."""
+    emit_verdict: bool = True,
+) -> Tuple[Optional[jnp.ndarray], jnp.ndarray]:
+    """Returns (verdict (L, n) int32 | None, tile_flags (L/tl, n/tn) int32).
+
+    ``emit_verdict=False`` skips the (L, n) HBM write-back entirely; only
+    the tile-flag reduction leaves the chip.
+    """
     L, n = z_snap.shape
     assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
     grid = (L // tile_l, n // tile_n)
@@ -80,17 +103,30 @@ def screen_pallas(
     row = pl.BlockSpec((tile_l,), lambda l, j: (l,))
     col = pl.BlockSpec((tile_n,), lambda l, j: (j,))
     mat = pl.BlockSpec((tile_l, tile_n), lambda l, j: (l, j))
+    flag = pl.BlockSpec((1, 1), lambda l, j: (l, j))
 
-    verdict, flags = pl.pallas_call(
-        functools.partial(_kernel, tau=float(tau)),
-        grid=grid,
-        in_specs=[mat, mat, mat, mat, row, row, row, col, row],
-        out_specs=[mat, pl.BlockSpec((1, 1), lambda l, j: (l, j))],
-        out_shape=[
+    if emit_verdict:
+        kernel = _kernel_full
+        out_specs = [mat, flag]
+        out_shape = [
             jax.ShapeDtypeStruct((L, n), jnp.int32),
             jax.ShapeDtypeStruct(grid, jnp.int32),
-        ],
+        ]
+    else:
+        kernel = _kernel_flags
+        out_specs = [flag]
+        out_shape = [jax.ShapeDtypeStruct(grid, jnp.int32)]
+
+    outs = pl.pallas_call(
+        functools.partial(kernel, tau=float(tau)),
+        grid=grid,
+        in_specs=[mat, mat, mat, mat, row, row, row, col, row],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(z_snap, k_snap, o_snap, active.astype(jnp.int8),
       da_plus, da_full, da_neg, db, sqrt_g)
-    return verdict, flags
+
+    if emit_verdict:
+        return outs[0], outs[1]
+    return None, outs[0]

@@ -98,7 +98,9 @@ def gpipe_forward(
         return outputs
 
     spec_params = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    from repro.utils.compat import shard_map
+
+    fn = shard_map(
         staged,
         mesh=mesh,
         in_specs=(spec_params, P()),      # stages sharded; input replicated

@@ -4,6 +4,7 @@ from repro.utils.tree import (
     tree_global_norm,
     tree_zeros_like,
 )
+from repro.utils.compat import make_mesh, mesh_axis_types_kwargs
 from repro.utils.logging import get_logger
 
 __all__ = [
@@ -11,5 +12,7 @@ __all__ = [
     "tree_count",
     "tree_global_norm",
     "tree_zeros_like",
+    "make_mesh",
+    "mesh_axis_types_kwargs",
     "get_logger",
 ]

@@ -49,8 +49,8 @@ def test_distributed_ot_matches_single_device():
         reg = GroupSparseReg.from_rho(1.0, 0.6)
         opts = SolveOptions(lbfgs=LbfgsOptions(max_iters=300))
         res1 = solve_dual(jnp.asarray(C_pad), jnp.asarray(a), jnp.asarray(b), spec, reg, opts)
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((2,4), ("data","model"))
         res2 = solve_dual_distributed(C_pad, a, b, spec, reg, mesh, opts)
         assert abs(res1.value-res2.value) < 1e-5, (res1.value, res2.value)
         print("MATCH", res1.value, res2.value)
@@ -84,8 +84,8 @@ def test_sharded_train_step_matches_single_device():
 
         s1, m1 = jax.jit(step)(state, batch)
 
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((4,2), ("data","model"))
         rules = default_rules(mesh.axis_names)
         st_axes = {"params": axes, "opt": opt_state_logical_axes(axes, tcfg.optimizer, "master" in opt)}
         sh = sharding_tree(st_axes, rules, mesh, shapes=state)
@@ -111,10 +111,9 @@ def test_elastic_remesh_preserves_values():
 
         state = {"w": jnp.arange(64.0).reshape(8, 8)}
         axes = {"w": ("embed", "mlp")}
-        mesh1 = jax.make_mesh((2,2), ("data","model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
-        mesh2 = jax.make_mesh((4,2), ("data","model"),
-                              axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh1 = make_mesh((2,2), ("data","model"))
+        mesh2 = make_mesh((4,2), ("data","model"))
         r1 = default_rules(mesh1.axis_names)
         s1 = remesh_state(state, mesh1, r1, axes)
         s2 = remesh_state(s1, mesh2, default_rules(mesh2.axis_names), axes)
@@ -135,8 +134,8 @@ def test_dual_step_collectives_are_small():
         from repro.core.dual import DualProblem
         from repro.core.regularizers import GroupSparseReg
 
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((2,4), ("data","model"))
         prob = DualProblem(16, 8, 256, GroupSparseReg(1.0, 1.0))
         lowered = lower_dual_step(mesh, prob)
         compiled = lowered.compile()

@@ -1,0 +1,224 @@
+"""Compacted-grid gradient path: parity, scheduling, and the step-count
+scaling contract (grid steps proportional to surviving tiles).
+
+All kernels run in interpret mode; oracles are the pure-jnp refs plus the
+dense closed form in core/dual.py.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import groups as G
+from repro.core import screening as S
+from repro.core.dual import DualProblem, dual_value_and_grad, snapshot_norms
+from repro.core.lbfgs import LbfgsOptions
+from repro.core.ot import squared_euclidean_cost
+from repro.core.regularizers import GroupSparseReg
+from repro.core.solver import SolveOptions, solve_dual
+from repro.kernels import ops as kops
+from repro.kernels.gradpsi import (
+    build_tile_schedule,
+    gradpsi_pallas,
+    gradpsi_pallas_compact,
+    resolve_tile_l,
+)
+from repro.kernels.ref import build_tile_schedule_ref, gradpsi_ref
+
+
+def _rand_problem(rng, L, g, n):
+    alpha = jnp.asarray(rng.normal(size=L * g).astype(np.float32))
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    C = jnp.asarray((rng.normal(size=(L * g, n)) ** 2).astype(np.float32))
+    return alpha, beta, C
+
+
+def _flags(rng, grid, pattern):
+    Lt, Nt = grid
+    if pattern == "all_zero":
+        f = np.zeros(grid, np.int32)
+    elif pattern == "all_active":
+        f = np.ones(grid, np.int32)
+    elif pattern == "single":
+        f = np.zeros(grid, np.int32)
+        f[rng.integers(0, Lt), rng.integers(0, Nt)] = 1
+    elif pattern == "random":
+        f = (rng.random(grid) < 0.4).astype(np.int32)
+    else:
+        raise ValueError(pattern)
+    return jnp.asarray(f)
+
+
+PATTERNS = ["all_zero", "all_active", "single", "random"]
+
+
+@pytest.mark.parametrize("L,g,n,tl,tn", [
+    (16, 8, 256, 8, 128),
+    (8, 16, 384, 4, 128),
+    (32, 8, 128, 8, 128),
+])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_compact_matches_dense_grid_and_oracle(L, g, n, tl, tn, pattern):
+    rng = np.random.default_rng(hash((L, g, n, pattern)) % 2**32)
+    alpha, beta, C = _rand_problem(rng, L, g, n)
+    grid = (L // tl, n // tn)
+    flags = _flags(rng, grid, pattern)
+    kw = dict(num_groups=L, group_size=g, tau=0.3, gamma=0.5,
+              tile_l=tl, tile_n=tn)
+    want = gradpsi_ref(alpha, beta, C, flags, **kw)
+    dense = gradpsi_pallas(alpha, beta, C, flags, interpret=True, **kw)
+    sched, nact = build_tile_schedule(flags)
+    rs, cs, psi, steps = gradpsi_pallas_compact(
+        alpha, beta, C, sched, nact, interpret=True, **kw
+    )
+    for w, d, c in zip(want, dense, (rs, cs, psi)):
+        np.testing.assert_allclose(np.asarray(c), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(d),
+                                   rtol=1e-5, atol=1e-5)
+    # scaling contract: the kernel issued one grid step per surviving tile
+    # (one sentinel step when none survive), not one per (l, j) tile.
+    assert int(steps) == max(int(nact), 1)
+
+
+def test_step_count_scales_with_surviving_tiles():
+    rng = np.random.default_rng(11)
+    L, g, n, tl, tn = 16, 8, 512, 8, 128
+    alpha, beta, C = _rand_problem(rng, L, g, n)
+    grid = (L // tl, n // tn)
+    total = grid[0] * grid[1]
+    kw = dict(num_groups=L, group_size=g, tau=0.3, gamma=0.5,
+              tile_l=tl, tile_n=tn)
+    for k in [0, 1, 3, total]:
+        f = np.zeros(total, np.int32)
+        f[rng.choice(total, size=k, replace=False)] = 1
+        flags = jnp.asarray(f.reshape(grid))
+        sched, nact = build_tile_schedule(flags)
+        *_, steps = gradpsi_pallas_compact(
+            alpha, beta, C, sched, nact, interpret=True, **kw
+        )
+        assert int(steps) == max(k, 1), (k, int(steps))
+
+
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_build_tile_schedule_matches_ref(pattern):
+    rng = np.random.default_rng(hash(pattern) % 2**32)
+    flags = _flags(rng, (6, 7), pattern)
+    sched, nact = build_tile_schedule(flags)
+    sched_ref, nact_ref = build_tile_schedule_ref(flags)
+    assert int(nact) == nact_ref
+    np.testing.assert_array_equal(np.asarray(sched), np.asarray(sched_ref))
+
+
+@pytest.mark.parametrize("L,g,n", [
+    (16, 8, 200),      # ragged n
+    (10, 8, 200),      # ragged L and n
+    (3, 8, 50),        # tiny, heavy padding both axes
+])
+@pytest.mark.parametrize("impl", ["grid", "compact", "auto"])
+def test_ops_impls_match_closed_form_ragged(L, g, n, impl):
+    """Padded wrapper parity on non-tile-multiple shapes, all impls."""
+    rng = np.random.default_rng(hash((L, g, n, impl)) % 2**32)
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None]
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None]
+    C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+    C /= C.max()
+    spec = G.spec_from_labels(labels, pad_to=8)
+    C_pad = jnp.asarray(G.pad_cost_matrix(C, labels, spec))
+    a = jnp.asarray(G.pad_marginal(np.full(m, 1 / m, np.float32), labels, spec))
+    b = jnp.asarray(np.full(n, 1 / n, np.float32))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    prob = DualProblem(spec.num_groups, spec.group_size, n, reg)
+    alpha = jnp.asarray(rng.normal(size=spec.m_pad).astype(np.float32) * 0.3)
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32) * 0.3)
+
+    verdict = jnp.full((spec.num_groups, n), S.CHECK, jnp.int32)
+    v0, (ga0, gb0) = dual_value_and_grad(alpha, beta, C_pad, a, b, prob)
+    v1, ga1, gb1 = kops.dual_value_and_grad(
+        alpha, beta, C_pad, a, b, verdict, prob, impl=impl
+    )
+    np.testing.assert_allclose(float(v1), float(v0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ga1), np.asarray(ga0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_padded_problem_and_fused_screening_path():
+    """The solver-facing prepared path (prepare_padded_problem +
+    pad_screen_state + screen_tile_flags + dual_value_and_grad_padded)
+    reproduces the dense closed form at a real screened iterate."""
+    rng = np.random.default_rng(21)
+    L, g, n = 16, 8, 200
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None]
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None]
+    C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+    C /= C.max()
+    spec = G.spec_from_labels(labels, pad_to=8)
+    C_pad = jnp.asarray(G.pad_cost_matrix(C, labels, spec))
+    a = jnp.asarray(G.pad_marginal(np.full(m, 1 / m, np.float32), labels, spec))
+    b = jnp.asarray(np.full(n, 1 / n, np.float32))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    prob = DualProblem(spec.num_groups, spec.group_size, n, reg)
+    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
+    sqrt_g = jnp.asarray(spec.sqrt_sizes())
+
+    alpha = jnp.asarray(rng.normal(size=spec.m_pad).astype(np.float32) * 0.3)
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32) * 0.3)
+    z, k, o = snapshot_norms(alpha, beta, C_pad, prob, row_mask)
+    st = S.take_snapshot(S.init_state(spec.m_pad, n, L), alpha, beta, z, k, o)
+    a2, b2 = alpha + 0.01, beta - 0.02
+
+    pp = kops.prepare_padded_problem(C_pad, prob)
+    pstate = kops.pad_screen_state(st, sqrt_g, pp)
+    flags = kops.screen_tile_flags(pstate, a2, b2, pp, reg.tau)
+    # fused flags agree with the XLA verdict reduction
+    verd = S.verdicts(st, a2, b2, sqrt_g, reg.tau)
+    np.testing.assert_array_equal(
+        np.asarray(flags), np.asarray(S.tile_flags(verd, pp.tile_l, pp.tile_n))
+    )
+    assert int(jnp.sum(verd == S.ZERO)) > 0  # screening actually fires
+
+    v0, (ga0, gb0) = dual_value_and_grad(a2, b2, C_pad, a, b, prob)
+    for impl in ("grid", "compact", "auto"):
+        v1, ga1, gb1 = kops.dual_value_and_grad_padded(
+            a2, b2, a, b, flags, pp, prob, impl=impl
+        )
+        np.testing.assert_allclose(float(v1), float(v0), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(ga1), np.asarray(ga0), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gb1), np.asarray(gb0), atol=1e-4)
+
+
+@pytest.mark.parametrize("pallas_impl", ["grid", "compact", "auto"])
+def test_solver_pallas_impls_match_dense_solution(pallas_impl):
+    rng = np.random.default_rng(4)
+    L, g, n = 4, 8, 32
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None] * 2.0
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 2.0
+    C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+    C /= C.max()
+    spec = G.spec_from_labels(labels, pad_to=8)
+    C_pad = jnp.asarray(G.pad_cost_matrix(C, labels, spec))
+    a = jnp.asarray(G.pad_marginal(np.full(m, 1 / m, np.float32), labels, spec))
+    b = jnp.asarray(np.full(n, 1 / n, np.float32))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    rd = solve_dual(C_pad, a, b, spec, reg,
+                    SolveOptions(grad_impl="dense",
+                                 lbfgs=LbfgsOptions(max_iters=250)))
+    rp = solve_dual(C_pad, a, b, spec, reg,
+                    SolveOptions(grad_impl="pallas", pallas_impl=pallas_impl,
+                                 lbfgs=LbfgsOptions(max_iters=250)))
+    np.testing.assert_allclose(rd.value, rp.value, rtol=2e-5, atol=2e-5)
+
+
+def test_resolve_tile_l_divides():
+    for L in (1, 3, 8, 10, 12, 20, 64):
+        for g in (8, 64, 512):
+            t = resolve_tile_l(L, g, 128)
+            assert t >= 1 and L % t == 0 or t == 1
+            assert L % t == 0 or t == 1

@@ -41,8 +41,8 @@ def test_gpipe_matches_sequential():
         for s in range(P):
             ref = jax.vmap(lambda h: stage_fn({"w": Ws[s], "b": bs[s]}, h))(ref)
 
-        mesh = jax.make_mesh((P,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.utils.compat import make_mesh
+        mesh = make_mesh((P,), ("pod",))
         # stage axis leading [P]: shard_map splits one stage per pod
         sp = {"w": Ws, "b": bs}
         out = gpipe_forward(stage_fn, sp, x, mesh, axis="pod")
