@@ -7,7 +7,6 @@ with/without-lower-bound ablation (Fig. D).
 from __future__ import annotations
 
 import argparse
-import json
 
 import numpy as np
 
@@ -35,11 +34,13 @@ def _problem(L=10, g=50, seed=0):
     )
 
 
-def main(gamma: float = 0.1, out: str | None = None):
-    C, a, b, spec = _problem()
+def main(gamma: float = 0.1, out: str | None = None, smoke: bool = False):
+    C, a, b, spec = _problem(L=5, g=10) if smoke else _problem()
     rows = []
+    rhos = (0.8,) if smoke else (0.2, 0.4, 0.6, 0.8)
+    gammas_d = (0.1,) if smoke else (0.001, 0.01, 0.1)
     print(f"Figure 6: gradient-computation counts (gamma={gamma}):")
-    for rho in (0.2, 0.4, 0.6, 0.8):
+    for rho in rhos:
         reg = GroupSparseReg.from_rho(gamma, rho)
         r0 = origin_solve(C, a, b, spec, reg)
         r1 = fast_solve(C, a, b, spec, reg)
@@ -58,8 +59,8 @@ def main(gamma: float = 0.1, out: str | None = None):
               f"ours={r1.n_blocks_computed} ({100*frac:.2f}%) "
               f"active={r1.n_blocks_active}")
 
-    print(f"Figure D: lower-bound (idea 2) ablation (|L|=10):")
-    for gamma_d in (0.001, 0.01, 0.1):
+    print("Figure D: lower-bound (idea 2) ablation (|L|=10):")
+    for gamma_d in gammas_d:
         reg = GroupSparseReg.from_rho(gamma_d, 0.8)
         r0 = origin_solve(C, a, b, spec, reg)
         r_no = fast_solve(C, a, b, spec, reg, use_lower=False)
@@ -75,14 +76,19 @@ def main(gamma: float = 0.1, out: str | None = None):
         print(f"  gamma={gamma_d}: gain w/o lower={rows[-1]['gain_no_lower']}x, "
               f"with lower={rows[-1]['gain_with_lower']}x")
     if out:
-        with open(out, "w") as f:
-            json.dump(rows, f, indent=2)
+        try:
+            from benchmarks.bench_io import write_bench_json
+        except ImportError:          # invoked as a script from benchmarks/
+            from bench_io import write_bench_json
+
+        write_bench_json(out, rows)
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--gamma", type=float, default=0.1)
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="bench_gradcount.json")
     args = ap.parse_args()
-    main(args.gamma, args.out)
+    main(args.gamma, args.out, smoke=args.smoke)

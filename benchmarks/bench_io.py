@@ -1,0 +1,35 @@
+"""Stable JSON artifacts for the benchmark suite.
+
+Every ``BENCH_*.json`` / ``bench_*.json`` the harness writes goes through
+:func:`write_bench_json`: a top-level ``{"schema_version": N, "rows":
+[...]}`` envelope, keys sorted, fixed indent — so the CI regression gate
+(`benchmarks/check_regression.py`) and PR diffs compare cleanly across
+runs instead of churning on dict ordering.
+
+``read_bench_json`` also accepts the pre-envelope format (a bare row
+list, schema_version 0) so the gate can diff against artifacts committed
+before the envelope existed.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Tuple
+
+BENCH_SCHEMA_VERSION = 2
+
+
+def write_bench_json(path: str, rows: Any) -> None:
+    """Write rows under the versioned envelope with a stable key order."""
+    payload = {"schema_version": BENCH_SCHEMA_VERSION, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def read_bench_json(path: str) -> Tuple[Any, int]:
+    """Read a benchmark artifact -> (rows, schema_version)."""
+    with open(path) as f:
+        payload = json.load(f)
+    if isinstance(payload, dict) and "schema_version" in payload:
+        return payload["rows"], int(payload["schema_version"])
+    return payload, 0

@@ -7,7 +7,6 @@ table (class counts trimmed by default; --full goes to 1280 like the paper).
 from __future__ import annotations
 
 import argparse
-import json
 
 import numpy as np
 
@@ -18,10 +17,13 @@ from repro.core.regularizers import GroupSparseReg
 from repro.data.pipeline import DomainPairConfig, make_domain_pair
 
 
-def main(full: bool = False, out: str | None = None):
-    counts = [10, 20, 40, 80, 160, 320, 640, 1280] if full else [10, 20, 40, 80]
-    gammas = [1e-2, 1e-1, 1e0, 1e1] if full else [0.1, 1.0]
-    rhos = [0.2, 0.4, 0.6, 0.8] if full else [0.4, 0.8]
+def main(full: bool = False, out: str | None = None, smoke: bool = False):
+    if smoke:
+        counts, gammas, rhos = [10], [1.0], [0.8]
+    else:
+        counts = [10, 20, 40, 80, 160, 320, 640, 1280] if full else [10, 20, 40, 80]
+        gammas = [1e-2, 1e-1, 1e0, 1e1] if full else [0.1, 1.0]
+        rhos = [0.2, 0.4, 0.6, 0.8] if full else [0.4, 0.8]
     rows = []
     print("Table 1: max objective after convergence (origin vs ours)")
     for L in counts:
@@ -50,14 +52,19 @@ def main(full: bool = False, out: str | None = None):
         print(f"  |L|={L:5d}: origin={best_o:.6e} ours={best_f:.6e} "
               f"match={rows[-1]['match']}")
     if out:
-        with open(out, "w") as f:
-            json.dump(rows, f, indent=2)
+        try:
+            from benchmarks.bench_io import write_bench_json
+        except ImportError:          # invoked as a script from benchmarks/
+            from bench_io import write_bench_json
+
+        write_bench_json(out, rows)
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="bench_objective.json")
     args = ap.parse_args()
-    main(args.full, args.out)
+    main(args.full, args.out, smoke=args.smoke)

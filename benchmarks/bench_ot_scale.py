@@ -88,7 +88,6 @@ def measure_screening(L=1280, g=10, n=None, gamma=0.1, rho=0.8, rounds=12):
 
 
 def lower_production(L=1024, g=128, n=131072):
-    import jax
 
     from repro.core.distributed import lower_dual_step
     from repro.core.dual import DualProblem

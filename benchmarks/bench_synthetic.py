@@ -8,7 +8,6 @@ CPU-container budgets; --full restores the paper's grid).
 from __future__ import annotations
 
 import argparse
-import json
 
 import numpy as np
 
@@ -60,29 +59,41 @@ def run_sweep(sweep: str, values, gammas, rhos, maxiter=1000):
     return rows
 
 
-def main(full: bool = False, out: str | None = None):
-    if full:
+def main(full: bool = False, out: str | None = None, smoke: bool = False):
+    if smoke:
+        values_L, values_g = [10], [10]
+        gammas, rhos = [1.0], [0.8]
+        maxiter = 200
+    elif full:
         values_L = [10, 20, 40, 80, 160, 320]
+        values_g = [10, 20, 40, 80, 160]
         gammas = [1e-2, 1e-1, 1e0, 1e1]
         rhos = [0.2, 0.4, 0.6, 0.8]
+        maxiter = 1000
     else:
         values_L = [10, 20, 40, 80]
+        values_g = [10, 20, 40]
         gammas = [0.1, 1.0]
         rhos = [0.4, 0.8]
+        maxiter = 1000
     print("Figure 2 (|L| sweep, g=10):")
-    rows = run_sweep("L", values_L, gammas, rhos)
+    rows = run_sweep("L", values_L, gammas, rhos, maxiter=maxiter)
     print("Figure A (g sweep, |L|=10):")
-    values_g = [10, 20, 40, 80, 160] if full else [10, 20, 40]
-    rows += run_sweep("g", values_g, gammas, rhos)
+    rows += run_sweep("g", values_g, gammas, rhos, maxiter=maxiter)
     if out:
-        with open(out, "w") as f:
-            json.dump(rows, f, indent=2)
+        try:
+            from benchmarks.bench_io import write_bench_json
+        except ImportError:          # invoked as a script from benchmarks/
+            from bench_io import write_bench_json
+
+        write_bench_json(out, rows)
     return rows
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="bench_synthetic.json")
     args = ap.parse_args()
-    main(args.full, args.out)
+    main(args.full, args.out, smoke=args.smoke)

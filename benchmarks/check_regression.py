@@ -1,0 +1,118 @@
+"""CI perf-regression gate on the kernel benchmark's deterministic counters.
+
+  PYTHONPATH=src python benchmarks/check_regression.py [--baseline PATH]
+
+Re-runs ``bench_kernels`` at the geometry recorded in the committed
+``BENCH_kernels.json`` and compares the DETERMINISTIC counters — grid
+steps issued, modeled C-bytes (HBM traffic), live/total tile counts —
+row by row against the baseline.  Any counter moving more than
+``--tolerance`` (default 20%) against the committed value fails the gate:
+those counters are pure functions of the screening/compaction logic, so a
+jump means the scaling contract (work proportional to surviving tiles)
+regressed.  Wall-clock fields are REPORTED for context but never gated —
+CI machines are too noisy for that.
+
+Exit code 0 = clean, 1 = regression (or unreadable/mismatched baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+# counters that must be stable; everything else (wall_us, interpret_wall_us,
+# v5e_hbm_us is derived from c_bytes) is informational
+GATED_FIELDS = ("grid_steps", "c_bytes")
+ROW_FIELDS = ("live_tiles", "total_tiles")
+
+
+def _row_key(row: dict) -> str:
+    return str(row.get("density"))
+
+
+def compare(baseline_rows, fresh_rows, tolerance: float):
+    """Yield (key, field, old, new, ok) for every gated counter."""
+    fresh_by_key = {_row_key(r): r for r in fresh_rows}
+    for row in baseline_rows:
+        key = _row_key(row)
+        fresh = fresh_by_key.get(key)
+        if fresh is None:
+            yield key, "<row>", "present", "missing", False
+            continue
+        for f in ROW_FIELDS:
+            if f in row:
+                old, new = row[f], fresh.get(f)
+                ok = new is not None and _within(old, new, tolerance)
+                yield key, f, old, new, ok
+        for impl, counters in row.get("impl", {}).items():
+            fresh_impl = fresh.get("impl", {}).get(impl, {})
+            for f in GATED_FIELDS:
+                if f in counters:
+                    old, new = counters[f], fresh_impl.get(f)
+                    ok = new is not None and _within(old, new, tolerance)
+                    yield key, f"{impl}.{f}", old, new, ok
+
+
+def _within(old, new, tolerance: float) -> bool:
+    if old == new:
+        return True
+    denom = max(abs(float(old)), 1.0)
+    return abs(float(new) - float(old)) / denom <= tolerance
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_kernels.json")
+    ap.add_argument("--tolerance", type=float, default=0.20)
+    args = ap.parse_args()
+
+    from benchmarks.bench_io import read_bench_json
+
+    try:
+        baseline_rows, version = read_bench_json(args.baseline)
+    except (OSError, ValueError) as e:
+        print(f"REGRESSION GATE: cannot read baseline {args.baseline}: {e}")
+        return 1
+    if not baseline_rows:
+        print("REGRESSION GATE: baseline has no rows")
+        return 1
+
+    head = baseline_rows[0]
+    L, g, n = head["L"], head["g"], head["n"]
+    print(f"baseline: {args.baseline} (schema_version={version}, "
+          f"L={L} g={g} n={n}, {len(baseline_rows)} rows)")
+
+    from benchmarks import bench_kernels
+
+    fresh_rows = bench_kernels.main(L=L, g=g, n=n, out=None)
+
+    failures = []
+    for key, field, old, new, ok in compare(
+        baseline_rows, fresh_rows, args.tolerance
+    ):
+        status = "ok" if ok else "REGRESSION"
+        print(f"  [{status}] density={key} {field}: {old} -> {new}")
+        if not ok:
+            failures.append((key, field, old, new))
+
+    # wall-clock context (never gated)
+    for row in fresh_rows:
+        for impl, counters in row.get("impl", {}).items():
+            for f in ("wall_us", "interpret_wall_us"):
+                if f in counters:
+                    print(f"  (info) density={row.get('density')} "
+                          f"{impl}.{f}={counters[f]}")
+
+    if failures:
+        print(f"REGRESSION GATE: {len(failures)} counter(s) moved more than "
+              f"{args.tolerance:.0%} vs {args.baseline}")
+        return 1
+    print("REGRESSION GATE: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,14 @@ All computations use the uniform padded group layout from
 :mod:`repro.core.groups`: the cost matrix is (m_pad, n) with m_pad = L * g,
 padded rows carrying +PAD_COST so they never contribute.
 
+Every function in this module is *batch-polymorphic*: inputs may carry any
+leading batch dims (``alpha (..., m_pad)``, ``beta (..., n)``,
+``C (..., m_pad, n)``), and all reductions run over trailing axes.  The
+dual is separable across problems, so a batch axis is nothing more than a
+leading dim — and because a solo call and a batched call execute the same
+per-problem reduction shapes, their results match bitwise (the contract
+behind ``solve_batch``; see tests/test_solve_batch.py).
+
 Three gradient implementations share this module's plumbing:
 
   * ``dense``      -- full O(m n) jnp computation (the "origin" method).
@@ -23,10 +31,8 @@ only zero entries that the closed form would also produce as zero.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.regularizers import GroupSparseReg, psi_from_z, scale_from_z
@@ -64,11 +70,18 @@ class DualProblem:
 
 
 def _group_norms_relu(F: jnp.ndarray, L: int, g: int) -> jnp.ndarray:
-    """Z[l, j] = ||[F]_+ rows of group l, column j||_2  for F of (L*g, n)."""
+    """Z[l, j] = ||[F]_+ rows of group l, column j||_2 for F of (..., L*g, n)."""
     Fp = jnp.maximum(F, 0.0)
-    Fg = Fp.reshape(L, g, -1)
+    Fg = Fp.reshape(F.shape[:-2] + (L, g, F.shape[-1]))
     # tiny clamp keeps sqrt' finite at 0 so the AD test-oracle stays NaN-free
-    return jnp.sqrt(jnp.maximum(jnp.sum(Fg * Fg, axis=1), jnp.finfo(F.dtype).tiny))
+    return jnp.sqrt(
+        jnp.maximum(jnp.sum(Fg * Fg, axis=-2), jnp.finfo(F.dtype).tiny)
+    )
+
+
+def _outer_f(alpha: jnp.ndarray, beta: jnp.ndarray, C: jnp.ndarray):
+    """f = alpha + beta_j - c with leading batch dims: (..., m_pad, n)."""
+    return alpha[..., :, None] + beta[..., None, :] - C
 
 
 def dual_value_and_grad(
@@ -82,29 +95,36 @@ def dual_value_and_grad(
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
     """Dense closed-form value and gradient of the (maximization) dual.
 
-    zero_mask: optional (L, n) bool, True where the gradient block is *known*
-      to be zero (screened).  Entries are forced to exact zero — by Lemma 2
-      this does not change the result; it exists so the screened path and the
-      dense path share one code path in tests.
+    All inputs may carry leading batch dims (alpha (..., m_pad), C
+    (..., m_pad, n), ...); value is then (...,) and grads are batched.
+
+    zero_mask: optional (..., L, n) bool, True where the gradient block is
+      *known* to be zero (screened).  Entries are forced to exact zero — by
+      Lemma 2 this does not change the result; it exists so the screened
+      path and the dense path share one code path in tests.
 
     Returns (value, (grad_alpha, grad_beta)) for the MAXIMIZATION problem.
     """
     L, g = prob.num_groups, prob.group_size
-    F = alpha[:, None] + beta[None, :] - C          # (m_pad, n)
-    Z = _group_norms_relu(F, L, g)                  # (L, n)
-    s = scale_from_z(Z, prob.reg)                   # (L, n)
+    F = _outer_f(alpha, beta, C)                    # (..., m_pad, n)
+    Z = _group_norms_relu(F, L, g)                  # (..., L, n)
+    s = scale_from_z(Z, prob.reg)                   # (..., L, n)
     if zero_mask is not None:
         s = jnp.where(zero_mask, 0.0, s)
-    # T = grad psi per column = s * [F]_+ / gamma, shape (m_pad, n)
+    # T = grad psi per column = s * [F]_+ / gamma, shape (..., m_pad, n)
     T = (
-        jnp.repeat(s, g, axis=0) * jnp.maximum(F, 0.0) / prob.reg.gamma
+        jnp.repeat(s, g, axis=-2) * jnp.maximum(F, 0.0) / prob.reg.gamma
     )
     psi = psi_from_z(Z, prob.reg)
     if zero_mask is not None:
         psi = jnp.where(zero_mask, 0.0, psi)
-    value = alpha @ a + beta @ b - jnp.sum(psi)
-    grad_alpha = a - jnp.sum(T, axis=1)
-    grad_beta = b - jnp.sum(T, axis=0)
+    value = (
+        jnp.sum(alpha * a, axis=-1)
+        + jnp.sum(beta * b, axis=-1)
+        - jnp.sum(psi, axis=(-2, -1))
+    )
+    grad_alpha = a - jnp.sum(T, axis=-1)
+    grad_beta = b - jnp.sum(T, axis=-2)
     return value, (grad_alpha, grad_beta)
 
 
@@ -114,19 +134,23 @@ def plan_from_duals(
     C: jnp.ndarray,
     prob: DualProblem,
 ) -> jnp.ndarray:
-    """Recover the primal transportation plan T* (paper: t_j* = grad psi(f_j))."""
+    """Recover the primal transportation plan T* (paper: t_j* = grad psi(f_j)).
+
+    Batch-polymorphic: (..., m_pad), (..., n), (..., m_pad, n) inputs give a
+    (..., m_pad, n) plan.
+    """
     L, g = prob.num_groups, prob.group_size
-    F = alpha[:, None] + beta[None, :] - C
+    F = _outer_f(alpha, beta, C)
     Z = _group_norms_relu(F, L, g)
     s = scale_from_z(Z, prob.reg)
-    return jnp.repeat(s, g, axis=0) * jnp.maximum(F, 0.0) / prob.reg.gamma
+    return jnp.repeat(s, g, axis=-2) * jnp.maximum(F, 0.0) / prob.reg.gamma
 
 
 def group_norm_matrix(
     alpha: jnp.ndarray, beta: jnp.ndarray, C: jnp.ndarray, prob: DualProblem
 ) -> jnp.ndarray:
-    """Exact Z (L, n) — used for snapshots z~ in Definition 1."""
-    F = alpha[:, None] + beta[None, :] - C
+    """Exact Z (..., L, n) — used for snapshots z~ in Definition 1."""
+    F = _outer_f(alpha, beta, C)
     return _group_norms_relu(F, prob.num_groups, prob.group_size)
 
 
@@ -137,11 +161,15 @@ def snapshot_norms(
     prob: DualProblem,
     row_mask: jnp.ndarray,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Snapshot quantities of Definitions 1-2:  (z~, k~, o~), each (L, n).
+    """Snapshot quantities of Definitions 1-2:  (z~, k~, o~), each (..., L, n).
 
       z~[l,j] = ||[f_[l]]_+||_2      (relu -> padding rows vanish naturally)
       k~[l,j] = ||f_[l]||_2          over REAL rows only (row_mask)
       o~[l,j] = ||[f_[l]]_-||_2      over REAL rows only
+
+    ``row_mask`` is (..., m_pad) (broadcast over any leading batch dims, or
+    batched per problem — the serving engine packs problems with different
+    true group sizes into one batch).
 
     Masking k~/o~ to real rows keeps the bounds tight: padded rows carry
     f ~ -PAD_COST which would otherwise blow up k~ and o~ and (through fp32
@@ -150,13 +178,13 @@ def snapshot_norms(
     grad == 0 throughout; see groups.py docstring).
     """
     L, g = prob.num_groups, prob.group_size
-    F = alpha[:, None] + beta[None, :] - C
-    Fg = F.reshape(L, g, -1)
-    mask = row_mask.reshape(L, g, 1)
+    F = _outer_f(alpha, beta, C)
+    Fg = F.reshape(F.shape[:-2] + (L, g, F.shape[-1]))
+    mask = row_mask.reshape(row_mask.shape[:-1] + (L, g, 1))
     Fm = jnp.where(mask, Fg, 0.0)
-    z = jnp.sqrt(jnp.sum(jnp.square(jnp.maximum(Fm, 0.0)), axis=1))
-    k = jnp.sqrt(jnp.sum(jnp.square(Fm), axis=1))
-    o = jnp.sqrt(jnp.sum(jnp.square(jnp.minimum(Fm, 0.0)), axis=1))
+    z = jnp.sqrt(jnp.sum(jnp.square(jnp.maximum(Fm, 0.0)), axis=-2))
+    k = jnp.sqrt(jnp.sum(jnp.square(Fm), axis=-2))
+    o = jnp.sqrt(jnp.sum(jnp.square(jnp.minimum(Fm, 0.0)), axis=-2))
     return z, k, o
 
 

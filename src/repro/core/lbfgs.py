@@ -1,22 +1,36 @@
-"""Pure-JAX L-BFGS (two-loop recursion, backtracking Armijo line search).
+"""Pure-JAX L-BFGS (two-loop recursion, strong-Wolfe line search), batched.
 
 No optax / jaxopt in this environment, and the solver must (a) live on
-device, (b) shard under shard_map, and (c) expose per-iteration hooks for the
-paper's snapshot/screening schedule.  So we implement L-BFGS directly with
+device, (b) shard under shard_map, (c) expose per-iteration hooks for the
+paper's snapshot/screening schedule, and (d) advance a BATCH of independent
+problems in lock-step (the dual is separable across problems, so batching
+is just a leading axis).  So we implement L-BFGS directly with
 ``jax.lax``-native control flow and fixed-size circular history buffers.
 
-Conventions: we MINIMIZE ``fun`` (the OT dual is maximized by passing its
-negation).  Parameters are a flat fp32 vector; the OT solver concatenates
-(alpha, beta).
+The implementation is written once, batched: every array in
+:class:`LbfgsState` carries a leading batch axis ``B`` and every scalar of
+the textbook algorithm (objective, step size, line-search phase, ...)
+becomes a ``(B,)`` vector.  Control flow that branches per problem in the
+sequential algorithm (line-search bracketing/zoom, curvature-pair
+rejection, convergence freezing) is expressed with ``jnp.where`` masks, so
+converged problems freeze in place and never break the batch.  The solo
+API (:func:`init_state`, :func:`step`, :func:`run`, :func:`run_segment`)
+wraps the batched core with ``B = 1`` — a single solve therefore executes
+the *same* op sequence as any member of a batch, which is what makes
+batched and solo solves bitwise-identical per problem (asserted by
+tests/test_solve_batch.py).
 
-The implementation intentionally mirrors the reference structure of
+Conventions: we MINIMIZE ``fun`` (the OT dual is maximized by passing its
+negation).  Parameters are flat fp32 vectors; the OT solver concatenates
+(alpha, beta).  A batched ``value_and_grad`` maps ``(B, d) -> ((B,), (B, d))``.
+
+The algorithm intentionally mirrors the reference structure of
 Liu & Nocedal (1989): history size ``h``, gamma-scaled initial Hessian,
 curvature-pair rejection when s^T y <= eps * ||s|| ||y||.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, NamedTuple, Tuple
 
 import jax
@@ -24,18 +38,18 @@ import jax.numpy as jnp
 
 
 class LbfgsState(NamedTuple):
-    x: jnp.ndarray            # (d,) current point
-    f: jnp.ndarray            # scalar current value
-    g: jnp.ndarray            # (d,) current gradient
-    S: jnp.ndarray            # (h, d) s-history (x_{k+1} - x_k)
-    Y: jnp.ndarray            # (h, d) y-history (g_{k+1} - g_k)
-    rho: jnp.ndarray          # (h,) 1 / s^T y (0 for unused slots)
-    head: jnp.ndarray         # int32 next write slot
-    count: jnp.ndarray        # int32 number of valid pairs (<= h)
-    iter: jnp.ndarray         # int32 iteration counter
-    n_evals: jnp.ndarray      # int32 value_and_grad call counter
-    converged: jnp.ndarray    # bool
-    failed: jnp.ndarray       # bool (line search failure)
+    x: jnp.ndarray            # (B, d) current point
+    f: jnp.ndarray            # (B,) current value
+    g: jnp.ndarray            # (B, d) current gradient
+    S: jnp.ndarray            # (B, h, d) s-history (x_{k+1} - x_k)
+    Y: jnp.ndarray            # (B, h, d) y-history (g_{k+1} - g_k)
+    rho: jnp.ndarray          # (B, h) 1 / s^T y (0 for unused slots)
+    head: jnp.ndarray         # (B,) int32 next write slot
+    count: jnp.ndarray        # (B,) int32 number of valid pairs (<= h)
+    iter: jnp.ndarray         # (B,) int32 iteration counter
+    n_evals: jnp.ndarray      # (B,) int32 value_and_grad call counter
+    converged: jnp.ndarray    # (B,) bool
+    failed: jnp.ndarray       # (B,) bool (line search failure)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,145 +64,196 @@ class LbfgsOptions:
     init_step: float = 1.0
 
 
+def where_state(mask: jnp.ndarray, new, old):
+    """Per-problem select over a pytree of (B, ...) leaves.
+
+    ``mask`` is (B,) bool; leaves keep ``new`` where True, ``old`` where
+    False.  This is the single freezing primitive of the batched solver:
+    converged problems are carried through every computation and their
+    updates dropped here.
+    """
+    def sel(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+def _vdot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Batched inner product (B, d), (B, d) -> (B,).
+
+    One reduction form everywhere (``sum(a*b, -1)``) so solo (B=1) and
+    batched runs reduce in the same order — a plain ``dot`` lowers to a
+    different XLA op with different summation order.
+    """
+    return jnp.sum(a * b, axis=-1)
+
+
+def _take(H: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """H (B, h, ...) gathered at per-problem slot idx (B,) -> (B, ...)."""
+    return jnp.take_along_axis(
+        H, idx.reshape(idx.shape + (1,) * (H.ndim - 1)), axis=1
+    ).squeeze(1)
+
+
 def _two_loop(g, S, Y, rho, head, count, h):
-    """Two-loop recursion: r = H_k g with circular history."""
+    """Two-loop recursion: r = H_k g with per-problem circular history."""
+    B = g.shape[0]
+    barange = jnp.arange(B)
+
     # iterate from newest (head-1) to oldest
     def bwd(i, carry):
         q, a = carry
-        idx = (head - 1 - i) % h
+        idx = (head - 1 - i) % h                      # (B,)
         valid = i < count
-        ai = jnp.where(valid, rho[idx] * jnp.dot(S[idx], q), 0.0)
-        q = q - ai * Y[idx]
-        a = a.at[idx].set(ai)
+        Si, Yi = _take(S, idx), _take(Y, idx)
+        ri = rho[barange, idx]
+        ai = jnp.where(valid, ri * _vdot(Si, q), 0.0)
+        q = q - ai[:, None] * Yi
+        a = a.at[barange, idx].set(jnp.where(valid, ai, a[barange, idx]))
         return (q, a)
 
-    q, a = jax.lax.fori_loop(0, h, bwd, (g, jnp.zeros((h,), g.dtype)))
+    q, a = jax.lax.fori_loop(0, h, bwd, (g, jnp.zeros((B, h), g.dtype)))
 
     # gamma scaling from the newest pair
     newest = (head - 1) % h
-    sy = jnp.where(count > 0, 1.0 / jnp.maximum(rho[newest], 1e-30), 1.0)
-    yy = jnp.where(count > 0, jnp.dot(Y[newest], Y[newest]), 1.0)
-    gamma = jnp.where(count > 0, sy / jnp.maximum(yy, 1e-30), 1.0)
-    r = gamma * q
+    rn = rho[barange, newest]
+    has = count > 0
+    sy = jnp.where(has, 1.0 / jnp.maximum(rn, 1e-30), 1.0)
+    Yn = _take(Y, newest)
+    yy = jnp.where(has, _vdot(Yn, Yn), 1.0)
+    gamma = jnp.where(has, sy / jnp.maximum(yy, 1e-30), 1.0)
+    r = gamma[:, None] * q
 
     def fwd(i, r):
-        idx = (head - count + i) % h     # oldest to newest
+        idx = (head - count + i) % h                  # oldest to newest
         valid = i < count
-        bi = jnp.where(valid, rho[idx] * jnp.dot(Y[idx], r), 0.0)
-        return r + jnp.where(valid, (a[idx] - bi), 0.0) * S[idx]
+        Si, Yi = _take(S, idx), _take(Y, idx)
+        bi = jnp.where(valid, rho[barange, idx] * _vdot(Yi, r), 0.0)
+        coef = jnp.where(valid, a[barange, idx] - bi, 0.0)
+        return r + coef[:, None] * Si
 
     return jax.lax.fori_loop(0, h, fwd, r)
 
 
-def init_state(
+def init_state_batched(
     x0: jnp.ndarray,
     value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
     opts: LbfgsOptions,
 ) -> LbfgsState:
+    """Initial state for a (B, d) batch; one batched evaluation."""
     f0, g0 = value_and_grad(x0)
-    h, d = opts.history, x0.shape[0]
+    B, d = x0.shape
+    h = opts.history
     z = jnp.zeros
     return LbfgsState(
         x=x0, f=f0, g=g0,
-        S=z((h, d), x0.dtype), Y=z((h, d), x0.dtype), rho=z((h,), x0.dtype),
-        head=jnp.zeros((), jnp.int32), count=jnp.zeros((), jnp.int32),
-        iter=jnp.zeros((), jnp.int32), n_evals=jnp.ones((), jnp.int32),
-        converged=jnp.zeros((), bool), failed=jnp.zeros((), bool),
+        S=z((B, h, d), x0.dtype), Y=z((B, h, d), x0.dtype),
+        rho=z((B, h), x0.dtype),
+        head=z((B,), jnp.int32), count=z((B,), jnp.int32),
+        iter=z((B,), jnp.int32), n_evals=jnp.ones((B,), jnp.int32),
+        converged=z((B,), bool), failed=z((B,), bool),
     )
 
 
 def _wolfe_linesearch(value_and_grad, x, f0, g0, d, opts: LbfgsOptions):
-    """Strong-Wolfe line search (Nocedal & Wright Alg. 3.5/3.6).
+    """Strong-Wolfe line search (Nocedal & Wright Alg. 3.5/3.6), batched.
 
-    Single while_loop state machine: phase 0 = bracketing (grow t), phase 1 =
-    zoom (bisect the bracket).  Returns (t, f, g, n_evals, fail).
+    The sequential algorithm is a per-problem state machine (phase 0 =
+    bracketing, phase 1 = zoom).  Here every problem advances through its
+    own machine in lock-step: each loop iteration evaluates phi once at a
+    per-problem point (the grow point or the bracket midpoint) and applies
+    the bracketing/zoom case analysis as masked updates.  Problems whose
+    search has terminated stop updating (and stop counting evaluations)
+    but still ride along in the batched phi evaluation.
+
+    Returns (t, f, g, n_evals, fail), each batched.
     """
-    dg0 = jnp.dot(d, g0)
+    dg0 = _vdot(d, g0)                                 # (B,)
     c1, c2 = opts.c1, opts.c2
+    B = x.shape[0]
 
-    # carry: (phase, lo, f_lo, dg_lo, hi, t, f_t, g_t, dg_t, prev_t, f_prev,
-    #         done, n_evals, it)
     def phi(t):
-        f, g = value_and_grad(x + t * d)
-        return f, g, jnp.dot(d, g)
+        f, g = value_and_grad(x + t[:, None] * d)
+        return f, g, _vdot(d, g)
 
-    t0 = jnp.asarray(opts.init_step, x.dtype)
+    t0 = jnp.full((B,), opts.init_step, x.dtype)
     f1, g1, dg1 = phi(t0)
 
     def cond(c):
-        return jnp.logical_and(~c["done"], c["it"] < opts.max_linesearch)
+        return jnp.logical_and(
+            jnp.any(~c["done"]), c["it"] < opts.max_linesearch
+        )
 
     def body(c):
-        t, f_t, g_t, dg_t = c["t"], c["f_t"], c["g_t"], c["dg_t"]
+        run = ~c["done"]                               # (B,) still searching
+        t, f_t, dg_t = c["t"], c["f_t"], c["dg_t"]
         armijo = f_t <= f0 + c1 * t * dg0
-        higher = jnp.logical_or(~armijo, jnp.logical_and(c["it"] > 0, f_t >= c["f_prev"]))
+        higher = jnp.logical_or(
+            ~armijo, jnp.logical_and(c["it"] > 0, f_t >= c["f_prev"])
+        )
         curv = jnp.abs(dg_t) <= -c2 * dg0
 
-        def bracketing(c):
-            # case 1: violation -> zoom(prev, t)
-            def to_zoom_hi(c):
-                return dict(c, phase=1, lo=c["prev_t"], f_lo=c["f_prev"],
-                            hi=t)
-            # case 2: strong Wolfe satisfied -> done
-            def to_done(c):
-                return dict(c, done=jnp.asarray(True))
-            # case 3: positive slope -> zoom(t, prev)
-            def to_zoom_swap(c):
-                return dict(c, phase=1, lo=t, f_lo=f_t, hi=c["prev_t"])
-            # case 4: grow step
-            def grow(c):
-                nt = t * 2.0
-                nf, ng, ndg = phi(nt)
-                return dict(c, prev_t=t, f_prev=f_t, t=nt, f_t=nf, g_t=ng,
-                            dg_t=ndg, n_evals=c["n_evals"] + 1)
+        br = c["phase"] == 0
+        # bracketing cases (mutually exclusive, in the sequential order)
+        b_zoom_hi = br & higher                       # zoom(prev, t)
+        b_done = br & ~higher & curv                  # strong Wolfe holds
+        b_zoom_sw = br & ~higher & ~curv & (dg_t >= 0)  # zoom(t, prev)
+        b_grow = br & ~higher & ~curv & (dg_t < 0)    # grow step
+        # zoom cases
+        zm = ~br
+        z_shrink = zm & (jnp.logical_or(~armijo, f_t >= c["f_lo"]))
+        z_done = zm & ~z_shrink & curv
+        z_update = zm & ~z_shrink & ~curv             # move lo to t
+        z_swap = z_update & (dg_t * (c["hi"] - c["lo"]) >= 0)
 
-            c = jax.lax.cond(
-                higher, to_zoom_hi,
-                lambda c: jax.lax.cond(
-                    curv, to_done,
-                    lambda c: jax.lax.cond(dg_t >= 0, to_zoom_swap, grow, c),
-                    c),
-                c)
-            # on entering zoom, evaluate the midpoint
-            def eval_mid(c):
-                mt = 0.5 * (c["lo"] + c["hi"])
-                mf, mg, mdg = phi(mt)
-                return dict(c, t=mt, f_t=mf, g_t=mg, dg_t=mdg,
-                            n_evals=c["n_evals"] + 1)
-            entered_zoom = jnp.logical_and(c["phase"] == 1, ~c["done"])
-            return jax.lax.cond(entered_zoom, eval_mid, lambda c: c, c)
+        take_lo = b_zoom_sw | z_update
+        lo = jnp.where(b_zoom_hi, c["prev_t"], jnp.where(take_lo, t, c["lo"]))
+        f_lo = jnp.where(
+            b_zoom_hi, c["f_prev"], jnp.where(take_lo, f_t, c["f_lo"])
+        )
+        hi = jnp.where(
+            b_zoom_hi | z_shrink, t,
+            jnp.where(b_zoom_sw, c["prev_t"],
+                      jnp.where(z_swap, c["lo"], c["hi"])),
+        )
+        phase = jnp.where(b_zoom_hi | b_zoom_sw, 1, c["phase"])
+        done = c["done"] | b_done | z_done
+        prev_t = jnp.where(b_grow, t, c["prev_t"])
+        f_prev = jnp.where(b_grow, f_t, c["f_prev"])
 
-        def zooming(c):
-            def shrink_hi(c):
-                return dict(c, hi=t)
-            def update_lo(c):
-                def swap(c):
-                    return dict(c, hi=c["lo"], lo=t, f_lo=f_t)
-                def keep(c):
-                    return dict(c, lo=t, f_lo=f_t)
-                return jax.lax.cond(dg_t * (c["hi"] - c["lo"]) >= 0, swap, keep, c)
+        # one phi evaluation per iteration, at each problem's next point:
+        # the doubled step when growing, the (new) bracket midpoint otherwise
+        evald = run & ~done
+        nt = jnp.where(b_grow, t * 2.0, 0.5 * (lo + hi))
+        t_eval = jnp.where(evald, nt, c["t"])
+        f_n, g_n, dg_n = phi(t_eval)
 
-            c = jax.lax.cond(
-                jnp.logical_or(~armijo, f_t >= c["f_lo"]), shrink_hi,
-                lambda c: jax.lax.cond(curv, lambda c: dict(c, done=jnp.asarray(True)),
-                                       update_lo, c),
-                c)
-            def eval_mid(c):
-                mt = 0.5 * (c["lo"] + c["hi"])
-                mf, mg, mdg = phi(mt)
-                return dict(c, t=mt, f_t=mf, g_t=mg, dg_t=mdg,
-                            n_evals=c["n_evals"] + 1)
-            return jax.lax.cond(~c["done"], eval_mid, lambda c: c, c)
-
-        c = jax.lax.cond(c["phase"] == 0, bracketing, zooming, c)
-        return dict(c, it=c["it"] + 1)
+        out = dict(
+            phase=jnp.where(run, phase, c["phase"]),
+            lo=jnp.where(run, lo, c["lo"]),
+            f_lo=jnp.where(run, f_lo, c["f_lo"]),
+            hi=jnp.where(run, hi, c["hi"]),
+            t=jnp.where(evald, t_eval, c["t"]),
+            f_t=jnp.where(evald, f_n, c["f_t"]),
+            g_t=jnp.where(evald[:, None], g_n, c["g_t"]),
+            dg_t=jnp.where(evald, dg_n, c["dg_t"]),
+            prev_t=jnp.where(run, prev_t, c["prev_t"]),
+            f_prev=jnp.where(run, f_prev, c["f_prev"]),
+            done=done,
+            n_evals=c["n_evals"] + evald.astype(jnp.int32),
+            it=c["it"] + 1,
+        )
+        return out
 
     carry = {
-        "phase": jnp.asarray(0),
-        "lo": jnp.zeros((), x.dtype), "f_lo": f0, "hi": jnp.zeros((), x.dtype),
+        "phase": jnp.zeros((B,), jnp.int32),
+        "lo": jnp.zeros((B,), x.dtype), "f_lo": f0,
+        "hi": jnp.zeros((B,), x.dtype),
         "t": t0, "f_t": f1, "g_t": g1, "dg_t": dg1,
-        "prev_t": jnp.zeros((), x.dtype), "f_prev": f0,
-        "done": jnp.asarray(False), "n_evals": jnp.asarray(1, jnp.int32),
+        "prev_t": jnp.zeros((B,), x.dtype), "f_prev": f0,
+        "done": jnp.zeros((B,), bool),
+        "n_evals": jnp.ones((B,), jnp.int32),
         "it": jnp.asarray(0, jnp.int32),
     }
     c = jax.lax.while_loop(cond, body, carry)
@@ -198,51 +263,68 @@ def _wolfe_linesearch(value_and_grad, x, f0, g0, d, opts: LbfgsOptions):
     return c["t"], c["f_t"], c["g_t"], c["n_evals"], fail
 
 
-def step(
+def step_batched(
     state: LbfgsState,
     value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
     opts: LbfgsOptions,
 ) -> LbfgsState:
-    """One L-BFGS iteration (direction + strong-Wolfe line search)."""
+    """One batched L-BFGS iteration (direction + strong-Wolfe line search).
+
+    Advances every problem; callers freeze finished problems via
+    :func:`where_state` (see :func:`run_segment_batched`).
+    """
     h = opts.history
-    d = _two_loop(state.g, state.S, state.Y, state.rho, state.head, state.count, h)
+    B = state.x.shape[0]
+    barange = jnp.arange(B)
+    d = _two_loop(
+        state.g, state.S, state.Y, state.rho, state.head, state.count, h
+    )
     d = -d
-    dg = jnp.dot(d, state.g)
+    dg = _vdot(d, state.g)
     # fall back to steepest descent if not a descent direction
     bad = dg >= 0.0
-    d = jnp.where(bad, -state.g, d)
-    dg = jnp.where(bad, -jnp.dot(state.g, state.g), dg)
+    d = jnp.where(bad[:, None], -state.g, d)
+    dg = jnp.where(bad, -_vdot(state.g, state.g), dg)
 
     t, f_new, g_new, ls_evals, ls_fail = _wolfe_linesearch(
         value_and_grad, state.x, state.f, state.g, d, opts
     )
-    x_new = state.x + t * d
+    x_new = state.x + t[:, None] * d
     n_evals = state.n_evals + ls_evals
 
     s = x_new - state.x
     y = g_new - state.g
-    sy = jnp.dot(s, y)
-    good_pair = sy > 1e-10 * jnp.linalg.norm(s) * jnp.linalg.norm(y)
+    sy = _vdot(s, y)
+    snorm = jnp.sqrt(_vdot(s, s))
+    ynorm = jnp.sqrt(_vdot(y, y))
+    good_pair = sy > 1e-10 * snorm * ynorm
 
-    S = jnp.where(good_pair, state.S.at[state.head].set(s), state.S)
-    Y = jnp.where(good_pair, state.Y.at[state.head].set(y), state.Y)
+    S = jnp.where(
+        good_pair[:, None, None], state.S.at[barange, state.head].set(s),
+        state.S,
+    )
+    Y = jnp.where(
+        good_pair[:, None, None], state.Y.at[barange, state.head].set(y),
+        state.Y,
+    )
     rho = jnp.where(
-        good_pair, state.rho.at[state.head].set(1.0 / jnp.maximum(sy, 1e-30)),
+        good_pair[:, None],
+        state.rho.at[barange, state.head].set(1.0 / jnp.maximum(sy, 1e-30)),
         state.rho,
     )
     head = jnp.where(good_pair, (state.head + 1) % h, state.head)
     count = jnp.where(good_pair, jnp.minimum(state.count + 1, h), state.count)
 
-    gnorm = jnp.max(jnp.abs(g_new))
+    gnorm = jnp.max(jnp.abs(g_new), axis=-1)
     frel = jnp.abs(f_new - state.f) / jnp.maximum(jnp.abs(state.f), 1.0)
     converged = jnp.logical_or(gnorm <= opts.gtol, frel <= opts.ftol)
 
     # on line-search failure keep the old point but flag failure
     keep = ls_fail
     return LbfgsState(
-        x=jnp.where(keep, state.x, x_new),
+        x=jnp.where(keep[:, None], state.x, x_new),
         f=jnp.where(keep, state.f, f_new),
-        g=jnp.where(keep, state.g, g_new),
+        g=jnp.where(keep[:, None], state.g, g_new),
         S=S, Y=Y, rho=rho, head=head, count=count,
         iter=state.iter + 1,
         n_evals=n_evals,
@@ -251,21 +333,101 @@ def step(
     )
 
 
-def run(
-    value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+def run_segment_batched(
+    value_and_grad,
+    state: LbfgsState,
+    num_steps: int,
+    opts: LbfgsOptions,
+) -> LbfgsState:
+    """Run exactly ``num_steps`` batched iterations from an existing state.
+
+    Per-problem convergence masking: problems that have converged (or whose
+    line search failed) are carried through the computation and their
+    updates dropped, so the batch never needs an early exit.  The step is
+    skipped entirely only when EVERY problem is finished.
+    """
+
+    def body(_, s):
+        do = jnp.logical_and(~s.converged, ~s.failed)
+
+        def advance(s):
+            return where_state(do, step_batched(s, value_and_grad, opts), s)
+
+        return jax.lax.cond(jnp.any(do), advance, lambda s: s, s)
+
+    return jax.lax.fori_loop(0, num_steps, body, state)
+
+
+def run_batched(
+    value_and_grad,
     x0: jnp.ndarray,
     opts: LbfgsOptions = LbfgsOptions(),
 ) -> LbfgsState:
-    """Run L-BFGS to convergence (single jit-able while_loop)."""
-    state = init_state(x0, value_and_grad, opts)
+    """Run batched L-BFGS to all-problem convergence (one while_loop)."""
+    state = init_state_batched(x0, value_and_grad, opts)
+
+    def active(s):
+        alive = jnp.logical_and(~s.converged, ~s.failed)
+        return jnp.logical_and(s.iter < opts.max_iters, alive)
 
     def cond(s):
-        return jnp.logical_and(
-            s.iter < opts.max_iters,
-            jnp.logical_and(~s.converged, ~s.failed),
-        )
+        return jnp.any(active(s))
 
-    return jax.lax.while_loop(cond, lambda s: step(s, value_and_grad, opts), state)
+    def body(s):
+        # the iteration cap is per problem: a capped-out problem freezes
+        # even while batch-mates keep iterating (same stop as its solo run)
+        return where_state(active(s), step_batched(s, value_and_grad, opts), s)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+# -- solo API: the B = 1 slice of the batched core ---------------------------
+
+def _expand(state: LbfgsState) -> LbfgsState:
+    return jax.tree_util.tree_map(lambda v: v[None], state)
+
+
+def _squeeze(state: LbfgsState) -> LbfgsState:
+    return jax.tree_util.tree_map(lambda v: v[0], state)
+
+
+def _batch_vag(value_and_grad):
+    def vag(x):
+        f, g = value_and_grad(x[0])
+        return f[None], g[None]
+
+    return vag
+
+
+def init_state(
+    x0: jnp.ndarray,
+    value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+    opts: LbfgsOptions,
+) -> LbfgsState:
+    """Single-problem initial state (unbatched leaves)."""
+    return _squeeze(
+        init_state_batched(x0[None], _batch_vag(value_and_grad), opts)
+    )
+
+
+def step(
+    state: LbfgsState,
+    value_and_grad: Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]],
+    opts: LbfgsOptions,
+) -> LbfgsState:
+    """One single-problem L-BFGS iteration."""
+    return _squeeze(
+        step_batched(_expand(state), _batch_vag(value_and_grad), opts)
+    )
+
+
+def run(
+    value_and_grad,
+    x0: jnp.ndarray,
+    opts: LbfgsOptions = LbfgsOptions(),
+) -> LbfgsState:
+    """Run single-problem L-BFGS to convergence (jit-able)."""
+    return _squeeze(run_batched(_batch_vag(value_and_grad), x0[None], opts))
 
 
 def run_segment(
@@ -274,20 +436,15 @@ def run_segment(
     num_steps: int,
     opts: LbfgsOptions,
 ) -> LbfgsState:
-    """Run exactly ``num_steps`` iterations from an existing state.
+    """Run exactly ``num_steps`` single-problem iterations.
 
     Used by the paper's Algorithm 1: the solver advances ``r`` iterations
     between snapshot/active-set refreshes (history is preserved across
     segments, matching 'apply a solver ... for r iterations').
     Stops early only on convergence/failure (iterations become no-ops).
     """
-
-    def body(_, s):
-        do = jnp.logical_and(~s.converged, ~s.failed)
-
-        def advance(s):
-            return step(s, value_and_grad, opts)
-
-        return jax.lax.cond(do, advance, lambda s: s, s)
-
-    return jax.lax.fori_loop(0, num_steps, body, state)
+    return _squeeze(
+        run_segment_batched(
+            _batch_vag(value_and_grad), _expand(state), num_steps, opts
+        )
+    )

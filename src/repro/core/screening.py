@@ -20,6 +20,12 @@ The verdict matrix uses three states:
 
 Tile-level reduction: a (Lt x Nt) tile may be skipped iff every entry in it
 is ZERO; the Pallas kernel consumes those tile flags.
+
+Batch axis: every function here is batch-polymorphic — a :class:`ScreenState`
+whose leaves carry a leading ``B`` axis describes ``B`` independent
+problems, and the bounds/verdicts broadcast over it (``sqrt_g`` may be
+shared ``(L,)`` or per-problem ``(B, L)``).  Screening state never couples
+problems, so the batch is just a leading dim.
 """
 from __future__ import annotations
 
@@ -45,8 +51,13 @@ class ScreenState:
     active: jnp.ndarray         # (L, n)   bool, the set N
 
 
-def init_state(m_pad: int, n: int, L: int, dtype=jnp.float32) -> ScreenState:
+def init_state(
+    m_pad: int, n: int, L: int, dtype=jnp.float32, batch_shape: Tuple[int, ...] = ()
+) -> ScreenState:
     """All-zero snapshots at (alpha, beta) = 0; N = empty (paper line 1).
+
+    ``batch_shape`` prepends leading batch dims to every leaf (a batch of
+    independent problems shares no screening state).
 
     NOTE: all-zero snapshots correspond to z~ etc. evaluated at the actual
     init only if they are *computed* there; callers must refresh the state
@@ -54,21 +65,21 @@ def init_state(m_pad: int, n: int, L: int, dtype=jnp.float32) -> ScreenState:
     empty active set is always safe.
     """
     return ScreenState(
-        alpha_snap=jnp.zeros((m_pad,), dtype),
-        beta_snap=jnp.zeros((n,), dtype),
-        z_snap=jnp.zeros((L, n), dtype),
-        k_snap=jnp.zeros((L, n), dtype),
-        o_snap=jnp.zeros((L, n), dtype),
-        active=jnp.zeros((L, n), bool),
+        alpha_snap=jnp.zeros(batch_shape + (m_pad,), dtype),
+        beta_snap=jnp.zeros(batch_shape + (n,), dtype),
+        z_snap=jnp.zeros(batch_shape + (L, n), dtype),
+        k_snap=jnp.zeros(batch_shape + (L, n), dtype),
+        o_snap=jnp.zeros(batch_shape + (L, n), dtype),
+        active=jnp.zeros(batch_shape + (L, n), bool),
     )
 
 
 def grouped_norms(x: jnp.ndarray, L: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """(||[x_[l]]_+||, ||x_[l]||, ||[x_[l]]_-||) per group for x of (L*g,)."""
-    xg = x.reshape(L, -1)
-    plus = jnp.linalg.norm(jnp.maximum(xg, 0.0), axis=1)
-    full = jnp.linalg.norm(xg, axis=1)
-    neg = jnp.linalg.norm(jnp.minimum(xg, 0.0), axis=1)
+    """(||[x_[l]]_+||, ||x_[l]||, ||[x_[l]]_-||) per group for x (..., L*g)."""
+    xg = x.reshape(x.shape[:-1] + (L, -1))
+    plus = jnp.linalg.norm(jnp.maximum(xg, 0.0), axis=-1)
+    full = jnp.linalg.norm(xg, axis=-1)
+    neg = jnp.linalg.norm(jnp.minimum(xg, 0.0), axis=-1)
     return plus, full, neg
 
 
@@ -82,7 +93,7 @@ def delta_norms(
     ``d_beta`` vector.  O(L(g+1) + n) — this is the only per-evaluation cost
     of screening once the (L, n) snapshots are frozen.
     """
-    L = state.z_snap.shape[0]
+    L = state.z_snap.shape[-2]
     da_plus, da_full, da_neg = grouped_norms(alpha - state.alpha_snap, L)
     return da_plus, da_full, da_neg, beta - state.beta_snap
 
@@ -100,7 +111,11 @@ def upper_bound(
     """
     da_plus, _, _, db = delta_norms(state, alpha, beta)
     db_plus = jnp.maximum(db, 0.0)
-    return state.z_snap + da_plus[:, None] + sqrt_g[:, None] * db_plus[None, :]
+    return (
+        state.z_snap
+        + da_plus[..., :, None]
+        + sqrt_g[..., :, None] * db_plus[..., None, :]
+    )
 
 
 def lower_bound(
@@ -119,11 +134,11 @@ def lower_bound(
     db_negn = jnp.maximum(-db, 0.0)
     return (
         state.k_snap
-        - da_full[:, None]
-        - sqrt_g[:, None] * db_abs[None, :]
+        - da_full[..., :, None]
+        - sqrt_g[..., :, None] * db_abs[..., None, :]
         - state.o_snap
-        - da_neg[:, None]
-        - sqrt_g[:, None] * db_negn[None, :]
+        - da_neg[..., :, None]
+        - sqrt_g[..., :, None] * db_negn[..., None, :]
     )
 
 
@@ -178,15 +193,18 @@ def take_snapshot(
 def tile_flags(verdict: jnp.ndarray, tile_l: int, tile_n: int) -> jnp.ndarray:
     """Reduce per-entry verdicts to per-tile skip flags for the kernel.
 
-    Returns (ceil(L/tile_l), ceil(n/tile_n)) int32: 0 = whole tile ZERO (skip),
-    1 = compute.  L and n are padded virtually with ZERO.
+    Returns (..., ceil(L/tile_l), ceil(n/tile_n)) int32: 0 = whole tile ZERO
+    (skip), 1 = compute.  L and n are padded virtually with ZERO.
     """
-    L, n = verdict.shape
+    L, n = verdict.shape[-2:]
     Lp = -(-L // tile_l) * tile_l
     np_ = -(-n // tile_n) * tile_n
-    v = jnp.pad(verdict, ((0, Lp - L), (0, np_ - n)), constant_values=ZERO)
-    v = v.reshape(Lp // tile_l, tile_l, np_ // tile_n, tile_n)
-    any_work = jnp.any(v != ZERO, axis=(1, 3))
+    pads = [(0, 0)] * (verdict.ndim - 2) + [(0, Lp - L), (0, np_ - n)]
+    v = jnp.pad(verdict, pads, constant_values=ZERO)
+    v = v.reshape(
+        verdict.shape[:-2] + (Lp // tile_l, tile_l, np_ // tile_n, tile_n)
+    )
+    any_work = jnp.any(v != ZERO, axis=(-3, -1))
     return any_work.astype(jnp.int32)
 
 

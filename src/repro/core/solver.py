@@ -17,12 +17,24 @@ The gradient oracle inside a round evaluates, per Algorithm 2:
 
 By Theorem 2 all three return identical objective values and iterates
 (screening only ever zeroes provably-zero entries); tests assert this.
+
+Batching: the dual is separable over problems, so B same-shape problems
+solve in ONE jitted program — every array carries a leading B axis, the
+L-BFGS segment masks per-problem convergence (``core.lbfgs``), and the
+screening state is per-problem.  :func:`solve_dual` is the B = 1 slice of
+:func:`solve_batch`; because both run the identical batched op sequence,
+a problem solved solo and the same problem solved inside a batch produce
+bitwise-identical iterates (asserted by tests/test_solve_batch.py).  The
+round-step API (:func:`init_batch_state` / :func:`batch_round`) exposes
+one fused round per call for the OT serving engine
+(``repro.serving.ot_engine``), which retires converged problems and
+recycles their slots between rounds.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +47,13 @@ from repro.core.dual import (
     snapshot_norms,
 )
 from repro.core.groups import GroupSpec
-from repro.core.lbfgs import LbfgsOptions, LbfgsState, init_state, run_segment
+from repro.core.lbfgs import (
+    LbfgsOptions,
+    LbfgsState,
+    init_state_batched,
+    run_segment_batched,
+    where_state,
+)
 from repro.core.regularizers import GroupSparseReg
 
 
@@ -51,6 +69,26 @@ class SolveOptions:
     #   than Eq. 7 evaluated pre-update; N stays a performance hint so
     #   exactness is unaffected).  Off by default for paper fidelity.
     lbfgs: LbfgsOptions = dataclasses.field(default_factory=LbfgsOptions)
+
+
+# host->device program launches issued through this module's public entry
+# points (one per jitted call).  The batched solver's whole point is that a
+# B-problem solve is ONE launch instead of B; tests assert the ratio here.
+_DISPATCHES = {"count": 0}
+
+
+def dispatch_count() -> int:
+    """Number of jitted-program launches since :func:`reset_dispatch_count`."""
+    return _DISPATCHES["count"]
+
+
+def reset_dispatch_count() -> None:
+    _DISPATCHES["count"] = 0
+
+
+def _launch(fn, *args):
+    _DISPATCHES["count"] += 1
+    return fn(*args)
 
 
 class OTResult:
@@ -78,8 +116,54 @@ class OTResult:
         return bool(self.lbfgs_state.converged)
 
 
+class BatchOTResult:
+    """Batched solution container: B independent problems, one solve.
+
+    ``result[i]`` materializes the i-th problem as a solo :class:`OTResult`
+    (leaf slicing only; no recomputation).
+    """
+
+    def __init__(self, alpha, beta, values, lb, scr, rounds, stats):
+        self.alpha = alpha              # (B, m_pad)
+        self.beta = beta                # (B, n)
+        self.values = values            # (B,)
+        self.lbfgs_state = lb           # batched leaves
+        self.screen_state = scr         # batched leaves
+        self.rounds = rounds            # (B,) int
+        self.stats = stats              # (B, 3) int [zero, check, active]
+
+    def __len__(self):
+        return int(self.alpha.shape[0])
+
+    @property
+    def converged(self):
+        return self.lbfgs_state.converged
+
+    def __getitem__(self, i: int) -> OTResult:
+        sl = lambda t: jax.tree_util.tree_map(lambda v: v[i], t)
+        stats = {
+            "zero": int(self.stats[i, 0]),
+            "check": int(self.stats[i, 1]),
+            "active": int(self.stats[i, 2]),
+        }
+        return OTResult(
+            self.alpha[i], self.beta[i], self.values[i],
+            sl(self.lbfgs_state), sl(self.screen_state),
+            int(self.rounds[i]), stats,
+        )
+
+
+class BatchSolveState(NamedTuple):
+    """Device-side state of a batch of solves between rounds."""
+
+    lb: LbfgsState                  # batched L-BFGS state
+    scr: screening.ScreenState      # batched screening state
+    rounds: jnp.ndarray             # (B,) int32 rounds each problem ran
+    stats: jnp.ndarray              # (B, 3) int32 [zero, check, active]
+
+
 def _split(x: jnp.ndarray, m_pad: int):
-    return x[:m_pad], x[m_pad:]
+    return x[..., :m_pad], x[..., m_pad:]
 
 
 def make_value_and_grad(
@@ -95,11 +179,9 @@ def make_value_and_grad(
 ):
     """Build the (negated, minimized) value_and_grad oracle for L-BFGS.
 
-    For the pallas impl the screening state is padded to the kernel grid
-    HERE — once per snapshot round — so each evaluation only computes the
-    O(L + n) delta norms, runs the fused screening kernel for tile flags,
-    and feeds them straight to the gradient kernel.  The padded cost matrix
-    (``padded``) is prepared once per solve by :func:`solve_dual`.
+    Single-problem variant (x is (m_pad + n,)): used by the distributed
+    driver and the roofline lowering.  The solver's own loop uses
+    :func:`make_value_and_grad_batched`.
     """
     m_pad = prob.m_pad
 
@@ -152,10 +234,201 @@ def make_value_and_grad(
     raise ValueError(f"unknown grad_impl: {grad_impl}")
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("prob", "opts"),
-)
+def make_value_and_grad_batched(
+    C: jnp.ndarray,                    # (B, m_pad, n)
+    a: jnp.ndarray,                    # (B, m_pad)
+    b: jnp.ndarray,                    # (B, n)
+    prob: DualProblem,
+    sqrt_g: jnp.ndarray,               # (L,) shared or (B, L) per problem
+    grad_impl: str,
+    screen_state: Optional[screening.ScreenState],   # batched leaves
+    padded=None,                       # kernels.ops.PaddedProblem (B, ...) Cp
+    pallas_impl: str = "auto",
+):
+    """Batched oracle: x (B, m_pad + n) -> ((B,) value, (B, d) grad).
+
+    For the pallas impl the batched screening state is padded to the kernel
+    grid HERE — once per snapshot round — so each evaluation only computes
+    the O(B (L + n)) delta norms, runs the vmapped screening kernel for
+    per-problem tile flags, and feeds them straight to the batched gradient
+    kernel (one dynamic grid over the batch's concatenated active tiles in
+    compact mode).
+    """
+    m_pad = prob.m_pad
+
+    if grad_impl == "dense":
+
+        def vag(x):
+            alpha, beta = _split(x, m_pad)
+            v, (ga, gb) = dual_value_and_grad(alpha, beta, C, a, b, prob)
+            return -v, -jnp.concatenate([ga, gb], axis=-1)
+
+        return vag
+
+    if grad_impl == "screened":
+        assert screen_state is not None
+
+        def vag(x):
+            alpha, beta = _split(x, m_pad)
+            verdict = screening.verdicts(
+                screen_state, alpha, beta, sqrt_g, prob.reg.tau
+            )
+            zero_mask = verdict == screening.ZERO
+            v, (ga, gb) = dual_value_and_grad(
+                alpha, beta, C, a, b, prob, zero_mask=zero_mask
+            )
+            return -v, -jnp.concatenate([ga, gb], axis=-1)
+
+        return vag
+
+    if grad_impl == "pallas":
+        assert screen_state is not None
+        from repro.kernels import ops as kops
+
+        B = C.shape[0]
+        pp = padded
+        if pp is None:
+            pp = kops.prepare_padded_problem_batched(C, prob)
+        sqb = jnp.broadcast_to(sqrt_g, (B, prob.num_groups))
+        pstate = kops.pad_screen_state_batched(screen_state, sqb, pp)
+
+        def vag(x):
+            alpha, beta = _split(x, m_pad)
+            flags = kops.screen_tile_flags_batched(
+                pstate, alpha, beta, pp, prob.reg.tau
+            )
+            v, ga, gb = kops.dual_value_and_grad_padded_batched(
+                alpha, beta, a, b, flags, pp, prob, impl=pallas_impl
+            )
+            return -v, -jnp.concatenate([ga, gb], axis=-1)
+
+        return vag
+
+    raise ValueError(f"unknown grad_impl: {grad_impl}")
+
+
+def _prepare_padded(C, prob, opts):
+    """One-time padded-problem preparation for the pallas backend.
+
+    The padded copy of C (the largest array in the problem) is made once
+    per solve / per engine round, outside the L-BFGS evaluation loop.
+    """
+    if opts.grad_impl != "pallas":
+        return None
+    from repro.kernels import ops as kops
+
+    return kops.prepare_padded_problem_batched(C, prob)
+
+
+def _init_batch_state(C, a, b, row_mask, sqrt_g, prob, opts, padded):
+    """Initial BatchSolveState: valid snapshots + first oracle evaluation."""
+    B = C.shape[0]
+    m_pad, n, L = prob.m_pad, prob.n, prob.num_groups
+    x0 = jnp.zeros((B, m_pad + n), C.dtype)
+
+    screen0 = screening.init_state(m_pad, n, L, C.dtype, batch_shape=(B,))
+    # valid snapshots at the init point (alpha = beta = 0)
+    z0, k0, o0 = snapshot_norms(
+        jnp.zeros((B, m_pad), C.dtype), jnp.zeros((B, n), C.dtype),
+        C, prob, row_mask,
+    )
+    screen0 = screening.take_snapshot(
+        screen0, x0[..., :m_pad], x0[..., m_pad:], z0, k0, o0
+    )
+
+    vag0 = make_value_and_grad_batched(
+        C, a, b, prob, sqrt_g, opts.grad_impl, screen0,
+        padded=padded, pallas_impl=opts.pallas_impl,
+    )
+    lb0 = init_state_batched(x0, vag0, opts.lbfgs)
+    return BatchSolveState(
+        lb=lb0,
+        scr=screen0,
+        rounds=jnp.zeros((B,), jnp.int32),
+        stats=jnp.zeros((B, 3), jnp.int32),
+    )
+
+
+def _round_body(state, C, a, b, row_mask, sqrt_g, prob, opts, padded):
+    """One Algorithm-1 round over the whole batch, frozen problems masked.
+
+    A problem alive at round start runs the full round (segment + screening
+    refresh + snapshot), even if it converges mid-segment — exactly the
+    rounds a solo solve of that problem would run.  Problems finished
+    before the round keep their state bit-for-bit.
+    """
+    lb, scr, rounds, stats = state
+    m_pad = prob.m_pad
+    alive = jnp.logical_and(~lb.converged, ~lb.failed)      # (B,)
+
+    vag = make_value_and_grad_batched(
+        C, a, b, prob, sqrt_g, opts.grad_impl, scr,
+        padded=padded, pallas_impl=opts.pallas_impl,
+    )
+    lb = run_segment_batched(vag, lb, opts.snapshot_every, opts.lbfgs)
+
+    alpha, beta = _split(lb.x, m_pad)
+
+    if opts.grad_impl != "dense":
+        if not opts.tight_active_refresh:
+            # paper order: refresh N w.r.t. OLD snapshots (Eq. 7), then
+            # take the new snapshot (Algorithm 1 lines 6-15).
+            scr_new = screening.refresh_active(
+                scr, alpha, beta, sqrt_g, prob.reg.tau
+            )
+            z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
+            scr_new = screening.take_snapshot(scr_new, alpha, beta, z, k, o)
+        else:
+            # beyond-paper: snapshot first => Delta = 0 => lower bound
+            # becomes k~ - o~ exactly (Theorem 4's fixed point), tighter N.
+            z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
+            scr_new = screening.take_snapshot(scr, alpha, beta, z, k, o)
+            scr_new = screening.refresh_active(
+                scr_new, alpha, beta, sqrt_g, prob.reg.tau
+            )
+        verdict = screening.verdicts(
+            scr_new, alpha, beta, sqrt_g, prob.reg.tau
+        )
+        delta = jnp.stack(
+            [
+                jnp.sum(verdict == screening.ZERO, axis=(-2, -1)),
+                jnp.sum(verdict == screening.CHECK, axis=(-2, -1)),
+                jnp.sum(verdict == screening.ACTIVE, axis=(-2, -1)),
+            ],
+            axis=-1,
+        ).astype(jnp.int32)
+        scr = where_state(alive, scr_new, scr)
+        stats = stats + jnp.where(alive[:, None], delta, 0)
+
+    rounds = rounds + alive.astype(jnp.int32)
+    return BatchSolveState(lb=lb, scr=scr, rounds=rounds, stats=stats)
+
+
+def _solve_batch_impl(C, a, b, row_mask, sqrt_g, prob, opts):
+    padded = _prepare_padded(C, prob, opts)
+    st0 = _init_batch_state(C, a, b, row_mask, sqrt_g, prob, opts, padded)
+
+    def cond(carry):
+        st, rnd = carry
+        alive = jnp.logical_and(~st.lb.converged, ~st.lb.failed)
+        return jnp.logical_and(rnd < opts.max_rounds, jnp.any(alive))
+
+    def body(carry):
+        st, rnd = carry
+        st = _round_body(st, C, a, b, row_mask, sqrt_g, prob, opts, padded)
+        return (st, rnd + 1)
+
+    st, _ = jax.lax.while_loop(cond, body, (st0, jnp.zeros((), jnp.int32)))
+    return st.lb, st.scr, st.rounds, st.stats
+
+
+@functools.partial(jax.jit, static_argnames=("prob", "opts"))
+def _solve_batch_jit(C, a, b, row_mask, sqrt_g, prob, opts):
+    """One program: solve B same-shape problems to convergence."""
+    return _solve_batch_impl(C, a, b, row_mask, sqrt_g, prob, opts)
+
+
+@functools.partial(jax.jit, static_argnames=("prob", "opts"))
 def _solve_jit(
     C: jnp.ndarray,
     a: jnp.ndarray,
@@ -165,79 +438,44 @@ def _solve_jit(
     prob: DualProblem,
     opts: SolveOptions,
 ):
-    m_pad, n, L = prob.m_pad, prob.n, prob.num_groups
-    x0 = jnp.zeros((m_pad + n,), C.dtype)
+    """Single-problem entry point: the B = 1 slice of the batched solver.
 
-    # one-time padded-problem preparation: the padded copy of C (the largest
-    # array in the problem) is made here, outside the round loop, instead of
-    # once per gradient evaluation.
-    padded = None
-    if opts.grad_impl == "pallas":
-        from repro.kernels import ops as kops
-
-        padded = kops.prepare_padded_problem(C, prob)
-
-    screen0 = screening.init_state(m_pad, n, L, C.dtype)
-    # valid snapshots at the init point (alpha = beta = 0)
-    z0, k0, o0 = snapshot_norms(
-        jnp.zeros((m_pad,), C.dtype), jnp.zeros((n,), C.dtype), C, prob, row_mask
+    Kept for the distributed driver (GSPMD shards the unbatched operands)
+    and any caller wanting unbatched outputs; returns (lb, scr, rounds,
+    stats) with unbatched leaves and a scalar round count.
+    """
+    lb, scr, rounds, stats = _solve_batch_impl(
+        C[None], a[None], b[None], row_mask, sqrt_g, prob, opts
     )
-    screen0 = screening.take_snapshot(screen0, x0[:m_pad], x0[m_pad:], z0, k0, o0)
+    one = lambda t: jax.tree_util.tree_map(lambda v: v[0], t)
+    return one(lb), one(scr), rounds[0], stats[0]
 
-    vag0 = make_value_and_grad(
-        C, a, b, prob, sqrt_g, opts.grad_impl, screen0,
-        padded=padded, pallas_impl=opts.pallas_impl,
-    )
-    lb0 = init_state(x0, vag0, opts.lbfgs)
 
-    # stats: [zero, check, active] verdict counts accumulated per round
-    stats0 = jnp.zeros((3,), jnp.int32)
+@functools.partial(jax.jit, static_argnames=("prob", "opts"))
+def init_batch_state(C, a, b, row_mask, sqrt_g, prob, opts, padded=None):
+    """Jitted initial state for the round-step API (one launch).
 
-    def round_body(carry):
-        lb, scr, rnd, stats = carry
-        vag = make_value_and_grad(
-            C, a, b, prob, sqrt_g, opts.grad_impl, scr,
-            padded=padded, pallas_impl=opts.pallas_impl,
-        )
-        lb = run_segment(vag, lb, opts.snapshot_every, opts.lbfgs)
+    ``row_mask`` / ``sqrt_g`` may be shared ((m_pad,) / (L,)) or per-problem
+    ((B, m_pad) / (B, L)) — the serving engine packs problems with
+    different true group sizes into one bucket.  ``padded`` may carry a
+    pre-built batched PaddedProblem (pallas backend) so long-lived callers
+    like the serving engine don't re-pad C per call.
+    """
+    if padded is None:
+        padded = _prepare_padded(C, prob, opts)
+    return _init_batch_state(C, a, b, row_mask, sqrt_g, prob, opts, padded)
 
-        alpha, beta = _split(lb.x, m_pad)
 
-        if opts.grad_impl != "dense":
-            if not opts.tight_active_refresh:
-                # paper order: refresh N w.r.t. OLD snapshots (Eq. 7), then
-                # take the new snapshot (Algorithm 1 lines 6-15).
-                scr = screening.refresh_active(scr, alpha, beta, sqrt_g, prob.reg.tau)
-                z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
-                scr = screening.take_snapshot(scr, alpha, beta, z, k, o)
-            else:
-                # beyond-paper: snapshot first => Delta = 0 => lower bound
-                # becomes k~ - o~ exactly (Theorem 4's fixed point), tighter N.
-                z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
-                scr = screening.take_snapshot(scr, alpha, beta, z, k, o)
-                scr = screening.refresh_active(scr, alpha, beta, sqrt_g, prob.reg.tau)
-            verdict = screening.verdicts(scr, alpha, beta, sqrt_g, prob.reg.tau)
-            stats = stats + jnp.stack(
-                [
-                    jnp.sum(verdict == screening.ZERO),
-                    jnp.sum(verdict == screening.CHECK),
-                    jnp.sum(verdict == screening.ACTIVE),
-                ]
-            ).astype(jnp.int32)
+@functools.partial(jax.jit, static_argnames=("prob", "opts"))
+def batch_round(state, C, a, b, row_mask, sqrt_g, prob, opts, padded=None):
+    """Jitted single round over the batch (one launch per engine tick).
 
-        return (lb, scr, rnd + 1, stats)
-
-    def round_cond(carry):
-        lb, _, rnd, _ = carry
-        return jnp.logical_and(
-            rnd < opts.max_rounds,
-            jnp.logical_and(~lb.converged, ~lb.failed),
-        )
-
-    lb, scr, rounds, stats = jax.lax.while_loop(
-        round_cond, round_body, (lb0, screen0, jnp.zeros((), jnp.int32), stats0)
-    )
-    return lb, scr, rounds, stats
+    ``padded`` as in :func:`init_batch_state` — the engine passes its
+    cached copy so the (largest-array) re-pad doesn't run every tick.
+    """
+    if padded is None:
+        padded = _prepare_padded(C, prob, opts)
+    return _round_body(state, C, a, b, row_mask, sqrt_g, prob, opts, padded)
 
 
 def solve_dual(
@@ -262,7 +500,9 @@ def solve_dual(
     row_mask = jnp.asarray(spec.row_mask().reshape(-1))
     sqrt_g = jnp.asarray(spec.sqrt_sizes(), C.dtype)
 
-    lb, scr, rounds, stats = _solve_jit(C, a, b, row_mask, sqrt_g, prob, opts)
+    lb, scr, rounds, stats = _launch(
+        _solve_jit, C, a, b, row_mask, sqrt_g, prob, opts
+    )
     alpha, beta = _split(lb.x, prob.m_pad)
     stats_dict = {
         "zero": int(stats[0]),
@@ -272,7 +512,51 @@ def solve_dual(
     return OTResult(alpha, beta, -lb.f, lb, scr, int(rounds), stats_dict)
 
 
+def solve_batch(
+    C: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    spec: GroupSpec,
+    reg: GroupSparseReg,
+    opts: SolveOptions = SolveOptions(),
+) -> BatchOTResult:
+    """Solve B same-shape group-sparse OT problems in ONE jitted program.
+
+    C: (B, m_pad, n) padded cost matrices; a: (B, m_pad) padded source
+    marginals; b: (B, n) target marginals.  All problems share the group
+    layout ``spec`` and regularizer ``reg`` (the static geometry the
+    program is compiled for); marginals and costs vary freely.
+
+    Per problem the result is bitwise-identical to :func:`solve_dual` on
+    the same inputs: the batch axis only adds a leading dim to every op,
+    and converged problems freeze via masking rather than early exit.
+    """
+    assert C.ndim == 3, f"solve_batch expects (B, m_pad, n) costs, got {C.shape}"
+    prob = DualProblem(
+        num_groups=spec.num_groups,
+        group_size=spec.group_size,
+        n=int(C.shape[2]),
+        reg=reg,
+    )
+    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
+    sqrt_g = jnp.asarray(spec.sqrt_sizes(), C.dtype)
+
+    lb, scr, rounds, stats = _launch(
+        _solve_batch_jit, C, a, b, row_mask, sqrt_g, prob, opts
+    )
+    alpha, beta = _split(lb.x, prob.m_pad)
+    return BatchOTResult(alpha, beta, -lb.f, lb, scr, rounds, stats)
+
+
 def recover_plan(result: OTResult, C: jnp.ndarray, spec: GroupSpec, reg: GroupSparseReg):
     """Primal plan T* = grad psi(alpha* + beta_j* 1 - c_j) (padded rows incl.)."""
     prob = DualProblem(spec.num_groups, spec.group_size, int(C.shape[1]), reg)
+    return plan_from_duals(result.alpha, result.beta, C, prob)
+
+
+def recover_plan_batch(
+    result: BatchOTResult, C: jnp.ndarray, spec: GroupSpec, reg: GroupSparseReg
+):
+    """Batched primal plans (B, m_pad, n) from a :class:`BatchOTResult`."""
+    prob = DualProblem(spec.num_groups, spec.group_size, int(C.shape[2]), reg)
     return plan_from_duals(result.alpha, result.beta, C, prob)

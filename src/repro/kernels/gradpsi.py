@@ -33,6 +33,20 @@ Outputs are partials assembled by ops.py:
   value = alpha@a + beta@b - psi, grad_alpha = a - rowsum, grad_beta = b -
   colsum.  The compact kernel additionally returns the grid-step count
   actually issued (the scaling contract asserted by tests).
+
+Batched variants (``solve_batch`` / the OT serving engine) extend both
+modes with a leading problem axis B over same-shape problems:
+
+``gradpsi_pallas_batched`` — dense grid (B, L_tiles, N_tiles) with a
+  (B, L_tiles, N_tiles) flag matrix; per-(b, l, j) skip/DMA-remap exactly
+  as in the solo kernel.
+
+``gradpsi_pallas_compact_batched`` — ONE dynamic grid over the
+  concatenated active list of the whole batch: :func:`build_batch_tile_schedule`
+  compacts the (B, Lt, Nt) flags into a scalar-prefetched (3, B*T) list of
+  (b, l, j) coordinates, so total grid steps equal the batch's total
+  surviving tiles.  A heavily-screened problem contributes almost no steps
+  instead of padding the batch to its worst member.
 """
 from __future__ import annotations
 
@@ -99,11 +113,11 @@ def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref,
     j = pl.program_id(1)
 
     @pl.when(j == 0)
-    def _():
+    def _init_ga():
         ga_ref[...] = jnp.zeros_like(ga_ref)
 
     @pl.when(jnp.logical_and(l == 0, j == 0))
-    def _():
+    def _init_psi():
         psi_ref[...] = jnp.zeros_like(psi_ref)
 
     gb_ref[...] = jnp.zeros_like(gb_ref)
@@ -111,7 +125,7 @@ def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref,
     flag = flags_ref[l, j]
 
     @pl.when(flag != 0)
-    def _():
+    def _compute():
         alpha = alpha_ref[...].astype(jnp.float32)       # (TL, g)
         beta = beta_ref[...].astype(jnp.float32)         # (TN,)
         c = c_ref[...].astype(jnp.float32)               # (TL, g, TN)
@@ -219,7 +233,7 @@ def _compact_kernel(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
     s = pl.program_id(0)
 
     @pl.when(s == 0)
-    def _():
+    def _init_steps():
         steps_ref[0, 0] = 0
 
     steps_ref[0, 0] += 1
@@ -319,3 +333,256 @@ def gradpsi_pallas_compact(
     )
     psi = jnp.sum(jnp.where(valid[:, None], psi_steps, 0.0))
     return ga.reshape(-1), gb.reshape(-1), psi, steps[0, 0]
+
+
+# -- batched variants (leading problem axis B) --------------------------------
+
+def _dense_kernel_batched(flags_ref, alpha_ref, beta_ref, c_ref,
+                          ga_ref, gb_ref, psi_ref, *, tau: float, gamma: float):
+    bi = pl.program_id(0)
+    l = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init_ga():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+
+    @pl.when(jnp.logical_and(l == 0, j == 0))
+    def _init_psi():
+        psi_ref[...] = jnp.zeros_like(psi_ref)
+
+    gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    flag = flags_ref[bi, l, j]
+
+    @pl.when(flag != 0)
+    def _compute():
+        alpha = alpha_ref[0].astype(jnp.float32)         # (TL, g)
+        beta = beta_ref[0].astype(jnp.float32)           # (TN,)
+        c = c_ref[0].astype(jnp.float32)                 # (TL, g, TN)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+        psi_ref[0, 0, 0] += psi
+        ga_ref[...] += jnp.sum(t, axis=2)[None]          # (1, TL, g)
+        gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, None, :]  # (1, 1, TN)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "tau", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_pallas_batched(
+    alpha: jnp.ndarray,        # (B, m_pad) fp32
+    beta: jnp.ndarray,         # (B, n) fp32
+    C: jnp.ndarray,            # (B, m_pad, n) fp32 or bf16
+    flags: jnp.ndarray,        # (B, L_tiles, N_tiles) int32 tile skip flags
+    *,
+    num_groups: int,
+    group_size: int,
+    tau: float,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense-grid kernel over B problems: grid (B, L_tiles, N_tiles).
+
+    Returns (T_rowsum (B, m_pad), T_colsum (B, n), psi (B,)).  Semantics
+    per problem are identical to :func:`gradpsi_pallas`.
+    """
+    L, g = num_groups, group_size
+    B, n = beta.shape
+    if tile_l == 0:
+        tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (B, L // tile_l, n // tile_n)
+    assert flags.shape == grid, (flags.shape, grid)
+
+    alpha_g = alpha.reshape(B, L, g)
+    C4 = C.reshape(B, L, g, n)
+
+    def c_index(b, l, j, flags_ref):
+        # remap skipped tiles to column 0: consecutive skipped steps request
+        # the same block => the DMA is elided (revisit optimization).
+        active = flags_ref[b, l, j] != 0
+        return (b, l, 0, jnp.where(active, j, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j, f: (b, l, 0)),
+            pl.BlockSpec((1, tile_n), lambda b, l, j, f: (b, j)),
+            pl.BlockSpec((1, tile_l, g, tile_n), c_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j, f: (b, l, 0)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, l, j, f: (b, l, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, l, j, f: (b, 0, 0)),
+        ],
+    )
+
+    ga_part, gb_part, psi = pl.pallas_call(
+        functools.partial(
+            _dense_kernel_batched, tau=float(tau), gamma=float(gamma)
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid[1], n), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(flags, alpha_g, beta, C4)
+
+    return (
+        ga_part.reshape(B, -1),
+        jnp.sum(gb_part, axis=1),
+        psi[:, 0, 0],
+    )
+
+
+def build_batch_tile_schedule(
+    flags: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compact (B, Lt, Nt) flags into one concatenated active-tile list.
+
+    Returns ``(sched (3, B*T) int32, num_active () int32)`` where
+    ``sched[:, s] = (b, l, j)`` of the s-th surviving tile in
+    (problem-major, then row-major) order and ``num_active`` is the TOTAL
+    surviving count across the batch.  Entries past ``num_active`` repeat
+    the last surviving coordinate (pipeline lookahead lands on a resident
+    block).  Because the list concatenates per-problem schedules, a
+    heavily-screened problem contributes few steps — the batch never pads
+    to its worst member.
+    """
+    B, Lt, Nt = flags.shape
+    T = Lt * Nt
+    BT = B * T
+    flat = flags.reshape(-1) != 0
+    num_active = jnp.sum(flat).astype(jnp.int32)
+    pos = jnp.cumsum(flat).astype(jnp.int32) - 1      # rank among survivors
+    idx = jnp.arange(BT, dtype=jnp.int32)
+    dest = jnp.where(flat, pos, BT)                   # dead tiles -> dropped
+    order = jnp.zeros((BT,), jnp.int32).at[dest].set(idx, mode="drop")
+    last = jnp.where(num_active > 0, order[jnp.maximum(num_active - 1, 0)], 0)
+    order = jnp.where(idx < num_active, order, last)
+    sched = jnp.stack([order // T, (order % T) // Nt, order % Nt])
+    return sched, num_active
+
+
+def _compact_kernel_batched(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
+                            ga_ref, gb_ref, psi_ref, steps_ref,
+                            *, tau: float, gamma: float):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init_steps():
+        steps_ref[0, 0] = 0
+
+    steps_ref[0, 0] += 1
+
+    alpha = alpha_ref[0].astype(jnp.float32)             # (TL, g)
+    beta = beta_ref[0].astype(jnp.float32)               # (TN,)
+    c = c_ref[0].astype(jnp.float32)                     # (TL, g, TN)
+    t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+    # per-step slots: every visited block is written exactly once, so no
+    # cross-step accumulation state and no uninitialized revisits.
+    ga_ref[...] = jnp.sum(t, axis=2)[None]               # (1, TL, g)
+    gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]       # (1, TN)
+    psi_ref[0, 0] = psi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "tau", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_pallas_compact_batched(
+    alpha: jnp.ndarray,        # (B, m_pad) fp32
+    beta: jnp.ndarray,         # (B, n) fp32
+    C: jnp.ndarray,            # (B, m_pad, n) fp32 or bf16
+    sched: jnp.ndarray,        # (3, B*T) int32 from build_batch_tile_schedule
+    num_active: jnp.ndarray,   # () int32 TOTAL surviving-tile count
+    *,
+    num_groups: int,
+    group_size: int,
+    tau: float,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compacted-grid kernel over B problems: ONE dynamic grid of exactly
+    ``max(num_active, 1)`` steps covering the whole batch's surviving tiles.
+
+    Returns (T_rowsum (B, m_pad), T_colsum (B, n), psi (B,), steps ()).
+    With ``num_active == 0`` one sentinel step runs (a grid cannot be
+    empty) and its outputs are masked to exact zeros.
+    """
+    L, g = num_groups, group_size
+    B, n = beta.shape
+    if tile_l == 0:
+        tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    Lt, Nt = L // tile_l, n // tile_n
+    BT = B * Lt * Nt
+    assert sched.shape == (3, BT), (sched.shape, (3, BT))
+
+    alpha_g = alpha.reshape(B, L, g)
+    C4 = C.reshape(B, L, g, n)
+    num_active = num_active.astype(jnp.int32)
+    nact = num_active.reshape(1)
+    num_steps = jnp.maximum(num_active, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_steps,),
+        in_specs=[
+            pl.BlockSpec((1, tile_l, g),
+                         lambda s, sc, na: (sc[0, s], sc[1, s], 0)),
+            pl.BlockSpec((1, tile_n), lambda s, sc, na: (sc[0, s], sc[2, s])),
+            pl.BlockSpec((1, tile_l, g, tile_n),
+                         lambda s, sc, na: (sc[0, s], sc[1, s], 0, sc[2, s])),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda s, sc, na: (s, 0, 0)),
+            pl.BlockSpec((1, tile_n), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (0, 0)),
+        ],
+    )
+
+    ga_steps, gb_steps, psi_steps, steps = pl.pallas_call(
+        functools.partial(
+            _compact_kernel_batched, tau=float(tau), gamma=float(gamma)
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BT, tile_l, g), jnp.float32),
+            jax.ShapeDtypeStruct((BT, tile_n), jnp.float32),
+            jax.ShapeDtypeStruct((BT, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sched, nact, alpha_g, beta, C4)
+
+    # assemble: slots past num_active were never visited (garbage) — route
+    # them to an out-of-range segment so the scatter drops them.  Segments
+    # are flattened (b, l) / (b, j) / (b,) ids; each problem's steps stay in
+    # schedule order, so per-problem accumulation order is batch-invariant.
+    idx = jnp.arange(BT, dtype=jnp.int32)
+    valid = idx < num_active
+    seg_ga = jnp.where(valid, sched[0] * Lt + sched[1], B * Lt)
+    seg_gb = jnp.where(valid, sched[0] * Nt + sched[2], B * Nt)
+    seg_psi = jnp.where(valid, sched[0], B)
+    ga = jnp.zeros((B * Lt, tile_l, g), jnp.float32).at[seg_ga].add(
+        ga_steps, mode="drop"
+    )
+    gb = jnp.zeros((B * Nt, tile_n), jnp.float32).at[seg_gb].add(
+        gb_steps, mode="drop"
+    )
+    psi = jnp.zeros((B,), jnp.float32).at[seg_psi].add(
+        psi_steps[:, 0], mode="drop"
+    )
+    return ga.reshape(B, -1), gb.reshape(B, -1), psi, steps[0, 0]

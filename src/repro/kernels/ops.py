@@ -23,6 +23,13 @@ Gradient execution mode (``impl``):
   'compact'  dynamic grid over the compacted surviving-tile list,
   'auto'     runtime switch on surviving-tile density
              (<= COMPACT_DENSITY_THRESHOLD -> compact).
+
+Batched entry points (``*_batched``) mirror the solo ones with a leading
+problem axis B (same-shape problems): one prepared (B, ...) cost matrix,
+per-problem screening snapshots, fused per-problem flag grids (the screen
+kernel vmaps over B), and a gradient dispatch whose compact mode runs ONE
+dynamic grid over the whole batch's concatenated surviving tiles.  These
+feed ``core.solver.solve_batch`` and the OT serving engine.
 """
 from __future__ import annotations
 
@@ -39,9 +46,12 @@ from repro.core.screening import ScreenState
 from repro.kernels.gradpsi import (
     COMPACT_DENSITY_THRESHOLD,
     DEFAULT_TILE_N,
+    build_batch_tile_schedule,
     build_tile_schedule,
     gradpsi_pallas,
+    gradpsi_pallas_batched,
     gradpsi_pallas_compact,
+    gradpsi_pallas_compact_batched,
     resolve_tile_l,
 )
 from repro.kernels.screen import screen_pallas
@@ -53,6 +63,7 @@ def default_interpret() -> bool:
 
 
 def _pad_axis(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+    """Pad ``axis`` (negative axes OK — batched callers pad trailing dims)."""
     size = x.shape[axis]
     target = -(-size // mult) * mult
     if target == size:
@@ -142,13 +153,16 @@ def pad_tile_inputs(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Pad the per-eval dual variables to the kernel grid of ``pp``.
 
-    The single definition of the kernel input layout — shared by
-    :func:`dual_value_and_grad_padded` and the benchmarks.
+    Batch-polymorphic (alpha (..., m_pad), beta (..., n)).  The single
+    definition of the kernel input layout — shared by
+    :func:`dual_value_and_grad_padded`, its batched variant, and the
+    benchmarks.
     """
+    lead = alpha.shape[:-1]
     alphap = _pad_axis(
-        alpha.reshape(pp.L, pp.g), 0, pp.tile_l, 0.0
-    ).reshape(-1)
-    betap = _pad_axis(beta, 0, pp.tile_n, 0.0)
+        alpha.reshape(lead + (pp.L, pp.g)), -2, pp.tile_l, 0.0
+    ).reshape(lead + (-1,))
+    betap = _pad_axis(beta, -1, pp.tile_n, 0.0)
     return alphap, betap
 
 
@@ -257,6 +271,162 @@ def dual_value_and_grad_padded(
     rowsum = rowsum.reshape(pp.L_pad, g)[:L].reshape(-1)
     colsum = colsum[: pp.n]
     value = alpha @ a + beta @ b - psi
+    return value, a - rowsum, b - colsum
+
+
+# -- batched entry points (leading problem axis B) ----------------------------
+
+def prepare_padded_problem_batched(
+    C: jnp.ndarray,                    # (B, m_pad, n)
+    prob: DualProblem,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+) -> PaddedProblem:
+    """Pad a batch of cost matrices to tile multiples once per solve.
+
+    Returns a :class:`PaddedProblem` whose ``Cp`` is (B, L_pad * g, n_pad);
+    the static geometry fields are shared by every problem in the batch.
+    """
+    from repro.core.groups import PAD_COST
+
+    L, g, n = prob.num_groups, prob.group_size, prob.n
+    B = C.shape[0]
+    if tile_l == 0:
+        tile_l = resolve_tile_l(L, g, tile_n, jnp.dtype(C.dtype).itemsize)
+    L_pad, n_pad = prob.tile_padded_shape(tile_l, tile_n)
+    Cp = _pad_axis(
+        _pad_axis(C.reshape(B, L, g, n), -1, tile_n, PAD_COST),
+        -3, tile_l, PAD_COST,
+    )
+    return PaddedProblem(
+        Cp=Cp.reshape(B, L_pad * g, n_pad),
+        L=L, g=g, n=n, L_pad=L_pad, n_pad=n_pad,
+        tile_l=tile_l, tile_n=tile_n,
+    )
+
+
+def pad_screen_state_batched(
+    state: ScreenState, sqrt_g: jnp.ndarray, pp: PaddedProblem
+) -> PaddedScreenState:
+    """Pad batched (B, L, n) snapshots to the kernel grid once per round.
+
+    ``sqrt_g`` is (B, L) — per problem, because the serving engine packs
+    problems with different true group sizes into one bucket.
+    """
+    pad2 = lambda x: _pad_axis(
+        _pad_axis(x, -1, pp.tile_n, 0.0), -2, pp.tile_l, 0.0
+    )
+    return PaddedScreenState(
+        z=pad2(state.z_snap),
+        k=pad2(state.k_snap),
+        o=pad2(state.o_snap),
+        act=pad2(state.active.astype(jnp.int8)),
+        sqrt_g=_pad_axis(sqrt_g, -1, pp.tile_l, 0.0),
+        alpha_snap=state.alpha_snap,
+        beta_snap=state.beta_snap,
+    )
+
+
+def screen_tile_flags_batched(
+    pstate: PaddedScreenState,
+    alpha: jnp.ndarray,                # (B, m_pad)
+    beta: jnp.ndarray,                 # (B, n)
+    pp: PaddedProblem,
+    tau: float,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Per-eval fused screening for a batch -> (B, L_tiles, N_tiles) flags.
+
+    The O(B (L + n)) delta norms run in jnp; the screening kernel vmaps
+    over the problem axis (screening state never couples problems), so the
+    per-problem verdict matrices still never reach HBM.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    L = pp.L
+    da_plus, da_full, da_neg = screening.grouped_norms(
+        alpha - pstate.alpha_snap, L
+    )
+    db = beta - pstate.beta_snap
+    padL = lambda x: _pad_axis(x, -1, pp.tile_l, 0.0)
+    padN = lambda x: _pad_axis(x, -1, pp.tile_n, 0.0)
+
+    def one(z, k, o, act, dap, daf, dan, dbv, sg):
+        _, flags = screen_pallas(
+            z, k, o, act, dap, daf, dan, dbv, sg,
+            tau=float(tau), tile_l=pp.tile_l, tile_n=pp.tile_n,
+            interpret=interpret, emit_verdict=False,
+        )
+        return flags
+
+    return jax.vmap(one)(
+        pstate.z, pstate.k, pstate.o, pstate.act,
+        padL(da_plus), padL(da_full), padL(da_neg), padN(db), pstate.sqrt_g,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("prob", "impl", "interpret")
+)
+def dual_value_and_grad_padded_batched(
+    alpha: jnp.ndarray,                # (B, m_pad)
+    beta: jnp.ndarray,                 # (B, n)
+    a: jnp.ndarray,                    # (B, m_pad)
+    b: jnp.ndarray,                    # (B, n)
+    flags: jnp.ndarray,                # (B, L_tiles, N_tiles) int32
+    pp: PaddedProblem,
+    prob: DualProblem,
+    impl: str = "auto",
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Screened Pallas evaluation of B problems against a prepared batch.
+
+    Returns (value (B,), grad_alpha (B, m_pad), grad_beta (B, n)) for the
+    MAXIMIZATION problem — per problem identical to the solo padded path.
+    'compact' (and 'auto' below the density threshold) runs one dynamic
+    grid over the concatenated surviving tiles of the whole batch.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    B = alpha.shape[0]
+    L, g = pp.L, pp.g
+    assert flags.shape == (B,) + pp.grid, (flags.shape, (B,) + pp.grid)
+
+    alphap, betap = pad_tile_inputs(alpha, beta, pp)
+    kw = dict(
+        num_groups=pp.L_pad, group_size=g,
+        tau=prob.reg.tau, gamma=prob.reg.gamma,
+        tile_l=pp.tile_l, tile_n=pp.tile_n, interpret=interpret,
+    )
+
+    def run_grid(flags):
+        return gradpsi_pallas_batched(alphap, betap, pp.Cp, flags, **kw)
+
+    def run_compact(flags):
+        sched, nact = build_batch_tile_schedule(flags)
+        rowsum, colsum, psi, _ = gradpsi_pallas_compact_batched(
+            alphap, betap, pp.Cp, sched, nact, **kw
+        )
+        return rowsum, colsum, psi
+
+    if impl == "grid":
+        rowsum, colsum, psi = run_grid(flags)
+    elif impl == "compact":
+        rowsum, colsum, psi = run_compact(flags)
+    elif impl == "auto":
+        live = jnp.sum(flags != 0)
+        use_compact = live <= COMPACT_DENSITY_THRESHOLD * B * pp.num_tiles
+        rowsum, colsum, psi = jax.lax.cond(
+            use_compact, run_compact, run_grid, flags
+        )
+    else:
+        raise ValueError(f"unknown pallas impl: {impl}")
+
+    rowsum = rowsum.reshape(B, pp.L_pad, g)[:, :L].reshape(B, -1)
+    colsum = colsum[:, : pp.n]
+    value = (
+        jnp.sum(alpha * a, axis=-1) + jnp.sum(beta * b, axis=-1) - psi
+    )
     return value, a - rowsum, b - colsum
 
 

@@ -1,8 +1,7 @@
 """Step functions lowered by the dry-run and driven by train.py / serve.py."""
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -205,7 +205,6 @@ def apply_cross(
     memory_kv: Optional[Dict] = None,   # precomputed {k, v} (decode fast path)
 ) -> Tuple[jnp.ndarray, Dict]:
     dt = x.dtype
-    hd = cfg.resolved_head_dim
     xq = rmsnorm(x, params["q_norm"], cfg.rms_eps)
     q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(dt))
     if memory_kv is None:

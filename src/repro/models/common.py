@@ -9,7 +9,6 @@ allocating a byte.
 from __future__ import annotations
 
 import contextlib
-import math
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax

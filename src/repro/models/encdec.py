@@ -9,7 +9,6 @@ decoder positions, sinusoidal encoder positions, tied output head.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

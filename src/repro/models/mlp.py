@@ -6,7 +6,6 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.common import ParamMaker, swiglu
 from repro.sharding.partition import constrain
 

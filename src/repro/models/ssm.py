@@ -34,7 +34,6 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 def _conv_step(x_t: jnp.ndarray, conv_state: jnp.ndarray, w, b):
     """Single-token conv: x_t (B,C), conv_state (B,K-1,C)."""
-    K = w.shape[1]
     window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
     y = jnp.einsum("bkc,ck->bc", window, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
     return y, window[:, 1:, :]

@@ -1,0 +1,287 @@
+"""OT request serving engine: continuous batching over solver rounds.
+
+The batched solver (``core.solver.solve_batch``) wants B same-shape
+problems; real traffic (many concurrent domain-adaptation solves) arrives
+with mixed shapes and at arbitrary times.  This engine is the bridge, in
+the mold of :class:`repro.serving.engine.ServingEngine` (fixed slots,
+static shapes, slot recycling):
+
+  * requests carry a raw (m, n) cost matrix + class labels (plus optional
+    marginals); the engine pads each to a canonical *bucket* geometry
+    (L groups x padded group size, n rounded up to ``n_quant``) so every
+    problem in a bucket shares one compiled program,
+  * each bucket owns ``max_batch`` fixed slots; admission writes the
+    request's padded arrays into a free slot and (re)initializes that
+    slot's solver state, preserving in-flight neighbours bit-for-bit,
+  * every engine tick runs ONE fused ``batch_round`` per active bucket —
+    a full Algorithm-1 round (L-BFGS segment + screening refresh) for all
+    slots in one program launch,
+  * finished slots (converged / failed / round cap) are retired: the
+    request gets its objective value and its primal plan un-padded back
+    to the caller's row order, and the slot is recycled.
+
+Empty slots hold a dummy problem (PAD_COST costs, zero marginals) whose
+gradient is identically zero, so they converge at initialization and ride
+along for free.  Column padding appends zero-mass targets with PAD_COST
+costs: their plan column is exactly zero and their dual variable has zero
+gradient, so a padded solve equals the unpadded one on real entries (same
+argument as row padding, see core/groups.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groups as G
+from repro.core import solver as slv
+from repro.core.dual import DualProblem, plan_from_duals
+from repro.core.lbfgs import where_state
+from repro.core.regularizers import GroupSparseReg
+from repro.utils.logging import get_logger
+
+log = get_logger("ot_serving")
+
+
+@dataclasses.dataclass
+class OTRequest:
+    """One OT solve request (inputs in the caller's row order)."""
+
+    rid: int
+    C: np.ndarray                      # (m, n) cost matrix
+    labels: np.ndarray                 # (m,) integer class labels
+    a: Optional[np.ndarray] = None     # (m,) source marginal (default 1/m)
+    b: Optional[np.ndarray] = None     # (n,) target marginal (default 1/n)
+    # filled at retirement:
+    value: Optional[float] = None      # dual objective at convergence
+    plan: Optional[np.ndarray] = None  # (m, n) primal plan, original order
+    rounds: int = 0
+    converged: bool = False
+    done: bool = False
+
+
+@jax.jit
+def _select_slots(mask, new, old):
+    """Per-slot state merge (jitted so admission is one launch)."""
+    return where_state(mask, new, old)
+
+
+class _Bucket:
+    """Fixed-slot batch of one padded geometry (L, g_pad, n_pad)."""
+
+    def __init__(self, key: Tuple[int, int, int], max_batch: int,
+                 reg: GroupSparseReg, opts: slv.SolveOptions, dtype):
+        L, g_pad, n_pad = key
+        self.key = key
+        self.max_batch = max_batch
+        self.reg = reg
+        self.opts = opts
+        self.prob = DualProblem(L, g_pad, n_pad, reg)
+        m_pad = self.prob.m_pad
+        S = max_batch
+        self.slots: List[Optional[OTRequest]] = [None] * S
+        self._meta: List[Optional[dict]] = [None] * S   # perm/spec per slot
+        self.C = np.full((S, m_pad, n_pad), G.PAD_COST, dtype)
+        self.a = np.zeros((S, m_pad), dtype)
+        self.b = np.zeros((S, n_pad), dtype)
+        self.row_mask = np.zeros((S, m_pad), bool)
+        self.sqrt_g = np.zeros((S, L), dtype)
+        self.state: Optional[slv.BatchSolveState] = None
+        # device-resident copies of the slot arrays + (pallas) the padded
+        # problem, rebuilt only when a slot's contents change — a tick must
+        # not re-upload (S, m_pad, n_pad) buffers or re-pad C every round
+        self._device: Optional[tuple] = None
+        self._padded = None
+
+    def _device_arrays(self) -> tuple:
+        if self._device is None:
+            self._device = (
+                jnp.asarray(self.C), jnp.asarray(self.a), jnp.asarray(self.b),
+                jnp.asarray(self.row_mask), jnp.asarray(self.sqrt_g),
+            )
+            self._padded = None
+            if self.opts.grad_impl == "pallas":
+                from repro.kernels import ops as kops
+
+                self._padded = kops.prepare_padded_problem_batched(
+                    self._device[0], self.prob
+                )
+        return self._device
+
+    # -- admission -----------------------------------------------------------
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, slot: int, req: OTRequest, spec: G.GroupSpec):
+        L, g_pad, n_pad = self.key
+        m, n = req.C.shape
+        dtype = self.C.dtype
+        a = req.a if req.a is not None else np.full((m,), 1.0 / m, dtype)
+        b = req.b if req.b is not None else np.full((n,), 1.0 / n, dtype)
+
+        C_pad = G.pad_cost_matrix(np.asarray(req.C, dtype), req.labels, spec)
+        a_pad = G.pad_marginal(np.asarray(a, dtype), req.labels, spec)
+        _, perm, _ = G.pad_sources(np.asarray(req.C, dtype), req.labels, spec)
+
+        self.C[slot] = G.PAD_COST
+        self.C[slot, :, :n] = C_pad
+        self.a[slot] = a_pad
+        self.b[slot] = 0.0
+        self.b[slot, :n] = np.asarray(b, dtype)
+        self.row_mask[slot] = spec.row_mask().reshape(-1)
+        self.sqrt_g[slot] = spec.sqrt_sizes()
+        self.slots[slot] = req
+        self._meta[slot] = {"spec": spec, "perm": perm, "m": m, "n": n}
+        self._device = None          # slot arrays changed: re-upload lazily
+        log.info("admitted OT request %d into bucket %s slot %d (m=%d n=%d)",
+                 req.rid, self.key, slot, m, n)
+
+    def refresh_state(self, new_mask: np.ndarray):
+        """(Re)initialize solver state for slots in ``new_mask``; keep others."""
+        C, a, b, row_mask, sqrt_g = self._device_arrays()
+        fresh = slv._launch(
+            slv.init_batch_state,
+            C, a, b, row_mask, sqrt_g, self.prob, self.opts, self._padded,
+        )
+        if self.state is None:
+            self.state = fresh
+        else:
+            self.state = _select_slots(jnp.asarray(new_mask), fresh, self.state)
+
+    # -- one engine tick -----------------------------------------------------
+    def occupied(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def tick(self) -> List[OTRequest]:
+        """One fused solver round for all slots; returns retired requests."""
+        active = self.occupied()
+        if not active or self.state is None:
+            return []
+        C, a, b, row_mask, sqrt_g = self._device_arrays()
+        self.state = slv._launch(
+            slv.batch_round,
+            self.state, C, a, b, row_mask, sqrt_g,
+            self.prob, self.opts, self._padded,
+        )
+        lb = self.state.lb
+        conv = np.asarray(lb.converged)
+        failed = np.asarray(lb.failed)
+        rounds = np.asarray(self.state.rounds)
+        finished = []
+        for i in active:
+            if not (conv[i] or failed[i] or rounds[i] >= self.opts.max_rounds):
+                continue
+            finished.append(self._retire(i, bool(conv[i]), int(rounds[i])))
+        return finished
+
+    def _retire(self, slot: int, converged: bool, rounds: int) -> OTRequest:
+        req = self.slots[slot]
+        meta = self._meta[slot]
+        lb = self.state.lb
+        m_pad = self.prob.m_pad
+        alpha = lb.x[slot, :m_pad]
+        beta = lb.x[slot, m_pad:]
+        T_pad = np.asarray(
+            plan_from_duals(alpha, beta, jnp.asarray(self.C[slot]), self.prob)
+        )
+        # un-pad rows back to the caller's order, drop padded columns
+        m, n = meta["m"], meta["n"]
+        perm = meta["perm"]
+        T = np.zeros((m, n), T_pad.dtype)
+        real = perm >= 0
+        T[perm[real]] = T_pad[real][:, :n]
+        req.value = float(-lb.f[slot])
+        req.plan = T
+        req.rounds = rounds
+        req.converged = converged
+        req.done = True
+        # recycle: dummy problem (zero gradient) until the next admission
+        self.slots[slot] = None
+        self._meta[slot] = None
+        self.C[slot] = G.PAD_COST
+        self.a[slot] = 0.0
+        self.b[slot] = 0.0
+        self.row_mask[slot] = False
+        self.sqrt_g[slot] = 0.0
+        self._device = None          # slot arrays changed: re-upload lazily
+        log.info("OT request %d finished (rounds=%d converged=%s)",
+                 req.rid, rounds, converged)
+        return req
+
+
+class OTServingEngine:
+    """Serve a stream of OT solve requests with bucketed continuous batching.
+
+    Parameters mirror the solver: one regularizer + SolveOptions per engine
+    (the compiled programs are specialized on them).  ``n_quant`` is the
+    column-padding granularity — requests whose padded geometry
+    (L, g_pad, ceil(n / n_quant) * n_quant) coincides share a bucket and
+    therefore a compiled program and a batch.
+    """
+
+    def __init__(
+        self,
+        reg: GroupSparseReg,
+        opts: slv.SolveOptions = slv.SolveOptions(),
+        max_batch: int = 4,
+        n_quant: int = 64,
+        pad_to: int = 8,
+        dtype=np.float32,
+    ):
+        self.reg = reg
+        self.opts = opts
+        self.max_batch = max_batch
+        self.n_quant = n_quant
+        self.pad_to = pad_to
+        self.dtype = dtype
+        self.buckets: Dict[Tuple[int, int, int], _Bucket] = {}
+
+    def _bucket_key(self, req: OTRequest) -> Tuple[Tuple[int, int, int], G.GroupSpec]:
+        spec = G.spec_from_labels(req.labels, pad_to=self.pad_to)
+        n = req.C.shape[1]
+        n_pad = -(-n // self.n_quant) * self.n_quant
+        return (spec.num_groups, spec.group_size, n_pad), spec
+
+    def try_admit(self, req: OTRequest) -> bool:
+        """Admit into the request's bucket if a slot is free (no round run)."""
+        key, spec = self._bucket_key(req)
+        bucket = self.buckets.get(key)
+        if bucket is None:
+            bucket = _Bucket(key, self.max_batch, self.reg, self.opts,
+                             self.dtype)
+            self.buckets[key] = bucket
+        slot = bucket.free_slot()
+        if slot is None:
+            return False
+        bucket.admit(slot, req, spec)
+        new_mask = np.zeros((self.max_batch,), bool)
+        new_mask[slot] = True
+        bucket.refresh_state(new_mask)
+        return True
+
+    def tick(self) -> List[OTRequest]:
+        """One fused solver round per active bucket; returns finished."""
+        finished: List[OTRequest] = []
+        for bucket in self.buckets.values():
+            finished.extend(bucket.tick())
+        return finished
+
+    def run(self, requests: List[OTRequest]) -> List[OTRequest]:
+        """Drain a request list to completion (admit greedily, tick, retire).
+
+        Admission scans the whole pending list, not just its head: a full
+        bucket at the front must not starve requests whose buckets have
+        free slots (no head-of-line blocking across buckets).
+        """
+        pending = list(requests)
+        done: List[OTRequest] = []
+        while pending or any(b.occupied() for b in self.buckets.values()):
+            pending = [req for req in pending if not self.try_admit(req)]
+            done.extend(self.tick())
+        return done

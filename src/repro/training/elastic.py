@@ -19,7 +19,7 @@ import dataclasses
 import statistics
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, List, Optional
 
 import jax
 

@@ -18,7 +18,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dual import DualProblem, plan_from_duals
-from repro.core.groups import GroupSpec
 from repro.core.lbfgs import LbfgsOptions
 from repro.core.regularizers import GroupSparseReg
 from repro.core.solver import SolveOptions, _solve_jit, _split
@@ -83,7 +82,6 @@ def group_features_by_class(
     """Pack (N, d) features into the sorted uniform-group layout the solver
     expects, truncating/padding each class to ``group_size`` rows (padded
     rows repeat the class mean, carrying the right gradient structure)."""
-    d = h.shape[1]
     out = []
     for c in range(num_classes):
         mask = (labels == c).astype(h.dtype)[:, None]

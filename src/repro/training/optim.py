@@ -10,8 +10,7 @@ and biases don't).  Gradient clipping is by global norm (fp32).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,18 +8,15 @@ continues the same trajectory.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.data.pipeline import SyntheticLM, SyntheticLMConfig
+from repro.data.pipeline import SyntheticLM
 from repro.models import build_model
-from repro.sharding.partition import Rules, sharding_tree, use_rules
+from repro.sharding.partition import Rules, use_rules
 from repro.training.checkpoint import CheckpointManager
 from repro.training.compression import apply_error_feedback, init_error_state
 from repro.training.elastic import StragglerWatchdog

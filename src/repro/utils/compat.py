@@ -8,7 +8,7 @@ lives in exactly one place.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 

@@ -1,9 +1,7 @@
 """Checkpoint manager: roundtrip, atomicity, retention, elastic reshard."""
 import json
-import shutil
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.training.checkpoint import CheckpointManager

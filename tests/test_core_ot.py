@@ -5,13 +5,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import groups as G
-from repro.core import screening as S
 from repro.core.dual import (
     DualProblem,
     dual_value_and_grad,
-    plan_from_duals,
     primal_objective,
-    snapshot_norms,
 )
 from repro.core.lbfgs import LbfgsOptions
 from repro.core.ot import (

@@ -20,7 +20,7 @@ def test_batch_is_pure_function_of_step():
 
 def test_shards_partition_the_global_batch():
     cfg = SyntheticLMConfig(vocab_size=100, seq_len=8, global_batch=8, seed=0)
-    full = SyntheticLM(cfg)  # shard 0 of 1
+    _full = SyntheticLM(cfg)  # shard 0 of 1 (constructor sanity)
     shards = [SyntheticLM(cfg, shard_id=i, num_shards=4) for i in range(4)]
     sizes = [s.batch(3)["tokens"].shape[0] for s in shards]
     assert sizes == [2, 2, 2, 2]

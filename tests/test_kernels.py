@@ -4,7 +4,6 @@ Every Pallas kernel is validated in interpret mode against its pure-jnp
 oracle in ref.py, per the kernel contract (same tile-masking semantics).
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
@@ -16,7 +15,6 @@ from repro.core.regularizers import GroupSparseReg
 from repro.kernels import ops as kops
 from repro.kernels.gradpsi import gradpsi_pallas, pick_tile_l
 from repro.kernels.ref import gradpsi_ref, screen_ref
-from repro.kernels.screen import screen_pallas
 
 
 def _rand_problem(rng, L, g, n, dtype=jnp.float32):

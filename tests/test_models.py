@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import all_configs, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.models import build_model
 
 B, S = 2, 16
@@ -159,7 +159,6 @@ def test_kv_int8_cache_decode_close_to_fp():
     c = model.init_cache(B, S + 4)
     cq = model_q.init_cache(B, S + 4)
     assert cq["k"].dtype == jnp.int8
-    import math
 
     bytes_fp = sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(c))
     bytes_q = sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(cq))

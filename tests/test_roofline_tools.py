@@ -8,7 +8,7 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks.roofline import active_params, scan_trips
-from repro.configs import get_config, list_archs
+from repro.configs import get_config
 from repro.launch.dryrun import _shape_bytes, parse_collectives
 from repro.models import build_model
 from repro.models.common import count_params

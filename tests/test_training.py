@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig, TrainConfig
 from repro.data.pipeline import SyntheticLM, SyntheticLMConfig
-from repro.training.compression import apply_error_feedback, init_error_state
+from repro.training.compression import apply_error_feedback
 from repro.training.elastic import StragglerWatchdog
 from repro.training.losses import group_features_by_class, ot_alignment_loss
 from repro.training.optim import adamw_update, init_opt_state, lr_schedule
