@@ -1,0 +1,158 @@
+"""Sharded-solver benchmark row: deterministic counters over 4 host devices.
+
+  PYTHONPATH=src python -m benchmarks.bench_sharded [--smoke] [--out PATH]
+
+The sharded path's perf contract is not wall-clock (interpret-mode CPU is
+meaningless for that) but *invariants*: a batch sharded over D devices must
+run the exact same per-problem work as unsharded — same round counts, same
+screening verdict totals, ONE program launch, zero bitwise mismatches
+against the unsharded batched solve.  Those are pure functions of the
+solver logic, so they are committed to ``BENCH_sharded.json`` and gated by
+``check_regression.py`` like the kernel counters.
+
+The workload runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (host device count
+must be set before jax initializes); the child prints one JSON document on
+stdout and the parent assembles the benchmark rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+DEVICES = 4
+
+_CHILD = """
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import groups as G
+    from repro.core import solver as slv
+    from repro.core.lbfgs import LbfgsOptions
+    from repro.core.ot import squared_euclidean_cost
+    from repro.core.regularizers import GroupSparseReg
+    from repro.core.sharded import solve_batch_sharded
+
+    B, L, g, n = {B}, {L}, {g}, {n}
+    impls = {impls}
+    assert jax.device_count() == {devices}, jax.device_count()
+
+    rng = np.random.default_rng(0)
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    spec = G.spec_from_labels(labels, pad_to=8)
+    Cs, As, Bs = [], [], []
+    for _ in range(B):
+        Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+        Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
+        C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+        C /= C.max()
+        Cs.append(G.pad_cost_matrix(C, labels, spec))
+        As.append(G.pad_marginal(np.full(m, 1/m, np.float32), labels, spec))
+        Bs.append(np.full(n, 1/n, np.float32))
+    C = jnp.asarray(np.stack(Cs))
+    a = jnp.asarray(np.stack(As))
+    b = jnp.asarray(np.stack(Bs))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+
+    rows = []
+    for gi in impls:
+        opts = slv.SolveOptions(
+            grad_impl=gi, lbfgs=LbfgsOptions(max_iters=150)
+        )
+        slv.reset_dispatch_count()
+        rs = solve_batch_sharded(C, a, b, spec, reg, opts)
+        launches = slv.dispatch_count()
+        rb = slv.solve_batch(C, a, b, spec, reg, opts)
+        mismatches = int(jnp.sum(
+            jnp.any(rs.lbfgs_state.x != rb.lbfgs_state.x, axis=-1)
+            | (rs.values != rb.values)
+            | (rs.rounds != rb.rounds)
+        ))
+        stats = np.asarray(rs.stats)
+        rows.append({{
+            "grad_impl": gi,
+            "counters": {{
+                "rounds_total": int(jnp.sum(rs.rounds)),
+                "rounds_max": int(jnp.max(rs.rounds)),
+                "zero": int(stats[:, 0].sum()),
+                "check": int(stats[:, 1].sum()),
+                "active": int(stats[:, 2].sum()),
+                "launches": launches,
+                "bitwise_mismatches": mismatches,
+            }},
+        }})
+    print("BENCH_JSON " + json.dumps(rows))
+"""
+
+
+def _run_child(B: int, L: int, g: int, n: int, impls) -> list:
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={DEVICES}",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    code = textwrap.dedent(_CHILD).format(
+        B=B, L=L, g=g, n=n, impls=list(impls), devices=DEVICES
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded bench child failed:\n{r.stderr[-3000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("BENCH_JSON "):
+            return json.loads(line[len("BENCH_JSON "):])
+    raise RuntimeError(f"no BENCH_JSON line in child output:\n{r.stdout[-2000:]}")
+
+
+def main(
+    B: int = 8, L: int = 6, g: int = 8, n: int = 64,
+    out: str | None = "BENCH_sharded.json",
+    smoke: bool = False,
+    impls=("screened", "pallas"),
+) -> list:
+    """Run the sharded benchmark; returns (and optionally writes) rows."""
+    if smoke:
+        B, L, g, n = 4, 4, 8, 32
+        impls = ("screened",)
+    rows = _run_child(B, L, g, n, impls)
+    header = {
+        "workload": f"B{B}_L{L}_g{g}_n{n}",
+        "devices": DEVICES,
+        "B": B, "L": L, "g": g, "n": n,
+    }
+    rows = [dict(header, **r) for r in rows]
+    for r in rows:
+        c = r["counters"]
+        print(
+            f"sharded {r['workload']} {r['grad_impl']}: "
+            f"rounds={c['rounds_total']} launches={c['launches']} "
+            f"bitwise_mismatches={c['bitwise_mismatches']}"
+        )
+    if out:
+        try:
+            from benchmarks.bench_io import write_bench_json
+        except ImportError:          # invoked as a script from benchmarks/
+            from bench_io import write_bench_json
+
+        write_bench_json(out, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_sharded.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=None if args.smoke else args.out)

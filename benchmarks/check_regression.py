@@ -12,6 +12,13 @@ jump means the scaling contract (work proportional to surviving tiles)
 regressed.  Wall-clock fields are REPORTED for context but never gated —
 CI machines are too noisy for that.
 
+The sharded baseline (``BENCH_sharded.json``, from
+``benchmarks/bench_sharded.py``) is gated the same way: per-problem round
+counts and screening-verdict totals under 4 forced host devices, plus two
+exact invariants — ``launches`` (a sharded solve is ONE program) and
+``bitwise_mismatches`` (sharded == unsharded per problem), which must
+match the baseline exactly regardless of tolerance.
+
 Exit code 0 = clean, 1 = regression (or unreadable/mismatched baseline).
 """
 from __future__ import annotations
@@ -63,9 +70,37 @@ def _within(old, new, tolerance: float) -> bool:
     return abs(float(new) - float(old)) / denom <= tolerance
 
 
+# sharded counters that must match the baseline EXACTLY (invariants of the
+# sharding design, not workload-dependent magnitudes)
+SHARDED_EXACT = ("launches", "bitwise_mismatches")
+
+
+def _sharded_key(row: dict) -> str:
+    return f"{row.get('workload')}/{row.get('grad_impl')}"
+
+
+def compare_sharded(baseline_rows, fresh_rows, tolerance: float):
+    """Yield (key, field, old, new, ok) for every sharded counter."""
+    fresh_by_key = {_sharded_key(r): r for r in fresh_rows}
+    for row in baseline_rows:
+        key = _sharded_key(row)
+        fresh = fresh_by_key.get(key)
+        if fresh is None:
+            yield key, "<row>", "present", "missing", False
+            continue
+        for f, old in row.get("counters", {}).items():
+            new = fresh.get("counters", {}).get(f)
+            if f in SHARDED_EXACT:
+                ok = new == old
+            else:
+                ok = new is not None and _within(old, new, tolerance)
+            yield key, f, old, new, ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_kernels.json")
+    ap.add_argument("--sharded-baseline", default="BENCH_sharded.json")
     ap.add_argument("--tolerance", type=float, default=0.20)
     args = ap.parse_args()
 
@@ -106,9 +141,37 @@ def main() -> int:
                     print(f"  (info) density={row.get('density')} "
                           f"{impl}.{f}={counters[f]}")
 
+    # sharded invariants (4 forced host devices, run in a subprocess)
+    try:
+        sharded_base, sver = read_bench_json(args.sharded_baseline)
+    except (OSError, ValueError) as e:
+        print(f"REGRESSION GATE: cannot read sharded baseline "
+              f"{args.sharded_baseline}: {e}")
+        return 1
+    if not sharded_base:
+        print("REGRESSION GATE: sharded baseline has no rows")
+        return 1
+    head = sharded_base[0]
+    print(f"sharded baseline: {args.sharded_baseline} (schema_version={sver}, "
+          f"{head['workload']}, {len(sharded_base)} rows)")
+
+    from benchmarks import bench_sharded
+
+    fresh_sharded = bench_sharded.main(
+        B=head["B"], L=head["L"], g=head["g"], n=head["n"], out=None,
+        impls=tuple(r["grad_impl"] for r in sharded_base),
+    )
+    for key, field, old, new, ok in compare_sharded(
+        sharded_base, fresh_sharded, args.tolerance
+    ):
+        status = "ok" if ok else "REGRESSION"
+        print(f"  [{status}] sharded={key} {field}: {old} -> {new}")
+        if not ok:
+            failures.append((key, field, old, new))
+
     if failures:
         print(f"REGRESSION GATE: {len(failures)} counter(s) moved more than "
-              f"{args.tolerance:.0%} vs {args.baseline}")
+              f"{args.tolerance:.0%} vs the committed baselines")
         return 1
     print("REGRESSION GATE: clean")
     return 0

@@ -26,7 +26,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, no JSON artifacts (CI sanity)")
     ap.add_argument("--skip", nargs="*", default=[],
-                    choices=["synthetic", "gradcount", "objective", "kernels"])
+                    choices=["synthetic", "gradcount", "objective", "kernels",
+                             "sharded"])
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -89,6 +90,18 @@ def main() -> None:
                 c = impl["pallas_compact_batched"]
                 print(f"kernel_gradpsi_{r['density']},{c['grid_steps']},"
                       f"live={r['live_tiles']}/{r['total_tiles']}")
+
+    if "sharded" not in args.skip:
+        from benchmarks import bench_sharded
+
+        rows = bench_sharded.main(
+            smoke=smoke, out=None if smoke else "BENCH_sharded.json"
+        )
+        for r in rows:
+            c = r["counters"]
+            print(f"sharded_{r['workload']}_{r['grad_impl']},"
+                  f"{c['rounds_total']},"
+                  f"bitwise_mismatches={c['bitwise_mismatches']}")
 
 
 if __name__ == "__main__":

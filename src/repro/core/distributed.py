@@ -40,6 +40,36 @@ from repro.core.regularizers import GroupSparseReg
 from repro.core.solver import OTResult, SolveOptions, _solve_jit, _split
 
 
+#: Mesh-axis name of the problem (batch) dimension used by the sharded
+#: batched solver (``repro.core.sharded``) and the multi-device serving
+#: engine.  One name, defined once, so mesh construction, partition rules,
+#: and shard_map specs always agree.
+BATCH_AXIS = "batch"
+
+
+def make_batch_mesh(num_devices: int | None = None) -> Mesh:
+    """Build the 1-D problem-axis mesh for sharded batched solving.
+
+    Parameters
+    ----------
+    num_devices : int, optional
+        How many local devices to span.  Defaults to every local device
+        (``jax.local_device_count()``).
+
+    Returns
+    -------
+    jax.sharding.Mesh
+        A 1-D mesh whose single axis is named :data:`BATCH_AXIS`.  The
+        batched solver shards the problem axis ``B`` over it; everything
+        else in a solve is per-problem state and needs no other axis.
+    """
+    from repro.utils.compat import make_mesh
+
+    if num_devices is None:
+        num_devices = jax.local_device_count()
+    return make_mesh((num_devices,), (BATCH_AXIS,))
+
+
 def _data_axes(mesh: Mesh):
     """All mesh axes that shard the column dimension n."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

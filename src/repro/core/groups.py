@@ -56,6 +56,24 @@ class GroupSpec:
         """sqrt(g_l) used in the bounds (Eq. 6/7) — true sizes."""
         return np.sqrt(np.asarray(self.sizes, np.float64)).astype(np.float32)
 
+    def __repr__(self) -> str:
+        """Compact geometry summary (docs examples / bug reports).
+
+        Shows the padded layout and how much of it is real mass-carrying
+        rows; the per-group sizes tuple is elided past a few entries.
+        """
+        sizes = self.sizes
+        shown = (
+            str(tuple(sizes))
+            if len(sizes) <= 6
+            else f"({', '.join(map(str, sizes[:5]))}, ... x{len(sizes)})"
+        )
+        fill = self.m / max(self.m_pad, 1)
+        return (
+            f"GroupSpec(L={self.num_groups}, g_pad={self.group_size}, "
+            f"m={self.m}/{self.m_pad} rows real ({fill:.1%}), sizes={shown})"
+        )
+
 
 def spec_from_labels(labels: Sequence[int], *, pad_to: int = 8) -> GroupSpec:
     """Build a GroupSpec from integer class labels (any order).

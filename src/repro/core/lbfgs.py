@@ -79,6 +79,28 @@ def where_state(mask: jnp.ndarray, new, old):
     return jax.tree_util.tree_map(sel, new, old)
 
 
+def state_pspecs(spec) -> "LbfgsState":
+    """Flatten the batched state for ``shard_map``: one spec per leaf.
+
+    Every leaf of :class:`LbfgsState` carries a leading problem axis ``B``
+    (including the scalar-per-problem counters — they are ``(B,)`` vectors,
+    never true scalars, precisely so the state shards cleanly).  This
+    returns an ``LbfgsState`` whose leaves are all ``spec`` — usable
+    directly as a shard_map in/out spec for the solver state.
+
+    Parameters
+    ----------
+    spec : jax.sharding.PartitionSpec
+        Leading-axis spec, e.g. ``P("batch")``.
+
+    Returns
+    -------
+    LbfgsState
+        A state-shaped pytree of partition specs.
+    """
+    return LbfgsState(*([spec] * len(LbfgsState._fields)))
+
+
 def _vdot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Batched inner product (B, d), (B, d) -> (B,).
 

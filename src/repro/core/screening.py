@@ -50,6 +50,49 @@ class ScreenState:
     o_snap: jnp.ndarray         # (L, n)   o~
     active: jnp.ndarray         # (L, n)   bool, the set N
 
+    def __repr__(self) -> str:
+        """Geometry + active-set density, not megabytes of snapshot floats.
+
+        The default dataclass repr prints every array; this one is the
+        diagnostic line used by docs examples and bug reports (see also
+        :func:`repro.core.solver.describe`).
+        """
+        lead = self.z_snap.shape[:-2]
+        L, n = self.z_snap.shape[-2:]
+        m_pad = self.alpha_snap.shape[-1]
+        try:
+            total = int(jnp.size(self.active))
+            act = int(jnp.sum(self.active))
+            density = f"{act}/{total} ({act / max(total, 1):.1%})"
+        except Exception:  # abstract tracers have no concrete values
+            density = "<traced>"
+        batch = f"batch={lead}, " if lead else ""
+        return (
+            f"ScreenState({batch}L={L}, n={n}, m_pad={m_pad}, "
+            f"active N={density}, dtype={self.z_snap.dtype})"
+        )
+
+
+def state_pspecs(spec) -> ScreenState:
+    """Flatten the batched screening state for ``shard_map``.
+
+    Returns a :class:`ScreenState`-shaped pytree with every leaf set to
+    ``spec`` (each leaf of a batched state carries a leading problem axis,
+    so a single leading-axis spec describes all of them).
+
+    Parameters
+    ----------
+    spec : jax.sharding.PartitionSpec
+        Leading-axis spec, e.g. ``P("batch")``.
+
+    Returns
+    -------
+    ScreenState
+        A state-shaped pytree of partition specs.
+    """
+    fields = [f.name for f in dataclasses.fields(ScreenState)]
+    return ScreenState(**{name: spec for name in fields})
+
 
 def init_state(
     m_pad: int, n: int, L: int, dtype=jnp.float32, batch_shape: Tuple[int, ...] = ()

@@ -59,6 +59,25 @@ from repro.core.regularizers import GroupSparseReg
 
 @dataclasses.dataclass(frozen=True)
 class SolveOptions:
+    """Static solver configuration (jitted programs specialize on it).
+
+    Parameters
+    ----------
+    snapshot_every : int
+        ``r`` in Algorithm 1 — L-BFGS iterations per screening round.
+    max_rounds : int
+        Cap on the number of rounds (``s_r``).
+    grad_impl : {'dense', 'screened', 'pallas'}
+        Gradient oracle backend: the paper's unscreened origin, the
+        masked-XLA screened reference, or the Pallas kernel pipeline.
+    pallas_impl : {'grid', 'compact', 'auto'}
+        Kernel grid mode for ``grad_impl='pallas'`` (see kernels/ops.py).
+    tight_active_refresh : bool
+        Beyond-paper tighter active-set refresh (off for paper fidelity).
+    lbfgs : LbfgsOptions
+        Inner optimizer configuration.
+    """
+
     snapshot_every: int = 10          # r in Algorithm 1
     max_rounds: int = 200             # cap on s_r
     grad_impl: str = "screened"       # 'dense' | 'screened' | 'pallas'
@@ -83,6 +102,7 @@ def dispatch_count() -> int:
 
 
 def reset_dispatch_count() -> None:
+    """Zero the launch counter (tests / benchmarks bracket work with it)."""
     _DISPATCHES["count"] = 0
 
 
@@ -92,7 +112,25 @@ def _launch(fn, *args):
 
 
 class OTResult:
-    """Solution container (host-side convenience wrapper)."""
+    """Solution container (host-side convenience wrapper).
+
+    Attributes
+    ----------
+    alpha : jnp.ndarray
+        ``(m_pad,)`` optimal source duals (padded layout).
+    beta : jnp.ndarray
+        ``(n,)`` optimal target duals.
+    value : jnp.ndarray
+        Scalar dual objective at the solution (maximization sign).
+    lbfgs_state : LbfgsState
+        Final optimizer state (iterates, history, convergence flags).
+    screen_state : ScreenState
+        Final screening snapshots + active set.
+    rounds : int
+        Algorithm-1 rounds run.
+    stats : dict
+        Accumulated screening verdict counts ``{'zero','check','active'}``.
+    """
 
     def __init__(self, alpha, beta, value, state, screen_state, rounds, stats):
         self.alpha = alpha
@@ -105,14 +143,17 @@ class OTResult:
 
     @property
     def iterations(self):
+        """Total L-BFGS iterations taken."""
         return int(self.lbfgs_state.iter)
 
     @property
     def n_evals(self):
+        """Total value_and_grad oracle evaluations."""
         return int(self.lbfgs_state.n_evals)
 
     @property
     def converged(self):
+        """Whether the dual solve converged (vs. failed / hit caps)."""
         return bool(self.lbfgs_state.converged)
 
 
@@ -137,6 +178,7 @@ class BatchOTResult:
 
     @property
     def converged(self):
+        """``(B,)`` bool — per-problem convergence flags."""
         return self.lbfgs_state.converged
 
     def __getitem__(self, i: int) -> OTResult:
@@ -486,10 +528,31 @@ def solve_dual(
     reg: GroupSparseReg,
     opts: SolveOptions = SolveOptions(),
 ) -> OTResult:
-    """Solve the group-sparse OT dual on padded inputs.
+    """Solve the group-sparse OT dual on padded inputs (one problem).
 
-    C: (m_pad, n) padded cost matrix; a: (m_pad,) padded source marginal;
-    b: (n,) target marginal.
+    The B = 1 slice of :func:`solve_batch` — identical op sequence, so a
+    problem solved solo matches the same problem inside any batch bitwise.
+
+    Parameters
+    ----------
+    C : jnp.ndarray
+        ``(m_pad, n)`` float32 padded cost matrix (see
+        :func:`repro.core.groups.pad_cost_matrix`).
+    a : jnp.ndarray
+        ``(m_pad,)`` padded source marginal (zero mass on padded rows).
+    b : jnp.ndarray
+        ``(n,)`` target marginal.
+    spec : GroupSpec
+        Group layout of the padded rows.
+    reg : GroupSparseReg
+        Regularizer parameters (gamma, tau).
+    opts : SolveOptions, optional
+        Backend and schedule configuration.
+
+    Returns
+    -------
+    OTResult
+        Optimal duals, objective, final solver/screening state, stats.
     """
     prob = DualProblem(
         num_groups=spec.num_groups,
@@ -522,14 +585,33 @@ def solve_batch(
 ) -> BatchOTResult:
     """Solve B same-shape group-sparse OT problems in ONE jitted program.
 
-    C: (B, m_pad, n) padded cost matrices; a: (B, m_pad) padded source
-    marginals; b: (B, n) target marginals.  All problems share the group
-    layout ``spec`` and regularizer ``reg`` (the static geometry the
-    program is compiled for); marginals and costs vary freely.
+    All problems share the group layout ``spec`` and regularizer ``reg``
+    (the static geometry the program is compiled for); marginals and
+    costs vary freely.  Per problem the result is bitwise-identical to
+    :func:`solve_dual` on the same inputs: the batch axis only adds a
+    leading dim to every op, and converged problems freeze via masking
+    rather than early exit.  For the multi-device variant see
+    :func:`repro.core.sharded.solve_batch_sharded`.
 
-    Per problem the result is bitwise-identical to :func:`solve_dual` on
-    the same inputs: the batch axis only adds a leading dim to every op,
-    and converged problems freeze via masking rather than early exit.
+    Parameters
+    ----------
+    C : jnp.ndarray
+        ``(B, m_pad, n)`` float32 padded cost matrices.
+    a : jnp.ndarray
+        ``(B, m_pad)`` padded source marginals.
+    b : jnp.ndarray
+        ``(B, n)`` target marginals.
+    spec : GroupSpec
+        Shared group layout.
+    reg : GroupSparseReg
+        Regularizer parameters.
+    opts : SolveOptions, optional
+        Backend and schedule configuration.
+
+    Returns
+    -------
+    BatchOTResult
+        Batched result; ``result[i]`` views problem i as an OTResult.
     """
     assert C.ndim == 3, f"solve_batch expects (B, m_pad, n) costs, got {C.shape}"
     prob = DualProblem(
@@ -560,3 +642,76 @@ def recover_plan_batch(
     """Batched primal plans (B, m_pad, n) from a :class:`BatchOTResult`."""
     prob = DualProblem(spec.num_groups, spec.group_size, int(C.shape[2]), reg)
     return plan_from_duals(result.alpha, result.beta, C, prob)
+
+
+def describe(
+    spec: GroupSpec,
+    n: int,
+    reg: GroupSparseReg,
+    opts: SolveOptions = SolveOptions(),
+    result=None,
+) -> str:
+    """One diagnostic block: padded geometry, tile counts, live density.
+
+    Docs examples and bug reports print this so everyone looks at the
+    same numbers (see also the compact ``repr`` of :class:`GroupSpec` and
+    ``ScreenState``).
+
+    Parameters
+    ----------
+    spec : GroupSpec
+        Group layout of the (padded) problem.
+    n : int
+        Number of target columns.
+    reg : GroupSparseReg
+        Regularizer parameters.
+    opts : SolveOptions, optional
+        Shown so reports pin down the backend that ran.
+    result : OTResult or BatchOTResult, optional
+        When given, appends convergence and screening-verdict totals —
+        the live-density line is the fraction of gradient blocks the
+        screened oracle actually computed over the whole solve.
+
+    Returns
+    -------
+    str
+        A multi-line human-readable report.
+    """
+    from repro.kernels.gradpsi import DEFAULT_TILE_N, resolve_tile_l
+
+    prob = DualProblem(spec.num_groups, spec.group_size, int(n), reg)
+    tile_l = resolve_tile_l(
+        prob.num_groups, prob.group_size, DEFAULT_TILE_N, 4
+    )
+    L_pad, n_pad = prob.tile_padded_shape(tile_l, DEFAULT_TILE_N)
+    lt, nt = L_pad // tile_l, n_pad // DEFAULT_TILE_N
+    lines = [
+        f"problem:  {spec!r}",
+        f"dual:     m_pad={prob.m_pad} n={prob.n} "
+        f"(x dim {prob.m_pad + prob.n}), gamma={reg.gamma} tau={reg.tau}",
+        f"tiles:    ({tile_l} groups x {DEFAULT_TILE_N} cols) grid "
+        f"{lt} x {nt} = {lt * nt} tiles "
+        f"(L padded {prob.num_groups}->{L_pad}, n padded {prob.n}->{n_pad})",
+        f"backend:  grad_impl={opts.grad_impl} pallas_impl={opts.pallas_impl} "
+        f"snapshot_every={opts.snapshot_every}",
+    ]
+    if result is not None:
+        if isinstance(result.stats, dict):
+            zero = result.stats["zero"]
+            check = result.stats["check"]
+            act = result.stats["active"]
+            conv, rounds = result.converged, result.rounds
+        else:
+            import numpy as _np
+
+            s = _np.asarray(result.stats)
+            zero, check, act = (int(v) for v in s.sum(axis=0))
+            conv = bool(jnp.all(result.converged))
+            rounds = int(jnp.sum(result.rounds))
+        total = max(zero + check + act, 1)
+        lines += [
+            f"solve:    rounds={rounds} converged={conv}",
+            f"verdicts: zero={zero} check={check} active={act} "
+            f"-> live density {(check + act) / total:.1%}",
+        ]
+    return "\n".join(lines)

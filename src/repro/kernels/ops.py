@@ -98,10 +98,12 @@ class PaddedProblem:
 
     @property
     def grid(self) -> Tuple[int, int]:
+        """``(L_tiles, N_tiles)`` — the kernel grid / flag-matrix shape."""
         return (self.L_pad // self.tile_l, self.n_pad // self.tile_n)
 
     @property
     def num_tiles(self) -> int:
+        """Total tiles in the dense grid (per problem)."""
         lt, nt = self.grid
         return lt * nt
 
@@ -231,9 +233,36 @@ def dual_value_and_grad_padded(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Screened Pallas evaluation against a prepared (pre-padded) problem.
 
-    Returns (value, grad_alpha, grad_beta) for the MAXIMIZATION problem —
-    identical to repro.core.dual.dual_value_and_grad with the screened mask
-    (Theorem 2: masked entries are provably zero).
+    Identical to ``repro.core.dual.dual_value_and_grad`` with the screened
+    mask (Theorem 2: masked entries are provably zero); this is the
+    ``grad_impl='pallas'`` oracle of the solver.
+
+    Parameters
+    ----------
+    alpha : jnp.ndarray
+        ``(m_pad,)`` float32 source duals (unpadded kernel-input layout;
+        tile padding happens here via :func:`pad_tile_inputs`).
+    beta : jnp.ndarray
+        ``(n,)`` float32 target duals.
+    a, b : jnp.ndarray
+        ``(m_pad,)`` / ``(n,)`` marginals.
+    flags : jnp.ndarray
+        ``(L_tiles, N_tiles)`` int32 tile skip flags (0 = certified-zero
+        tile) from :func:`screen_tile_flags`.
+    pp : PaddedProblem
+        Prepared geometry + padded cost from :func:`prepare_padded_problem`.
+    prob : DualProblem
+        Static problem description (static jit arg).
+    impl : {'grid', 'compact', 'auto'}
+        Dense grid, compacted dynamic grid, or runtime density switch.
+    interpret : bool, optional
+        Pallas interpret mode; defaults to "not on a real TPU".
+
+    Returns
+    -------
+    tuple of jnp.ndarray
+        ``(value, grad_alpha, grad_beta)`` — scalar, ``(m_pad,)``,
+        ``(n,)`` — for the MAXIMIZATION dual.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -381,10 +410,37 @@ def dual_value_and_grad_padded_batched(
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Screened Pallas evaluation of B problems against a prepared batch.
 
-    Returns (value (B,), grad_alpha (B, m_pad), grad_beta (B, n)) for the
-    MAXIMIZATION problem — per problem identical to the solo padded path.
-    'compact' (and 'auto' below the density threshold) runs one dynamic
-    grid over the concatenated surviving tiles of the whole batch.
+    Per problem identical (bitwise) to the solo padded path.  'compact'
+    (and 'auto' below the density threshold) runs ONE dynamic grid over
+    the concatenated surviving tiles of the whole batch, so grid steps
+    scale with the batch's total live tiles.  Under ``shard_map`` each
+    shard calls this on its local problems and builds its own schedule
+    (see ``repro.core.sharded``).
+
+    Parameters
+    ----------
+    alpha, beta : jnp.ndarray
+        ``(B, m_pad)`` / ``(B, n)`` float32 duals.
+    a, b : jnp.ndarray
+        ``(B, m_pad)`` / ``(B, n)`` marginals.
+    flags : jnp.ndarray
+        ``(B, L_tiles, N_tiles)`` int32 per-problem tile skip flags from
+        :func:`screen_tile_flags_batched`.
+    pp : PaddedProblem
+        Prepared batch geometry (``Cp`` is ``(B, L_pad*g, n_pad)``).
+    prob : DualProblem
+        Static problem description.
+    impl : {'grid', 'compact', 'auto'}
+        Gradient grid mode (both modes are bitwise-equal; 'auto' switches
+        on the batch-wide live-tile fraction).
+    interpret : bool, optional
+        Pallas interpret mode; defaults to "not on a real TPU".
+
+    Returns
+    -------
+    tuple of jnp.ndarray
+        ``(value (B,), grad_alpha (B, m_pad), grad_beta (B, n))`` for the
+        MAXIMIZATION dual.
     """
     if interpret is None:
         interpret = default_interpret()

@@ -10,12 +10,18 @@ static shapes, slot recycling):
     marginals); the engine pads each to a canonical *bucket* geometry
     (L groups x padded group size, n rounded up to ``n_quant``) so every
     problem in a bucket shares one compiled program,
-  * each bucket owns ``max_batch`` fixed slots; admission writes the
-    request's padded arrays into a free slot and (re)initializes that
-    slot's solver state, preserving in-flight neighbours bit-for-bit,
+  * each bucket owns a fixed grid of ``num_devices x slots_per_device``
+    slots; admission writes the request's padded arrays into a free slot
+    (preferring the least-loaded device) and (re)initializes that slot's
+    solver state, preserving in-flight neighbours bit-for-bit,
   * every engine tick runs ONE fused ``batch_round`` per active bucket —
     a full Algorithm-1 round (L-BFGS segment + screening refresh) for all
-    slots in one program launch,
+    slots in one program launch.  With a device mesh attached, that one
+    launch is a ``shard_map`` program whose problem axis is split over the
+    mesh (``core.sharded``): each device advances its own slots with its
+    own screening state and its own compact tile schedule, and the only
+    cross-device movement is the engine's read of the ``(S,)`` converged/
+    failed flags at the round boundary,
   * finished slots (converged / failed / round cap) are retired: the
     request gets its objective value and its primal plan un-padded back
     to the caller's row order, and the slot is recycled.
@@ -26,6 +32,12 @@ along for free.  Column padding appends zero-mass targets with PAD_COST
 costs: their plan column is exactly zero and their dual variable has zero
 gradient, so a padded solve equals the unpadded one on real entries (same
 argument as row padding, see core/groups.py).
+
+Slot -> (device, lane) mapping: the problem axis is sharded in contiguous
+blocks, so slot ``i`` lives on device ``i // slots_per_device``, lane
+``i % slots_per_device``.  Admission balances live requests across devices
+because per-tick wall-clock is the *max* over devices of their local work
+(the compact kernel's grid scales with each shard's surviving tiles).
 """
 from __future__ import annotations
 
@@ -48,7 +60,36 @@ log = get_logger("ot_serving")
 
 @dataclasses.dataclass
 class OTRequest:
-    """One OT solve request (inputs in the caller's row order)."""
+    """One OT solve request (inputs in the caller's row order).
+
+    Parameters
+    ----------
+    rid : int
+        Caller-chosen request id (echoed back on retirement).
+    C : np.ndarray
+        ``(m, n)`` float cost matrix in the caller's row/column order.
+    labels : np.ndarray
+        ``(m,)`` integer class labels of the source rows (the group
+        structure of the regularizer).
+    a : np.ndarray, optional
+        ``(m,)`` source marginal; defaults to uniform ``1/m``.
+    b : np.ndarray, optional
+        ``(n,)`` target marginal; defaults to uniform ``1/n``.
+
+    Attributes
+    ----------
+    value : float or None
+        Dual objective at convergence (filled at retirement).
+    plan : np.ndarray or None
+        ``(m, n)`` primal transport plan, caller's row order (filled at
+        retirement).
+    rounds : int
+        Algorithm-1 rounds the solve ran.
+    converged : bool
+        Whether the solver converged (vs. failed / hit the round cap).
+    done : bool
+        Set when the request has been retired.
+    """
 
     rid: int
     C: np.ndarray                      # (m, n) cost matrix
@@ -70,18 +111,28 @@ def _select_slots(mask, new, old):
 
 
 class _Bucket:
-    """Fixed-slot batch of one padded geometry (L, g_pad, n_pad)."""
+    """Fixed-slot batch of one padded geometry (L, g_pad, n_pad).
 
-    def __init__(self, key: Tuple[int, int, int], max_batch: int,
-                 reg: GroupSparseReg, opts: slv.SolveOptions, dtype):
+    ``num_slots`` = ``num_devices * slots_per_device``; with a mesh
+    attached, slot arrays and solver state are committed shard-wise so an
+    engine tick dispatches one sharded ``batch_round`` with no implicit
+    resharding.
+    """
+
+    def __init__(self, key: Tuple[int, int, int], slots_per_device: int,
+                 reg: GroupSparseReg, opts: slv.SolveOptions, dtype,
+                 mesh=None):
         L, g_pad, n_pad = key
         self.key = key
-        self.max_batch = max_batch
+        self.mesh = mesh
+        self.num_devices = mesh.size if mesh is not None else 1
+        self.slots_per_device = slots_per_device
+        self.num_slots = slots_per_device * self.num_devices
         self.reg = reg
         self.opts = opts
         self.prob = DualProblem(L, g_pad, n_pad, reg)
         m_pad = self.prob.m_pad
-        S = max_batch
+        S = self.num_slots
         self.slots: List[Optional[OTRequest]] = [None] * S
         self._meta: List[Optional[dict]] = [None] * S   # perm/spec per slot
         self.C = np.full((S, m_pad, n_pad), G.PAD_COST, dtype)
@@ -96,29 +147,61 @@ class _Bucket:
         self._device: Optional[tuple] = None
         self._padded = None
 
+    def slot_placement(self, slot: int) -> Tuple[int, int]:
+        """Map a slot index to its ``(device, lane)`` coordinates.
+
+        The problem axis shards in contiguous blocks over the 1-D mesh, so
+        this is a pure index computation — no device queries.
+        """
+        return slot // self.slots_per_device, slot % self.slots_per_device
+
     def _device_arrays(self) -> tuple:
         if self._device is None:
-            self._device = (
+            arrs = (
                 jnp.asarray(self.C), jnp.asarray(self.a), jnp.asarray(self.b),
                 jnp.asarray(self.row_mask), jnp.asarray(self.sqrt_g),
             )
+            if self.mesh is not None:
+                from repro.core import sharded as shd
+
+                arrs = shd.device_put_batch(arrs, self.mesh)
+            self._device = arrs
             self._padded = None
             if self.opts.grad_impl == "pallas":
-                from repro.kernels import ops as kops
+                if self.mesh is not None:
+                    from repro.core import sharded as shd
 
-                self._padded = kops.prepare_padded_problem_batched(
-                    self._device[0], self.prob
-                )
+                    self._padded = shd.prepare_padded_sharded(
+                        self._device[0], self.prob, self.mesh
+                    )
+                else:
+                    from repro.kernels import ops as kops
+
+                    self._padded = kops.prepare_padded_problem_batched(
+                        self._device[0], self.prob
+                    )
         return self._device
 
     # -- admission -----------------------------------------------------------
     def free_slot(self) -> Optional[int]:
+        """Pick a free slot on the least-loaded device (None if full).
+
+        Per-tick latency is the max over devices of their local work, so
+        spreading live requests keeps the sharded round balanced.  With
+        one device this degenerates to first-free-slot (the original
+        policy), preserving single-device behavior exactly.
+        """
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return None
+        load = [0] * self.num_devices
         for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
+            if s is not None:
+                load[i // self.slots_per_device] += 1
+        return min(free, key=lambda i: (load[i // self.slots_per_device], i))
 
     def admit(self, slot: int, req: OTRequest, spec: G.GroupSpec):
+        """Write ``req``'s padded arrays into ``slot`` (no state init)."""
         L, g_pad, n_pad = self.key
         m, n = req.C.shape
         dtype = self.C.dtype
@@ -139,16 +222,32 @@ class _Bucket:
         self.slots[slot] = req
         self._meta[slot] = {"spec": spec, "perm": perm, "m": m, "n": n}
         self._device = None          # slot arrays changed: re-upload lazily
-        log.info("admitted OT request %d into bucket %s slot %d (m=%d n=%d)",
-                 req.rid, self.key, slot, m, n)
+        dev, lane = self.slot_placement(slot)
+        log.info(
+            "admitted OT request %d into bucket %s slot %d "
+            "(device %d lane %d, m=%d n=%d)",
+            req.rid, self.key, slot, dev, lane, m, n,
+        )
 
-    def refresh_state(self, new_mask: np.ndarray):
-        """(Re)initialize solver state for slots in ``new_mask``; keep others."""
+    def _init_state(self):
+        """One jitted state init over all slots (sharded when mesh set)."""
         C, a, b, row_mask, sqrt_g = self._device_arrays()
-        fresh = slv._launch(
+        if self.mesh is not None:
+            from repro.core import sharded as shd
+
+            return slv._launch(
+                shd.init_batch_state_sharded,
+                C, a, b, row_mask, sqrt_g, self.prob, self.opts,
+                self.mesh, self._padded,
+            )
+        return slv._launch(
             slv.init_batch_state,
             C, a, b, row_mask, sqrt_g, self.prob, self.opts, self._padded,
         )
+
+    def refresh_state(self, new_mask: np.ndarray):
+        """(Re)initialize solver state for slots in ``new_mask``; keep others."""
+        fresh = self._init_state()
         if self.state is None:
             self.state = fresh
         else:
@@ -164,12 +263,23 @@ class _Bucket:
         if not active or self.state is None:
             return []
         C, a, b, row_mask, sqrt_g = self._device_arrays()
-        self.state = slv._launch(
-            slv.batch_round,
-            self.state, C, a, b, row_mask, sqrt_g,
-            self.prob, self.opts, self._padded,
-        )
+        if self.mesh is not None:
+            from repro.core import sharded as shd
+
+            self.state = slv._launch(
+                shd.batch_round_sharded,
+                self.state, C, a, b, row_mask, sqrt_g,
+                self.prob, self.opts, self.mesh, self._padded,
+            )
+        else:
+            self.state = slv._launch(
+                slv.batch_round,
+                self.state, C, a, b, row_mask, sqrt_g,
+                self.prob, self.opts, self._padded,
+            )
         lb = self.state.lb
+        # round-boundary gather: the only cross-device movement in a tick
+        # (a few bytes per device of converged/failed flags + round counts)
         conv = np.asarray(lb.converged)
         failed = np.asarray(lb.failed)
         rounds = np.asarray(self.state.rounds)
@@ -185,8 +295,12 @@ class _Bucket:
         meta = self._meta[slot]
         lb = self.state.lb
         m_pad = self.prob.m_pad
-        alpha = lb.x[slot, :m_pad]
-        beta = lb.x[slot, m_pad:]
+        # materialize the retiring slot's duals on host: keeps the plan
+        # recovery a plain single-device computation even when lb.x is
+        # committed shard-wise across the mesh
+        x = np.asarray(lb.x[slot])
+        alpha = jnp.asarray(x[:m_pad])
+        beta = jnp.asarray(x[m_pad:])
         T_pad = np.asarray(
             plan_from_duals(alpha, beta, jnp.asarray(self.C[slot]), self.prob)
         )
@@ -218,11 +332,44 @@ class _Bucket:
 class OTServingEngine:
     """Serve a stream of OT solve requests with bucketed continuous batching.
 
-    Parameters mirror the solver: one regularizer + SolveOptions per engine
-    (the compiled programs are specialized on them).  ``n_quant`` is the
-    column-padding granularity — requests whose padded geometry
-    (L, g_pad, ceil(n / n_quant) * n_quant) coincides share a bucket and
-    therefore a compiled program and a batch.
+    Requests whose padded geometry ``(L, g_pad, ceil(n / n_quant) *
+    n_quant)`` coincides share a bucket — and therefore a compiled program
+    and a batch.  Each tick advances every active bucket by one fused
+    Algorithm-1 round in a single program launch per bucket; attached to a
+    device mesh, that launch is a ``shard_map`` program with the slot axis
+    split across devices (see :mod:`repro.core.sharded`).
+
+    Parameters
+    ----------
+    reg : GroupSparseReg
+        Regularizer shared by every request (compiled programs specialize
+        on it).
+    opts : SolveOptions, optional
+        Solver options, including the ``grad_impl`` backend
+        ('dense' | 'screened' | 'pallas').
+    max_batch : int, optional
+        Slots **per device** in each bucket; a bucket's total slot count
+        is ``max_batch * mesh.size`` (or just ``max_batch`` without a
+        mesh).
+    n_quant : int, optional
+        Column-padding granularity for bucket keys.
+    pad_to : int, optional
+        Group-size padding granularity (rows per group rounded up).
+    dtype : numpy dtype, optional
+        Storage dtype of the slot arrays (float32 everywhere in practice).
+    mesh : jax.sharding.Mesh, optional
+        A 1-D batch mesh (see
+        :func:`repro.core.distributed.make_batch_mesh`).  When given,
+        every bucket packs ``mesh.size * max_batch`` slots and ticks run
+        sharded; when omitted the engine is single-device and its
+        behavior (and results) are bit-for-bit those of the pre-mesh
+        engine.
+
+    Examples
+    --------
+    >>> engine = OTServingEngine(GroupSparseReg.from_rho(1.0, 0.6))
+    >>> done = engine.run([OTRequest(rid=0, C=C, labels=y)])
+    >>> done[0].value, done[0].plan.shape
     """
 
     def __init__(
@@ -233,6 +380,7 @@ class OTServingEngine:
         n_quant: int = 64,
         pad_to: int = 8,
         dtype=np.float32,
+        mesh=None,
     ):
         self.reg = reg
         self.opts = opts
@@ -240,6 +388,8 @@ class OTServingEngine:
         self.n_quant = n_quant
         self.pad_to = pad_to
         self.dtype = dtype
+        self.mesh = mesh
+        self.num_devices = mesh.size if mesh is not None else 1
         self.buckets: Dict[Tuple[int, int, int], _Bucket] = {}
 
     def _bucket_key(self, req: OTRequest) -> Tuple[Tuple[int, int, int], G.GroupSpec]:
@@ -249,24 +399,43 @@ class OTServingEngine:
         return (spec.num_groups, spec.group_size, n_pad), spec
 
     def try_admit(self, req: OTRequest) -> bool:
-        """Admit into the request's bucket if a slot is free (no round run)."""
+        """Admit into the request's bucket if a slot is free (no round run).
+
+        Parameters
+        ----------
+        req : OTRequest
+            The request to place.
+
+        Returns
+        -------
+        bool
+            True if a slot was free (the request is now in flight), False
+            if the bucket is full (caller retries after a tick).
+        """
         key, spec = self._bucket_key(req)
         bucket = self.buckets.get(key)
         if bucket is None:
             bucket = _Bucket(key, self.max_batch, self.reg, self.opts,
-                             self.dtype)
+                             self.dtype, mesh=self.mesh)
             self.buckets[key] = bucket
         slot = bucket.free_slot()
         if slot is None:
             return False
         bucket.admit(slot, req, spec)
-        new_mask = np.zeros((self.max_batch,), bool)
+        new_mask = np.zeros((bucket.num_slots,), bool)
         new_mask[slot] = True
         bucket.refresh_state(new_mask)
         return True
 
     def tick(self) -> List[OTRequest]:
-        """One fused solver round per active bucket; returns finished."""
+        """One fused solver round per active bucket; returns finished.
+
+        Returns
+        -------
+        list of OTRequest
+            Requests retired this round, with ``value`` / ``plan`` /
+            ``rounds`` / ``converged`` filled in.
+        """
         finished: List[OTRequest] = []
         for bucket in self.buckets.values():
             finished.extend(bucket.tick())
@@ -278,6 +447,17 @@ class OTServingEngine:
         Admission scans the whole pending list, not just its head: a full
         bucket at the front must not starve requests whose buckets have
         free slots (no head-of-line blocking across buckets).
+
+        Parameters
+        ----------
+        requests : list of OTRequest
+            The workload; consumed in order subject to slot availability.
+
+        Returns
+        -------
+        list of OTRequest
+            All requests, each retired (``done=True``), in completion
+            order.
         """
         pending = list(requests)
         done: List[OTRequest] = []

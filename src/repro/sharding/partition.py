@@ -80,6 +80,20 @@ def replicated_rules(mesh_axis_names: Sequence[str]) -> Rules:
     return Rules(table=(("batch", ()),))
 
 
+def batch_solve_rules(mesh_axis_names: Sequence[str]) -> Rules:
+    """Rules for the sharded batched OT solver's 1-D problem mesh.
+
+    One logical axis, ``problems``, mapped to the mesh's batch axis (see
+    ``repro.core.distributed.BATCH_AXIS``); every other dimension of the
+    solve (duals, snapshots, L-BFGS history) is per-problem state that
+    lives under the problem axis and is never sharded further.
+    """
+    from repro.core.distributed import BATCH_AXIS
+
+    batch = (BATCH_AXIS,) if BATCH_AXIS in mesh_axis_names else ()
+    return Rules(table=(("problems", batch),))
+
+
 def fit_spec(shape, spec: P, mesh_sizes: Dict[str, int]) -> P:
     """Drop mesh axes that do not evenly divide their array dimension.
 

@@ -1,0 +1,203 @@
+"""Sharded batched solving: shard_map over 4 host devices == unsharded, bitwise.
+
+Same subprocess pattern as test_distributed.py: the host-platform device
+count must be forced before jax initializes, so each test spawns a child
+with its own XLA_FLAGS.  The contracts under test:
+
+  * ``solve_batch_sharded`` over a 4-device mesh is bitwise-identical per
+    problem to the unsharded ``solve_batch`` on all three ``grad_impl``
+    backends (duals, objectives, round counts, screening stats),
+  * a ragged batch (B not divisible by the mesh) pads with dummy problems
+    and un-pads on return without perturbing real problems,
+  * the multi-device serving engine packs slots across (device, lane),
+    retires under mixed convergence times with ONE launch per tick, and
+    serves every request to its solo-solve objective.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str, devices: int = 4, timeout: int = 600):
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=SRC,
+        JAX_PLATFORMS="cpu",
+    )
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=timeout,
+    )
+
+
+_PROBLEM_SETUP = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import groups as G
+    from repro.core.regularizers import GroupSparseReg
+    from repro.core.ot import squared_euclidean_cost
+    from repro.core import solver as slv
+    from repro.core.lbfgs import LbfgsOptions
+
+    assert jax.device_count() == 4, jax.device_count()
+    rng = np.random.default_rng(3)
+    L, g, n = 5, 8, 40
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    spec = G.spec_from_labels(labels, pad_to=4)
+
+    def make_batch(B):
+        Cs, As, Bs = [], [], []
+        for _ in range(B):
+            Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+            Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
+            C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+            C /= C.max()
+            Cs.append(G.pad_cost_matrix(C, labels, spec))
+            As.append(G.pad_marginal(np.full(m, 1/m, np.float32), labels, spec))
+            Bs.append(np.full(n, 1/n, np.float32))
+        return (jnp.asarray(np.stack(Cs)), jnp.asarray(np.stack(As)),
+                jnp.asarray(np.stack(Bs)))
+
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+"""
+
+
+def test_sharded_solve_batch_bitwise_all_backends():
+    """4-device sharded solve == unsharded solve_batch, bitwise, per backend.
+
+    Bitwise means: identical dual iterates, identical objectives, identical
+    per-problem round counts, identical screening-verdict stats — the
+    sharding must be invisible to every problem's trajectory.
+    """
+    r = _run(_PROBLEM_SETUP + """
+    from repro.core.sharded import solve_batch_sharded
+
+    C, a, b = make_batch(8)
+    for gi in ("dense", "screened", "pallas"):
+        opts = slv.SolveOptions(
+            grad_impl=gi, lbfgs=LbfgsOptions(max_iters=150)
+        )
+        rs = solve_batch_sharded(C, a, b, spec, reg, opts)
+        rb = slv.solve_batch(C, a, b, spec, reg, opts)
+        assert bool(jnp.all(rs.alpha == rb.alpha)), gi
+        assert bool(jnp.all(rs.beta == rb.beta)), gi
+        assert bool(jnp.all(rs.values == rb.values)), gi
+        assert bool(jnp.all(rs.rounds == rb.rounds)), gi
+        assert bool(jnp.all(rs.stats == rb.stats)), gi
+        assert bool(jnp.all(rs.converged)), gi
+        print("MATCH", gi)
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    for gi in ("dense", "screened", "pallas"):
+        assert f"MATCH {gi}" in r.stdout
+
+
+def test_sharded_ragged_batch_and_launch_count():
+    """B=6 over 4 devices pads with dummies, un-pads, stays bitwise; the
+    whole sharded solve is ONE program launch."""
+    r = _run(_PROBLEM_SETUP + """
+    from repro.core.sharded import solve_batch_sharded
+
+    C, a, b = make_batch(6)
+    opts = slv.SolveOptions(
+        grad_impl="screened", lbfgs=LbfgsOptions(max_iters=150)
+    )
+    slv.reset_dispatch_count()
+    rs = solve_batch_sharded(C, a, b, spec, reg, opts)
+    assert slv.dispatch_count() == 1, slv.dispatch_count()
+    rb = slv.solve_batch(C, a, b, spec, reg, opts)
+    assert len(rs) == 6
+    assert bool(jnp.all(rs.alpha == rb.alpha))
+    assert bool(jnp.all(rs.values == rb.values))
+    assert bool(jnp.all(rs.rounds == rb.rounds))
+    # result slicing gathers coherently across shards
+    assert float(rs[2].value) == float(rb[2].value)
+    print("MATCH ragged")
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MATCH ragged" in r.stdout
+
+
+def test_sharded_engine_slot_packing_and_retire():
+    """Multi-device engine: slots pack over (device, lane) via least-loaded
+    admission, ticks launch ONE sharded program, requests retire at their
+    own (mixed) convergence rounds, and late admissions into a running
+    sharded bucket don't perturb in-flight neighbours."""
+    r = _run("""
+        import numpy as np, jax
+        from repro.core.distributed import make_batch_mesh
+        from repro.core.lbfgs import LbfgsOptions
+        from repro.core.ot import solve_groupsparse_ot, squared_euclidean_cost
+        from repro.core.regularizers import GroupSparseReg
+        from repro.core.solver import (
+            SolveOptions, dispatch_count, reset_dispatch_count,
+        )
+        from repro.serving.ot_engine import OTRequest, OTServingEngine
+
+        OPTS = SolveOptions(grad_impl="screened",
+                            lbfgs=LbfgsOptions(max_iters=150))
+
+        def mk(rng, rid, n):
+            L, g = 4, 6
+            m = L * g
+            labels = np.repeat(np.arange(L), g)
+            Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+            Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
+            C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+            C /= C.max()
+            return OTRequest(rid=rid, C=C, labels=labels), (Xs, labels, Xt)
+
+        mesh = make_batch_mesh(4)
+        rng = np.random.default_rng(0)
+        reqs, raws = [], []
+        for rid in range(6):
+            req, raw = mk(rng, rid, 30 + rid)
+            reqs.append(req); raws.append(raw)
+
+        engine = OTServingEngine(
+            GroupSparseReg.from_rho(1.0, 0.6), OPTS, max_batch=2, mesh=mesh,
+        )
+        # admit 4 first: least-loaded policy must spread one per device
+        for req in reqs[:4]:
+            assert engine.try_admit(req)
+        bucket = list(engine.buckets.values())[0]
+        assert bucket.num_slots == 8, bucket.num_slots
+        devs = sorted(bucket.slot_placement(i)[0] for i in bucket.occupied())
+        assert devs == [0, 1, 2, 3], devs
+
+        # run two rounds, then admit two more mid-flight
+        reset_dispatch_count()
+        done = []
+        done += engine.tick(); done += engine.tick()
+        assert dispatch_count() == 2          # one sharded launch per tick
+        for req in reqs[4:]:
+            assert engine.try_admit(req)
+        ticks = 2
+        while len(done) < 6:
+            done += engine.tick(); ticks += 1
+            assert ticks < 200
+        assert sorted(r.rid for r in done) == list(range(6))
+
+        rounds = sorted({r.rounds for r in done})
+        assert len(rounds) > 1, rounds        # genuinely mixed retire times
+        for req, (Xs, labels, Xt) in zip(reqs, raws):
+            assert req.done and req.converged
+            sol = solve_groupsparse_ot(
+                Xs, labels, Xt, gamma=1.0, rho=0.6, opts=OPTS, pad_to=8,
+            )
+            np.testing.assert_allclose(
+                req.value, sol.value, rtol=1e-5, atol=1e-6
+            )
+            m, n = req.C.shape
+            np.testing.assert_allclose(
+                req.plan.sum(1), np.full(m, 1/m), atol=5e-4
+            )
+        print("MATCH engine rounds=", rounds)
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MATCH engine" in r.stdout

@@ -1,0 +1,89 @@
+"""Intra-repo link checker for the docs suite.
+
+  python tools/check_links.py [files...]
+
+Scans markdown files (default: README.md + everything under docs/) for
+``[text](target)`` links and fails on any *relative* target that does not
+exist in the repo.  ``http(s)://`` / ``mailto:`` links are skipped (CI
+must not flake on the network), as are bare ``#anchor`` self-references.
+For ``path#anchor`` links the path must exist; the anchor is checked
+against the target file's ATX headings when the target is markdown.
+
+No third-party dependencies — runs in the CI docs job without jax.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+CODE_SPAN_RE = re.compile(r"`[^`\n]*`")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced blocks and inline code spans — `foo[_bar](...)` in a
+    code span is API notation, not a markdown link."""
+    return CODE_SPAN_RE.sub("", FENCE_RE.sub("", text))
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash spaces."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(md: Path) -> set:
+    # strip fenced blocks first: '#'-prefixed code comments are not headings
+    return {_slug(h)
+            for h in HEADING_RE.findall(FENCE_RE.sub("", md.read_text()))}
+
+
+def check_file(md: Path):
+    """Yield one message per broken link in ``md``."""
+    text = _strip_code(md.read_text())
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:                 # same-file anchor
+            if anchor and _slug(anchor) not in _anchors(md):
+                yield f"{md.relative_to(REPO)}: broken anchor #{anchor}"
+            continue
+        dest = (md.parent / path_part).resolve()
+        if not dest.exists():
+            yield f"{md.relative_to(REPO)}: broken link {target}"
+            continue
+        if anchor and dest.suffix == ".md":
+            if _slug(anchor) not in _anchors(dest):
+                yield (f"{md.relative_to(REPO)}: broken anchor "
+                       f"{path_part}#{anchor}")
+
+
+def main(argv) -> int:
+    """Check the given files (or README + docs/); 0 = clean."""
+    if argv:
+        files = [REPO / f if not Path(f).is_absolute() else Path(f)
+                 for f in argv]
+    else:
+        files = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    failures = []
+    for f in files:
+        failures.extend(check_file(f))
+    for msg in failures:
+        print(f"BROKEN LINK: {msg}")
+    if failures:
+        print(f"link gate: {len(failures)} broken link(s) "
+              f"across {len(files)} file(s)")
+        return 1
+    print(f"link gate: clean ({len(files)} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
