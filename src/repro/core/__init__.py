@@ -6,7 +6,12 @@ AAAI 2023): smooth relaxed dual (Blondel et al. 2018) + safe screening
 persistent active set), exact by Theorem 2.
 """
 from repro.core.groups import GroupSpec, spec_from_labels
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import (
+    ElasticNetGroupReg,
+    GroupSparseReg,
+    L2Reg,
+    Regularizer,
+)
 from repro.core.dual import DualProblem, dual_value_and_grad, plan_from_duals
 from repro.core.solver import SolveOptions, solve_dual, recover_plan
 from repro.core.ot import (
@@ -20,7 +25,10 @@ from repro.core.sinkhorn import sinkhorn_log
 __all__ = [
     "GroupSpec",
     "spec_from_labels",
+    "Regularizer",
     "GroupSparseReg",
+    "L2Reg",
+    "ElasticNetGroupReg",
     "DualProblem",
     "dual_value_and_grad",
     "plan_from_duals",

@@ -25,7 +25,7 @@ import numpy as np
 from scipy import optimize
 
 from repro.core import groups as G
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import Regularizer
 
 
 @dataclasses.dataclass
@@ -42,12 +42,19 @@ class CpuSolveResult:
     status: str
 
 
-def _psi_terms(Z: np.ndarray, reg: GroupSparseReg):
-    """(psi value per block, scale s per block) from group norms Z."""
-    tau = reg.tau
+def _psi_terms(Z: np.ndarray, tau: np.ndarray, gamma: float):
+    """(psi value per block, scale s per block) from group norms Z.
+
+    ``tau`` broadcasts against ``Z`` — the (L, 1) column of per-group
+    thresholds on the dense (L, n) path, or the per-block gather
+    ``tau_l[l_idx]`` on the screened path.  ``mu_l = tau_l / gamma``
+    recovers the lasso weight of the thresholded soft-scale family; for
+    ``tau = 0`` (pure l2) this is the smoothed conjugate ``Z^2/(2 gamma)``
+    restricted to ``Z > 0``.
+    """
     s = np.where(Z > tau, 1.0 - tau / np.maximum(Z, 1e-38), 0.0)
-    val = s * Z * Z / reg.gamma * (1.0 - 0.5 * s) - reg.mu * s * Z
-    return np.where(s > 0.0, val, 0.0), s
+    val = s * Z * Z / gamma * (1.0 - 0.5 * s) - (tau / gamma) * s * Z
+    return np.where(Z > tau, val, 0.0), s
 
 
 _SAFE = 1.0 + 1e-6   # fp32 inflation so upper bounds stay upper bounds
@@ -65,7 +72,7 @@ class _Oracle:
     screen (Lemma 2), the active set N is a pure performance hint.
     """
 
-    def __init__(self, C, a, b, spec: G.GroupSpec, reg: GroupSparseReg,
+    def __init__(self, C, a, b, spec: G.GroupSpec, reg: Regularizer,
                  screened: bool, use_lower: bool = True, r: int = 10):
         self.C, self.a, self.b = C, a, b
         self.spec, self.reg = spec, reg
@@ -74,6 +81,8 @@ class _Oracle:
         self.r = r
         L, g = spec.num_groups, spec.group_size
         self.L, self.g, self.n = L, g, C.shape[1]
+        self.tau_l = reg.tau_vec(L, dtype=np.float64)     # (L,) thresholds
+        self.tau32 = self.tau_l.astype(np.float32)
         self.m_pad = spec.m_pad
         self.Cg = C.reshape(L, g, self.n)
         if screened:
@@ -128,7 +137,7 @@ class _Oracle:
             - da_neg[:, None]
             - sg[:, None] * np.maximum(-db32, 0.0)[None, :]
         )
-        self.active = zlow > np.float32(self.reg.tau * _SAFE)
+        self.active = zlow > (self.tau32 * np.float32(_SAFE))[:, None]
 
     def on_iteration(self, _xk=None):
         """scipy callback: snapshot every r solver iterations (Alg. 1 line 3)."""
@@ -147,7 +156,7 @@ class _Oracle:
             F = alpha.reshape(L, g, 1) + beta[None, None, :] - self.Cg
             Fp = np.maximum(F, 0.0)
             Z = np.linalg.norm(Fp, axis=1)
-            psi, s = _psi_terms(Z, reg)
+            psi, s = _psi_terms(Z, self.tau_l[:, None], reg.gamma)
             Tg = (s[:, None, :] * Fp) / reg.gamma
             self.blocks_computed += L * n
             value = alpha @ self.a + beta @ self.b - psi.sum()
@@ -171,7 +180,7 @@ class _Oracle:
         # the (L, n) matrix densely is the O(|L| n) rank-1 pass of Lemma 3.
         sg = self.sqrt_g.astype(np.float32)
         zbar = self.z_snap + da_plus[:, None] + sg[:, None] * db_plus[None, :]
-        zero = ~self.active & (zbar <= np.float32(reg.tau))
+        zero = ~self.active & (zbar <= self.tau32[:, None])
         compute = ~zero
 
         n_active = int(self.active.sum())
@@ -194,7 +203,7 @@ class _Oracle:
             )
             Fp = np.maximum(Fb, 0.0)
             z = np.sqrt(np.einsum("kg,kg->k", Fp, Fp))
-            psi, s = _psi_terms(z, reg)
+            psi, s = _psi_terms(z, self.tau_l[l_idx], reg.gamma)
             Tb = (s[:, None] * Fp) / reg.gamma
             value -= psi.sum()
             gb -= np.bincount(j_idx, weights=Tb.sum(axis=1), minlength=self.n)
@@ -229,14 +238,14 @@ def _solve(C, a, b, spec, reg, screened, r, use_lower, maxiter, gtol):
     )
 
 
-def origin_solve(C, a, b, spec: G.GroupSpec, reg: GroupSparseReg,
+def origin_solve(C, a, b, spec: G.GroupSpec, reg: Regularizer,
                  maxiter: int = 1000, gtol: float = 1e-6) -> CpuSolveResult:
     """The original (unscreened) method of Blondel et al. 2018."""
     return _solve(C, a, b, spec, reg, screened=False, r=10,
                   use_lower=True, maxiter=maxiter, gtol=gtol)
 
 
-def fast_solve(C, a, b, spec: G.GroupSpec, reg: GroupSparseReg,
+def fast_solve(C, a, b, spec: G.GroupSpec, reg: Regularizer,
                r: int = 10, use_lower: bool = True,
                maxiter: int = 1000, gtol: float = 1e-6) -> CpuSolveResult:
     """The paper's Algorithm 1 (r = snapshot interval; use_lower = idea 2)."""

@@ -36,7 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.dual import DualProblem
 from repro.core.groups import GroupSpec, PAD_COST
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import Regularizer
 from repro.core.solver import OTResult, SolveOptions, _solve_jit, _split
 
 
@@ -126,7 +126,7 @@ def solve_dual_distributed(
     a,
     b,
     spec: GroupSpec,
-    reg: GroupSparseReg,
+    reg: Regularizer,
     mesh: Mesh,
     opts: SolveOptions = SolveOptions(),
 ) -> OTResult:

@@ -35,7 +35,7 @@ from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.core.regularizers import GroupSparseReg, psi_from_z, scale_from_z
+from repro.core.regularizers import Regularizer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,13 +45,24 @@ class DualProblem:
     num_groups: L
     group_size: g (padded, uniform)
     n:          number of target samples
-    reg:        regularizer parameters
+    reg:        regularizer (any :class:`repro.core.regularizers.Regularizer`;
+                hashable, so the problem stays a static jit argument and
+                compiled programs specialize per regularizer)
     """
 
     num_groups: int
     group_size: int
     n: int
-    reg: GroupSparseReg
+    reg: Regularizer
+
+    def tau_vec(self) -> jnp.ndarray:
+        """Per-group screening thresholds ``tau_l`` as an ``(L,)`` array.
+
+        The single quantity screening and the kernels need from the
+        regularizer at run time (everything else folds into the compiled
+        program through the static ``reg``).
+        """
+        return jnp.asarray(self.reg.tau_vec(self.num_groups))
 
     @property
     def m_pad(self) -> int:
@@ -108,14 +119,14 @@ def dual_value_and_grad(
     L, g = prob.num_groups, prob.group_size
     F = _outer_f(alpha, beta, C)                    # (..., m_pad, n)
     Z = _group_norms_relu(F, L, g)                  # (..., L, n)
-    s = scale_from_z(Z, prob.reg)                   # (..., L, n)
+    s = prob.reg.scale_from_z(Z)                    # (..., L, n)
     if zero_mask is not None:
         s = jnp.where(zero_mask, 0.0, s)
     # T = grad psi per column = s * [F]_+ / gamma, shape (..., m_pad, n)
     T = (
         jnp.repeat(s, g, axis=-2) * jnp.maximum(F, 0.0) / prob.reg.gamma
     )
-    psi = psi_from_z(Z, prob.reg)
+    psi = prob.reg.psi_from_z(Z)
     if zero_mask is not None:
         psi = jnp.where(zero_mask, 0.0, psi)
     value = (
@@ -142,7 +153,7 @@ def plan_from_duals(
     L, g = prob.num_groups, prob.group_size
     F = _outer_f(alpha, beta, C)
     Z = _group_norms_relu(F, L, g)
-    s = scale_from_z(Z, prob.reg)
+    s = prob.reg.scale_from_z(Z)
     return jnp.repeat(s, g, axis=-2) * jnp.maximum(F, 0.0) / prob.reg.gamma
 
 
@@ -192,8 +203,6 @@ def primal_objective(
     T: jnp.ndarray, C: jnp.ndarray, prob: DualProblem, row_mask: jnp.ndarray
 ) -> jnp.ndarray:
     """<T, C>_F + sum_j Psi(t_j) on real rows (duality-gap checks)."""
-    from repro.core.regularizers import primal_regularizer
-
     Tm = jnp.where(row_mask[:, None], T, 0.0)
     cost = jnp.sum(Tm * jnp.where(row_mask[:, None], C, 0.0))
-    return cost + primal_regularizer(Tm, prob.num_groups, prob.reg)
+    return cost + prob.reg.primal(Tm, prob.num_groups)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import groups as G
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import GroupSparseReg, Regularizer
 from repro.core.solver import OTResult, SolveOptions, recover_plan, solve_dual
 
 
@@ -52,21 +52,32 @@ def solve_groupsparse_ot(
     y_S: np.ndarray,
     X_T: np.ndarray,
     *,
-    gamma: float = 1.0,
+    gamma: Optional[float] = None,
     rho: Optional[float] = None,
     mu: Optional[float] = None,
+    reg: Optional[Regularizer] = None,
     normalize_cost: bool = True,
     opts: SolveOptions = SolveOptions(),
     pad_to: int = 8,
 ) -> GroupSparseOTSolution:
-    """End-to-end solve.  Provide either rho (paper experiments) or mu."""
-    if (rho is None) == (mu is None):
-        raise ValueError("provide exactly one of rho / mu")
-    reg = (
-        GroupSparseReg.from_rho(gamma, rho)
-        if rho is not None
-        else GroupSparseReg(gamma=gamma, mu=mu)
-    )
+    """End-to-end solve.  Provide exactly one of rho (paper experiments),
+    mu, or a full ``reg`` (any :class:`repro.core.regularizers.Regularizer`
+    — pure-l2 or elastic-net group weights ride the same pipeline).
+    ``gamma`` (default 1.0) only applies with rho/mu; a full ``reg``
+    carries its own gamma, so combining the two is rejected rather than
+    silently ignoring one."""
+    if sum(p is not None for p in (rho, mu, reg)) != 1:
+        raise ValueError("provide exactly one of rho / mu / reg")
+    if reg is not None:
+        if gamma is not None:
+            raise ValueError("gamma is part of reg; don't pass both")
+    else:
+        gamma = 1.0 if gamma is None else gamma
+        reg = (
+            GroupSparseReg.from_rho(gamma, rho)
+            if rho is not None
+            else GroupSparseReg(gamma=gamma, mu=mu)
+        )
 
     m, n = X_S.shape[0], X_T.shape[0]
     C = squared_euclidean_cost(X_S, X_T).astype(np.float32)

@@ -1,20 +1,39 @@
-"""Group-sparse regularizer Psi and its convex conjugate psi (paper Eq. 3/5).
+"""Pluggable regularizers Psi and their convex conjugates psi.
 
-  Psi(t_j) = gamma * ( 1/2 ||t_j||_2^2 + mu * sum_l ||t_{j[l]}||_2 )
+The paper's screening (Eq. 6/7) only needs one structural fact about the
+regularizer: the conjugate gradient of a group block is *exactly zero*
+whenever the group norm ``z_{l,j} = ||[f_j]_{[l]}]_+||_2`` falls below a
+per-group threshold ``tau_l`` (Lemma A).  Every regularizer here is a
+member of the resulting *thresholded soft-scale family*
 
-Conjugate (restricted to g >= 0):
+  Psi(t_j)  = gamma * ( 1/2 ||t_j||_2^2 + sum_l mu_l ||t_{j[l]}||_2 )
+  g*_[l]    = [1 - tau_l / z_l]_+ * [f_[l]]_+ / gamma,   tau_l = mu_l * gamma
+  psi_l(f)  = s z^2/gamma (1 - s/2) - mu_l s z,          s = [1 - tau_l/z]_+
 
-  psi(f)   = f^T g* - Psi(g*)
-  g*_[l]   = [1 - mu / ||f+_[l]||_2]_+ * f+_[l],      f+ = [f]_+ / gamma
-           = [1 - mu*gamma / z_l]_+ * [f_[l]]_+ / gamma,  z_l = ||[f_[l]]_+||_2
+parameterized by the overall strength ``gamma`` and a per-group lasso
+weight vector ``mu_l >= 0``:
 
-Everything here is expressed in terms of the *group norm matrix*
-``Z in R^{L x n}`` with ``z_{l,j} = ||[f_j]_{[l]}]_+||_2`` because that is the
-quantity the paper's screening bounds control:
+  * :class:`GroupSparseReg` — uniform ``mu_l = mu`` (paper Eq. 3/5),
+  * :class:`L2Reg`          — ``mu_l = 0``: the quadratically-smoothed OT of
+    Blondel et al. (*Smooth and Sparse Optimal Transport*).  ``tau_l = 0``
+    and screening degenerates to nonnegativity skipping: a block is
+    certified zero iff the Eq. 6 bound proves ``[f]_+ = 0``,
+  * :class:`ElasticNetGroupReg` — per-group ``mu_l`` weights (class-
+    imbalanced domain adaptation re-weights rare classes).
 
-  z_{l,j} <= mu*gamma  =>  gradient block (l, j) is exactly zero  (Lemma A).
+Because the whole family shares one closed form with a per-group threshold
+vector, the entire screened / compacted / batched / sharded pipeline
+(core.solver, core.screening, kernels.*) is regularizer-generic: kernels
+take ``tau_l`` as a precomputed per-group vector instead of a scalar, and
+the screening bounds compare against it per row.
 
-The experiments in the paper re-balance the two terms with rho in [0, 1):
+Everything is expressed in terms of the *group norm matrix*
+``Z in R^{L x n}`` with ``z_{l,j} = ||[f_j]_{[l]}]_+||_2`` because that is
+the quantity the screening bounds control:
+
+  z_{l,j} <= tau_l  =>  gradient block (l, j) is exactly zero.
+
+The paper's experiments re-balance the two terms with rho in [0, 1):
 
   Psi_rho(t_j) = gamma * ( (1-rho)/2 ||t_j||^2 + rho * sum_l ||t_{j[l]}||_2 )
 
@@ -24,27 +43,156 @@ the screening threshold becomes  tau = mu'*gamma' = gamma*rho.
 from __future__ import annotations
 
 import dataclasses
+from typing import ClassVar, Tuple
 
 import jax.numpy as jnp
+import numpy as np
+
+
+def _group_broadcast(vec: np.ndarray, Z: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a per-group ``(L,)`` vector to broadcast against ``Z``.
+
+    ``Z`` carries the group axis at -2 (the ``(..., L, n)`` layout of
+    :mod:`repro.core.dual`) — except for 1-D inputs, where the entries ARE
+    the per-group values (the ``(L,)`` layout of :func:`psi_value`).
+    """
+    v = jnp.asarray(vec, Z.dtype)
+    if Z.ndim == 1:
+        return jnp.broadcast_to(v, Z.shape)
+    return jnp.broadcast_to(v[:, None], Z.shape[-2:])
 
 
 @dataclasses.dataclass(frozen=True)
-class GroupSparseReg:
-    """Parameters of the group-sparse regularizer.
+class Regularizer:
+    """Base of the thresholded soft-scale regularizer family.
 
-    gamma: overall strength (>0).
-    mu:    group-lasso weight (>0).
+    Concrete regularizers supply :meth:`mu_vec` (per-group lasso weights);
+    everything else — conjugate value/scale, primal penalty, screening
+    thresholds — derives from it through the family's shared closed form.
 
-    Derived:
-      tau = mu * gamma -- the screening threshold on z_{l,j}.
+    Instances are frozen, hashable dataclasses: they ride inside the
+    static :class:`repro.core.dual.DualProblem` jit argument, so a solve
+    compiles per regularizer (exactly the specialization the kernels
+    need — ``gamma`` folds into the kernel, ``tau_l`` becomes an operand).
+
+    Parameters
+    ----------
+    gamma : float
+        Overall regularization strength (> 0).
     """
 
     gamma: float
+
+    #: Stable identifier used in bucket keys / fixtures / diagnostics.
+    kind: ClassVar[str] = "base"
+
+    # -- per-group parameter vectors -----------------------------------------
+    def mu_vec(self, num_groups: int) -> np.ndarray:
+        """Per-group lasso weights ``mu_l`` as a float64 ``(L,)`` vector."""
+        raise NotImplementedError
+
+    def tau_vec(self, num_groups: int, dtype=np.float32) -> np.ndarray:
+        """Per-group screening thresholds ``tau_l = mu_l * gamma`` ``(L,)``.
+
+        This is the vector the screening bounds compare against and the
+        Pallas kernels consume as an operand (padded groups get tau = 0,
+        which — together with zero snapshots — always certifies ZERO).
+        """
+        return (self.mu_vec(num_groups) * float(self.gamma)).astype(dtype)
+
+    @property
+    def tau_max(self) -> float:
+        """Largest per-group threshold (diagnostics / density heuristics).
+
+        Concrete regularizers must override: the base cannot know the
+        group count, and guessing one would silently misreport per-group
+        subclasses.
+        """
+        raise NotImplementedError
+
+    # -- conjugate family (closed form in the group norms Z) ------------------
+    def scale_from_z(self, Z: jnp.ndarray) -> jnp.ndarray:
+        """Soft-threshold scale ``s = [1 - tau_l / z]_+`` (0 where z <= tau_l).
+
+        ``Z``: ``(..., L, n)`` group norms of ``[f]_+`` (or ``(L,)`` for a
+        single column).  Uses the double-where pattern so reverse-mode AD
+        through the untaken branch stays NaN-free (the AD path is only a
+        test oracle; the solver uses the closed-form gradient).
+        """
+        L = Z.shape[0] if Z.ndim == 1 else Z.shape[-2]
+        tau = _group_broadcast(self.tau_vec(L), Z)
+        on = Z > tau
+        safe = jnp.where(on, Z, jnp.ones_like(Z))
+        return jnp.where(on, 1.0 - tau / safe, 0.0)
+
+    def psi_from_z(self, Z: jnp.ndarray) -> jnp.ndarray:
+        """Per-(l, j) conjugate value ``psi_l(f_j)``, closed form in z.
+
+        With ``s = [1 - tau_l/z]_+`` and ``t_[l] = s [f]_+ / gamma``:
+            f^T t      = s z^2 / gamma
+            1/2||t||^2 = s^2 z^2 / (2 gamma^2)
+            ||t||_2    = s z / gamma
+            psi_l      = s z^2/gamma * (1 - s/2) - mu_l s z
+        (zero whenever z <= tau_l, matching g* = 0; for mu_l = 0 this is
+        the pure-l2 conjugate ``z^2 / (2 gamma)``).
+        """
+        L = Z.shape[0] if Z.ndim == 1 else Z.shape[-2]
+        g = jnp.asarray(self.gamma, Z.dtype)
+        tau = _group_broadcast(self.tau_vec(L), Z)
+        mu = _group_broadcast(self.mu_vec(L), Z)
+        on = Z > tau
+        Zs = jnp.where(on, Z, jnp.ones_like(Z))      # double-where (AD-safe)
+        s = 1.0 - tau / Zs
+        val = s * Zs * Zs / g * (1.0 - 0.5 * s) - mu * s * Zs
+        return jnp.where(on, val, 0.0)
+
+    def primal(self, T: jnp.ndarray, num_groups: int) -> jnp.ndarray:
+        """``sum_j Psi(t_j)`` for a full ``(L*g, n)`` plan (duality checks)."""
+        Tg = T.reshape(num_groups, -1, T.shape[-1])
+        sq = 0.5 * jnp.sum(T * T)
+        mu = jnp.asarray(self.mu_vec(num_groups), T.dtype)
+        gl = jnp.sum(mu[:, None] * jnp.linalg.norm(Tg, axis=1))
+        return self.gamma * (sq + gl)
+
+    # -- (de)serialization -----------------------------------------------------
+    def config(self) -> dict:
+        """JSON-able description (fixtures / request payloads)."""
+        d = dataclasses.asdict(self)
+        d["kind"] = type(self).kind
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSparseReg(Regularizer):
+    """The paper's group-sparse regularizer (Eq. 3/5): uniform ``mu_l = mu``.
+
+    Parameters
+    ----------
+    gamma : float
+        Overall strength (> 0).
+    mu : float
+        Group-lasso weight (> 0).
+
+    Derived: ``tau = mu * gamma`` — the screening threshold on z_{l,j}.
+    """
+
     mu: float
+
+    kind: ClassVar[str] = "group_sparse"
 
     @property
     def tau(self) -> float:
+        """The (uniform) screening threshold ``mu * gamma``."""
         return self.mu * self.gamma
+
+    @property
+    def tau_max(self) -> float:
+        """Largest per-group threshold — uniform, so simply ``tau``."""
+        return self.tau
+
+    def mu_vec(self, num_groups: int) -> np.ndarray:
+        """Uniform ``(L,)`` weight vector ``mu_l = mu``."""
+        return np.full((num_groups,), float(self.mu))
 
     @staticmethod
     def from_rho(gamma: float, rho: float) -> "GroupSparseReg":
@@ -54,57 +202,129 @@ class GroupSparseReg:
         return GroupSparseReg(gamma=gamma * (1.0 - rho), mu=rho / (1.0 - rho))
 
 
-def scale_from_z(Z: jnp.ndarray, reg: GroupSparseReg) -> jnp.ndarray:
-    """Soft-threshold scale  s = [1 - tau / z]_+  (0 where z <= tau, incl. z=0).
+@dataclasses.dataclass(frozen=True)
+class L2Reg(Regularizer):
+    """Pure quadratic smoothing (Blondel et al. 2018): ``mu_l = 0``.
 
-    Z: (..., L, n) group norms of [f]_+.  Uses the double-where pattern so
-    reverse-mode AD through the untaken branch stays NaN-free (the AD path is
-    only a test oracle; the solver uses the closed-form gradient).
+    ``Psi(t) = gamma/2 ||t||^2``, conjugate ``psi(f) = ||[f]_+||^2 / (2
+    gamma)`` with gradient ``[f]_+ / gamma``.  All thresholds are zero, so
+    the screening machinery degenerates exactly to *nonnegativity
+    skipping*: a block is certified zero iff the Eq. 6 upper bound proves
+    every entry of ``f`` is nonpositive.  The solver, kernels and serving
+    engine run unchanged.
     """
-    tau = jnp.asarray(reg.tau, Z.dtype)
-    on = Z > tau
-    safe = jnp.where(on, Z, jnp.ones_like(Z))
-    return jnp.where(on, 1.0 - tau / safe, 0.0)
+
+    kind: ClassVar[str] = "l2"
+
+    @property
+    def tau(self) -> float:
+        """Uniform threshold (identically zero for pure l2)."""
+        return 0.0
+
+    @property
+    def tau_max(self) -> float:
+        """Largest per-group threshold (identically zero for pure l2)."""
+        return 0.0
+
+    def mu_vec(self, num_groups: int) -> np.ndarray:
+        """All-zero ``(L,)`` weight vector."""
+        return np.zeros((num_groups,))
 
 
-def psi_from_z(Z: jnp.ndarray, reg: GroupSparseReg) -> jnp.ndarray:
-    """Per-(l, j) conjugate value psi_l(f_j), closed form in z = z_{l,j}.
+@dataclasses.dataclass(frozen=True)
+class ElasticNetGroupReg(Regularizer):
+    """Elastic-net group-sparse regularizer: per-group weights ``mu_l``.
 
-    With s = [1 - tau/z]_+ and t_[l] = s [f]_+ / gamma:
-        f^T t      = s z^2 / gamma
-        1/2||t||^2 = s^2 z^2 / (2 gamma^2)
-        ||t||_2    = s z / gamma
-        psi_l      = s z^2/gamma * (1 - s/2) - mu s z
-    (zero whenever z <= tau, matching g* = 0).
+    Class-imbalanced domain adaptation up-weights rare classes (their
+    blocks are driven to zero more aggressively) and down-weights — or
+    un-penalizes, ``mu_l = 0`` — dominant ones.  Screening thresholds are
+    per group, ``tau_l = mu_l * gamma``, carried through the bounds and
+    the kernels as a vector.
+
+    Parameters
+    ----------
+    gamma : float
+        Overall strength (> 0).
+    mu_weights : tuple of float
+        Per-group lasso weights, length = number of (real) groups L.
+        Stored as a tuple so the regularizer stays hashable (it rides in
+        the static jit arguments).
     """
-    g = jnp.asarray(reg.gamma, Z.dtype)
-    mu = jnp.asarray(reg.mu, Z.dtype)
-    on = Z > jnp.asarray(reg.tau, Z.dtype)
-    Zs = jnp.where(on, Z, jnp.ones_like(Z))      # double-where (AD-safe)
-    s = 1.0 - jnp.asarray(reg.tau, Z.dtype) / Zs
-    val = s * Zs * Zs / g * (1.0 - 0.5 * s) - mu * s * Zs
-    return jnp.where(on, val, 0.0)
+
+    mu_weights: Tuple[float, ...]
+
+    kind: ClassVar[str] = "elastic_net"
+
+    def __post_init__(self):
+        object.__setattr__(self, "mu_weights", tuple(float(w) for w in self.mu_weights))
+        if any(w < 0 for w in self.mu_weights):
+            raise ValueError(f"mu_weights must be >= 0, got {self.mu_weights}")
+
+    def mu_vec(self, num_groups: int) -> np.ndarray:
+        """The ``(L,)`` per-group weight vector (validates the length)."""
+        if len(self.mu_weights) != num_groups:
+            raise ValueError(
+                f"ElasticNetGroupReg has {len(self.mu_weights)} group weights "
+                f"but the problem has {num_groups} groups"
+            )
+        return np.asarray(self.mu_weights, np.float64)
+
+    @property
+    def tau_max(self) -> float:
+        """Largest per-group threshold ``max_l mu_l * gamma``."""
+        mx = max(self.mu_weights) if self.mu_weights else 0.0
+        return float(mx) * float(self.gamma)
 
 
-def psi_value(f: jnp.ndarray, num_groups: int, reg: GroupSparseReg) -> jnp.ndarray:
+_KINDS = {
+    cls.kind: cls for cls in (GroupSparseReg, L2Reg, ElasticNetGroupReg)
+}
+
+
+def from_config(cfg: dict) -> Regularizer:
+    """Rebuild a regularizer from its :meth:`Regularizer.config` dict.
+
+    Used by the golden-fixture loader and any wire format carrying a
+    regularizer choice (the serving engine's request payloads).
+    """
+    cfg = dict(cfg)
+    kind = cfg.pop("kind")
+    if kind not in _KINDS:
+        raise ValueError(f"unknown regularizer kind: {kind!r}")
+    cls = _KINDS[kind]
+    if "mu_weights" in cfg:
+        cfg["mu_weights"] = tuple(cfg["mu_weights"])
+    return cls(**cfg)
+
+
+# -- module-level functional forms (the pre-subsystem API, kept stable) -------
+
+def scale_from_z(Z: jnp.ndarray, reg: Regularizer) -> jnp.ndarray:
+    """Functional form of :meth:`Regularizer.scale_from_z`."""
+    return reg.scale_from_z(Z)
+
+
+def psi_from_z(Z: jnp.ndarray, reg: Regularizer) -> jnp.ndarray:
+    """Functional form of :meth:`Regularizer.psi_from_z`."""
+    return reg.psi_from_z(Z)
+
+
+def psi_value(f: jnp.ndarray, num_groups: int, reg: Regularizer) -> jnp.ndarray:
     """psi(f) for a single column f of length L*g (uniform padded groups)."""
     fg = f.reshape(num_groups, -1)
     Z = jnp.linalg.norm(jnp.maximum(fg, 0.0), axis=-1)
-    return jnp.sum(psi_from_z(Z, reg))
+    return jnp.sum(reg.psi_from_z(Z))
 
 
-def grad_psi(f: jnp.ndarray, num_groups: int, reg: GroupSparseReg) -> jnp.ndarray:
+def grad_psi(f: jnp.ndarray, num_groups: int, reg: Regularizer) -> jnp.ndarray:
     """Closed-form nabla psi(f) (paper Eq. 5) for one column."""
     fg = f.reshape(num_groups, -1)
     fp = jnp.maximum(fg, 0.0)
     Z = jnp.linalg.norm(fp, axis=-1)
-    s = scale_from_z(Z, reg)
+    s = reg.scale_from_z(Z)
     return (s[:, None] * fp / reg.gamma).reshape(f.shape)
 
 
-def primal_regularizer(T: jnp.ndarray, num_groups: int, reg: GroupSparseReg) -> jnp.ndarray:
+def primal_regularizer(T: jnp.ndarray, num_groups: int, reg: Regularizer) -> jnp.ndarray:
     """sum_j Psi(t_j) for a full (L*g, n) plan (used by primal-dual checks)."""
-    Tg = T.reshape(num_groups, -1, T.shape[-1])
-    sq = 0.5 * jnp.sum(T * T)
-    gl = jnp.sum(jnp.linalg.norm(Tg, axis=1))
-    return reg.gamma * (sq + reg.mu * gl)
+    return reg.primal(T, num_groups)

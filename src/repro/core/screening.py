@@ -38,6 +38,18 @@ import jax.numpy as jnp
 ZERO, CHECK, ACTIVE = 0, 1, 2
 
 
+def broadcast_tau(tau) -> jnp.ndarray:
+    """Broadcast a screening threshold against ``(..., L, n)`` bound matrices.
+
+    ``tau`` may be a scalar (uniform threshold, the classic group-sparse
+    case) or a per-group ``(L,)`` vector (elastic-net weights; zeros for
+    pure-l2 nonnegativity skipping) — see
+    :meth:`repro.core.regularizers.Regularizer.tau_vec`.
+    """
+    t = jnp.asarray(tau)
+    return t[..., :, None] if t.ndim else t
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ScreenState:
@@ -190,15 +202,17 @@ def verdicts(
     alpha: jnp.ndarray,
     beta: jnp.ndarray,
     sqrt_g: jnp.ndarray,
-    tau: float,
+    tau,
 ) -> jnp.ndarray:
     """Per-entry verdict matrix (L, n) in {ZERO, CHECK, ACTIVE}.
 
     ACTIVE comes from the persistent set N (lower bounds, refreshed at
     snapshot time); ZERO/CHECK from the per-evaluation upper bound.
+    ``tau`` is a scalar or per-group ``(L,)`` threshold (see
+    :func:`broadcast_tau`).
     """
     zbar = upper_bound(state, alpha, beta, sqrt_g)
-    v = jnp.where(zbar <= tau, ZERO, CHECK).astype(jnp.int32)
+    v = jnp.where(zbar <= broadcast_tau(tau), ZERO, CHECK).astype(jnp.int32)
     return jnp.where(state.active, ACTIVE, v)
 
 
@@ -207,11 +221,14 @@ def refresh_active(
     alpha: jnp.ndarray,
     beta: jnp.ndarray,
     sqrt_g: jnp.ndarray,
-    tau: float,
+    tau,
 ) -> ScreenState:
-    """Recompute N from lower bounds (Algorithm 1 lines 6-14)."""
+    """Recompute N from lower bounds (Algorithm 1 lines 6-14).
+
+    ``tau`` is a scalar or per-group ``(L,)`` threshold.
+    """
     zlow = lower_bound(state, alpha, beta, sqrt_g)
-    return dataclasses.replace(state, active=zlow > tau)
+    return dataclasses.replace(state, active=zlow > broadcast_tau(tau))
 
 
 def take_snapshot(

@@ -52,7 +52,7 @@ from repro.core.distributed import make_batch_mesh
 from repro.core.dual import DualProblem
 from repro.core.groups import PAD_COST, GroupSpec
 from repro.core.lbfgs import state_pspecs as lbfgs_pspecs
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import Regularizer
 from repro.sharding.partition import batch_solve_rules
 from repro.utils.compat import shard_map
 
@@ -315,7 +315,7 @@ def solve_batch_sharded(
     a: jnp.ndarray,
     b: jnp.ndarray,
     spec: GroupSpec,
-    reg: GroupSparseReg,
+    reg: Regularizer,
     opts: slv.SolveOptions = slv.SolveOptions(),
     mesh: Optional[Mesh] = None,
 ) -> slv.BatchOTResult:
@@ -338,7 +338,7 @@ def solve_batch_sharded(
         ``(B, n)`` target marginals.
     spec : GroupSpec
         Shared group layout (static geometry the program compiles for).
-    reg : GroupSparseReg
+    reg : Regularizer
         Regularizer parameters.
     opts : SolveOptions, optional
         Any ``grad_impl`` backend ('dense' | 'screened' | 'pallas').

@@ -54,7 +54,7 @@ from repro.core.lbfgs import (
     run_segment_batched,
     where_state,
 )
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import Regularizer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,7 +242,7 @@ def make_value_and_grad(
         def vag(x):
             alpha, beta = _split(x, m_pad)
             verdict = screening.verdicts(
-                screen_state, alpha, beta, sqrt_g, prob.reg.tau
+                screen_state, alpha, beta, sqrt_g, prob.tau_vec()
             )
             zero_mask = verdict == screening.ZERO
             v, (ga, gb) = dual_value_and_grad(
@@ -264,7 +264,7 @@ def make_value_and_grad(
         def vag(x):
             alpha, beta = _split(x, m_pad)
             flags = kops.screen_tile_flags(
-                pstate, alpha, beta, pp, prob.reg.tau
+                pstate, alpha, beta, pp, prob.tau_vec()
             )
             v, ga, gb = kops.dual_value_and_grad_padded(
                 alpha, beta, a, b, flags, pp, prob, impl=pallas_impl
@@ -313,7 +313,7 @@ def make_value_and_grad_batched(
         def vag(x):
             alpha, beta = _split(x, m_pad)
             verdict = screening.verdicts(
-                screen_state, alpha, beta, sqrt_g, prob.reg.tau
+                screen_state, alpha, beta, sqrt_g, prob.tau_vec()
             )
             zero_mask = verdict == screening.ZERO
             v, (ga, gb) = dual_value_and_grad(
@@ -337,7 +337,7 @@ def make_value_and_grad_batched(
         def vag(x):
             alpha, beta = _split(x, m_pad)
             flags = kops.screen_tile_flags_batched(
-                pstate, alpha, beta, pp, prob.reg.tau
+                pstate, alpha, beta, pp, prob.tau_vec()
             )
             v, ga, gb = kops.dual_value_and_grad_padded_batched(
                 alpha, beta, a, b, flags, pp, prob, impl=pallas_impl
@@ -416,7 +416,7 @@ def _round_body(state, C, a, b, row_mask, sqrt_g, prob, opts, padded):
             # paper order: refresh N w.r.t. OLD snapshots (Eq. 7), then
             # take the new snapshot (Algorithm 1 lines 6-15).
             scr_new = screening.refresh_active(
-                scr, alpha, beta, sqrt_g, prob.reg.tau
+                scr, alpha, beta, sqrt_g, prob.tau_vec()
             )
             z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
             scr_new = screening.take_snapshot(scr_new, alpha, beta, z, k, o)
@@ -426,10 +426,10 @@ def _round_body(state, C, a, b, row_mask, sqrt_g, prob, opts, padded):
             z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
             scr_new = screening.take_snapshot(scr, alpha, beta, z, k, o)
             scr_new = screening.refresh_active(
-                scr_new, alpha, beta, sqrt_g, prob.reg.tau
+                scr_new, alpha, beta, sqrt_g, prob.tau_vec()
             )
         verdict = screening.verdicts(
-            scr_new, alpha, beta, sqrt_g, prob.reg.tau
+            scr_new, alpha, beta, sqrt_g, prob.tau_vec()
         )
         delta = jnp.stack(
             [
@@ -525,7 +525,7 @@ def solve_dual(
     a: jnp.ndarray,
     b: jnp.ndarray,
     spec: GroupSpec,
-    reg: GroupSparseReg,
+    reg: Regularizer,
     opts: SolveOptions = SolveOptions(),
 ) -> OTResult:
     """Solve the group-sparse OT dual on padded inputs (one problem).
@@ -544,8 +544,9 @@ def solve_dual(
         ``(n,)`` target marginal.
     spec : GroupSpec
         Group layout of the padded rows.
-    reg : GroupSparseReg
-        Regularizer parameters (gamma, tau).
+    reg : Regularizer
+        Regularizer (group-sparse, pure-l2, or elastic-net; see
+        :mod:`repro.core.regularizers`).
     opts : SolveOptions, optional
         Backend and schedule configuration.
 
@@ -580,7 +581,7 @@ def solve_batch(
     a: jnp.ndarray,
     b: jnp.ndarray,
     spec: GroupSpec,
-    reg: GroupSparseReg,
+    reg: Regularizer,
     opts: SolveOptions = SolveOptions(),
 ) -> BatchOTResult:
     """Solve B same-shape group-sparse OT problems in ONE jitted program.
@@ -603,8 +604,8 @@ def solve_batch(
         ``(B, n)`` target marginals.
     spec : GroupSpec
         Shared group layout.
-    reg : GroupSparseReg
-        Regularizer parameters.
+    reg : Regularizer
+        Regularizer (any :class:`~repro.core.regularizers.Regularizer`).
     opts : SolveOptions, optional
         Backend and schedule configuration.
 
@@ -630,14 +631,14 @@ def solve_batch(
     return BatchOTResult(alpha, beta, -lb.f, lb, scr, rounds, stats)
 
 
-def recover_plan(result: OTResult, C: jnp.ndarray, spec: GroupSpec, reg: GroupSparseReg):
+def recover_plan(result: OTResult, C: jnp.ndarray, spec: GroupSpec, reg: Regularizer):
     """Primal plan T* = grad psi(alpha* + beta_j* 1 - c_j) (padded rows incl.)."""
     prob = DualProblem(spec.num_groups, spec.group_size, int(C.shape[1]), reg)
     return plan_from_duals(result.alpha, result.beta, C, prob)
 
 
 def recover_plan_batch(
-    result: BatchOTResult, C: jnp.ndarray, spec: GroupSpec, reg: GroupSparseReg
+    result: BatchOTResult, C: jnp.ndarray, spec: GroupSpec, reg: Regularizer
 ):
     """Batched primal plans (B, m_pad, n) from a :class:`BatchOTResult`."""
     prob = DualProblem(spec.num_groups, spec.group_size, int(C.shape[2]), reg)
@@ -647,7 +648,7 @@ def recover_plan_batch(
 def describe(
     spec: GroupSpec,
     n: int,
-    reg: GroupSparseReg,
+    reg: Regularizer,
     opts: SolveOptions = SolveOptions(),
     result=None,
 ) -> str:
@@ -663,8 +664,8 @@ def describe(
         Group layout of the (padded) problem.
     n : int
         Number of target columns.
-    reg : GroupSparseReg
-        Regularizer parameters.
+    reg : Regularizer
+        Regularizer (any :class:`~repro.core.regularizers.Regularizer`).
     opts : SolveOptions, optional
         Shown so reports pin down the backend that ran.
     result : OTResult or BatchOTResult, optional
@@ -688,7 +689,8 @@ def describe(
     lines = [
         f"problem:  {spec!r}",
         f"dual:     m_pad={prob.m_pad} n={prob.n} "
-        f"(x dim {prob.m_pad + prob.n}), gamma={reg.gamma} tau={reg.tau}",
+        f"(x dim {prob.m_pad + prob.n}), reg={reg!r} "
+        f"(kind={type(reg).kind}, tau_max={reg.tau_max:g})",
         f"tiles:    ({tile_l} groups x {DEFAULT_TILE_N} cols) grid "
         f"{lt} x {nt} = {lt * nt} tiles "
         f"(L padded {prob.num_groups}->{L_pad}, n padded {prob.n}->{n_pad})",

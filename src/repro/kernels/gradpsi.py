@@ -91,24 +91,41 @@ def resolve_tile_l(L: int, g: int, tile_n: int, dtype_bytes: int = 4) -> int:
     return max(t, 1)
 
 
-def _gradpsi_tile(alpha, beta, c, *, tau: float, gamma: float):
-    """Shared per-tile math: returns (T (TL, g, TN), psi_sum scalar)."""
+def _gradpsi_tile(alpha, beta, c, tau, *, gamma: float):
+    """Shared per-tile math: returns (T (TL, g, TN), psi_sum scalar).
+
+    ``tau`` is the per-group threshold row (TL,) — uniform for the paper's
+    group-sparse Psi, zero for pure-l2 (nonnegativity skipping), mixed for
+    elastic-net group weights (see core.regularizers).
+    """
     f = alpha[:, :, None] + beta[None, None, :] - c
     fp = jnp.maximum(f, 0.0)
     zsq = jnp.sum(fp * fp, axis=1)                   # (TL, TN)
     z = jnp.sqrt(zsq)
-    on = z > tau
+    tau_c = tau[:, None]                             # (TL, 1)
+    on = z > tau_c
     zs = jnp.where(on, z, 1.0)
-    s = jnp.where(on, 1.0 - tau / zs, 0.0)           # (TL, TN)
+    s = jnp.where(on, 1.0 - tau_c / zs, 0.0)         # (TL, TN)
     t = s[:, None, :] * fp * (1.0 / gamma)           # (TL, g, TN)
     # psi closed form (regularizers.psi_from_z)
-    mu_s_z = (tau / gamma) * s * zs                  # mu*s*z with tau=mu*gamma
+    mu_s_z = (tau_c / gamma) * s * zs                # mu_l*s*z, tau_l=mu_l*gamma
     psi = jnp.where(on, s * zs * zs / gamma * (1.0 - 0.5 * s) - mu_s_z, 0.0)
     return t, jnp.sum(psi)
 
 
-def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref,
-                  ga_ref, gb_ref, psi_ref, *, tau: float, gamma: float):
+def tau_row(tau, L: int) -> jnp.ndarray:
+    """Normalize ``tau`` (scalar or per-group ``(L,)``) to an (L,) fp32 row.
+
+    The single definition of the kernel-facing threshold layout — shared
+    by the gradient kernels here, the screening kernel, ops.py's padding,
+    and the ref.py oracles, so the normalization cannot drift between the
+    kernels and the oracles the parity tests compare against.
+    """
+    return jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (L,))
+
+
+def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref, tau_ref,
+                  ga_ref, gb_ref, psi_ref, *, gamma: float):
     l = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -129,7 +146,8 @@ def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref,
         alpha = alpha_ref[...].astype(jnp.float32)       # (TL, g)
         beta = beta_ref[...].astype(jnp.float32)         # (TN,)
         c = c_ref[...].astype(jnp.float32)               # (TL, g, TN)
-        t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+        tau = tau_ref[...].astype(jnp.float32)           # (TL,)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
         psi_ref[0, 0] += psi
         ga_ref[...] += jnp.sum(t, axis=2)                # (TL, g)
         gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]   # (1, TN)
@@ -137,7 +155,7 @@ def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_groups", "group_size", "tau", "gamma",
+    static_argnames=("num_groups", "group_size", "gamma",
                      "tile_l", "tile_n", "interpret"),
 )
 def gradpsi_pallas(
@@ -148,7 +166,7 @@ def gradpsi_pallas(
     *,
     num_groups: int,
     group_size: int,
-    tau: float,
+    tau,
     gamma: float,
     tile_l: int = 0,
     tile_n: int = DEFAULT_TILE_N,
@@ -157,9 +175,13 @@ def gradpsi_pallas(
     """Dense-grid kernel: returns (T_rowsum (m_pad,), T_colsum (n,), psi).
 
     n and L must be padded to tile multiples (ops.py handles padding).
+    ``tau`` is a scalar or a per-group ``(L,)`` threshold vector (the
+    regularizer subsystem's per-group screening thresholds); it is a
+    kernel *operand*, loaded one (tile_l,) row per tile.
     """
     L, g = num_groups, group_size
     n = beta.shape[0]
+    tau_g = tau_row(tau, L)
     if tile_l == 0:
         tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
     assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
@@ -182,6 +204,7 @@ def gradpsi_pallas(
             pl.BlockSpec((tile_l, g), lambda l, j, f: (l, 0)),
             pl.BlockSpec((tile_n,), lambda l, j, f: (j,)),
             pl.BlockSpec((tile_l, g, tile_n), c_index),
+            pl.BlockSpec((tile_l,), lambda l, j, f: (l,)),
         ],
         out_specs=[
             pl.BlockSpec((tile_l, g), lambda l, j, f: (l, 0)),
@@ -191,7 +214,7 @@ def gradpsi_pallas(
     )
 
     ga_part, gb_part, psi = pl.pallas_call(
-        functools.partial(_dense_kernel, tau=float(tau), gamma=float(gamma)),
+        functools.partial(_dense_kernel, gamma=float(gamma)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((L, g), jnp.float32),
@@ -199,7 +222,7 @@ def gradpsi_pallas(
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(flags, alpha_g, beta, C3)
+    )(flags, alpha_g, beta, C3, tau_g)
 
     return ga_part.reshape(-1), jnp.sum(gb_part, axis=0), psi[0, 0]
 
@@ -227,9 +250,9 @@ def build_tile_schedule(flags: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return sched, num_active
 
 
-def _compact_kernel(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
+def _compact_kernel(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref, tau_ref,
                     ga_ref, gb_ref, psi_ref, steps_ref,
-                    *, tau: float, gamma: float):
+                    *, gamma: float):
     s = pl.program_id(0)
 
     @pl.when(s == 0)
@@ -241,7 +264,8 @@ def _compact_kernel(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
     alpha = alpha_ref[...].astype(jnp.float32)           # (TL, g)
     beta = beta_ref[...].astype(jnp.float32)             # (TN,)
     c = c_ref[...].astype(jnp.float32)                   # (TL, g, TN)
-    t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
     # per-step slots: every visited block is written exactly once, so no
     # cross-step accumulation state and no uninitialized revisits.
     ga_ref[...] = jnp.sum(t, axis=2)[None]               # (1, TL, g)
@@ -251,7 +275,7 @@ def _compact_kernel(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_groups", "group_size", "tau", "gamma",
+    static_argnames=("num_groups", "group_size", "gamma",
                      "tile_l", "tile_n", "interpret"),
 )
 def gradpsi_pallas_compact(
@@ -263,7 +287,7 @@ def gradpsi_pallas_compact(
     *,
     num_groups: int,
     group_size: int,
-    tau: float,
+    tau,
     gamma: float,
     tile_l: int = 0,
     tile_n: int = DEFAULT_TILE_N,
@@ -273,10 +297,12 @@ def gradpsi_pallas_compact(
 
     Returns (T_rowsum (m_pad,), T_colsum (n,), psi, steps_issued ()).
     With ``num_active == 0`` one sentinel step runs (a grid cannot be empty)
-    and its outputs are masked to exact zeros.
+    and its outputs are masked to exact zeros.  ``tau`` is a scalar or a
+    per-group ``(L,)`` threshold vector, gathered per scheduled tile.
     """
     L, g = num_groups, group_size
     n = beta.shape[0]
+    tau_g = tau_row(tau, L)
     if tile_l == 0:
         tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
     assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
@@ -298,6 +324,7 @@ def gradpsi_pallas_compact(
             pl.BlockSpec((tile_n,), lambda s, sc, na: (sc[1, s],)),
             pl.BlockSpec((tile_l, g, tile_n),
                          lambda s, sc, na: (sc[0, s], 0, sc[1, s])),
+            pl.BlockSpec((tile_l,), lambda s, sc, na: (sc[0, s],)),
         ],
         out_specs=[
             pl.BlockSpec((1, tile_l, g), lambda s, sc, na: (s, 0, 0)),
@@ -308,7 +335,7 @@ def gradpsi_pallas_compact(
     )
 
     ga_steps, gb_steps, psi_steps, steps = pl.pallas_call(
-        functools.partial(_compact_kernel, tau=float(tau), gamma=float(gamma)),
+        functools.partial(_compact_kernel, gamma=float(gamma)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((T, tile_l, g), jnp.float32),
@@ -317,7 +344,7 @@ def gradpsi_pallas_compact(
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(sched, nact, alpha_g, beta, C3)
+    )(sched, nact, alpha_g, beta, C3, tau_g)
 
     # assemble: slots past num_active were never visited (garbage) — route
     # them to an out-of-range segment so the scatter drops them.
@@ -337,8 +364,8 @@ def gradpsi_pallas_compact(
 
 # -- batched variants (leading problem axis B) --------------------------------
 
-def _dense_kernel_batched(flags_ref, alpha_ref, beta_ref, c_ref,
-                          ga_ref, gb_ref, psi_ref, *, tau: float, gamma: float):
+def _dense_kernel_batched(flags_ref, alpha_ref, beta_ref, c_ref, tau_ref,
+                          ga_ref, gb_ref, psi_ref, *, gamma: float):
     bi = pl.program_id(0)
     l = pl.program_id(1)
     j = pl.program_id(2)
@@ -360,7 +387,8 @@ def _dense_kernel_batched(flags_ref, alpha_ref, beta_ref, c_ref,
         alpha = alpha_ref[0].astype(jnp.float32)         # (TL, g)
         beta = beta_ref[0].astype(jnp.float32)           # (TN,)
         c = c_ref[0].astype(jnp.float32)                 # (TL, g, TN)
-        t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+        tau = tau_ref[...].astype(jnp.float32)           # (TL,)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
         psi_ref[0, 0, 0] += psi
         ga_ref[...] += jnp.sum(t, axis=2)[None]          # (1, TL, g)
         gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, None, :]  # (1, 1, TN)
@@ -368,7 +396,7 @@ def _dense_kernel_batched(flags_ref, alpha_ref, beta_ref, c_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_groups", "group_size", "tau", "gamma",
+    static_argnames=("num_groups", "group_size", "gamma",
                      "tile_l", "tile_n", "interpret"),
 )
 def gradpsi_pallas_batched(
@@ -379,7 +407,7 @@ def gradpsi_pallas_batched(
     *,
     num_groups: int,
     group_size: int,
-    tau: float,
+    tau,
     gamma: float,
     tile_l: int = 0,
     tile_n: int = DEFAULT_TILE_N,
@@ -388,10 +416,13 @@ def gradpsi_pallas_batched(
     """Dense-grid kernel over B problems: grid (B, L_tiles, N_tiles).
 
     Returns (T_rowsum (B, m_pad), T_colsum (B, n), psi (B,)).  Semantics
-    per problem are identical to :func:`gradpsi_pallas`.
+    per problem are identical to :func:`gradpsi_pallas`.  ``tau`` (scalar
+    or per-group ``(L,)``) is shared by the whole batch — a bucket packs
+    problems with one regularizer, so thresholds are batch-static.
     """
     L, g = num_groups, group_size
     B, n = beta.shape
+    tau_g = tau_row(tau, L)
     if tile_l == 0:
         tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
     assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
@@ -414,6 +445,7 @@ def gradpsi_pallas_batched(
             pl.BlockSpec((1, tile_l, g), lambda b, l, j, f: (b, l, 0)),
             pl.BlockSpec((1, tile_n), lambda b, l, j, f: (b, j)),
             pl.BlockSpec((1, tile_l, g, tile_n), c_index),
+            pl.BlockSpec((tile_l,), lambda b, l, j, f: (l,)),
         ],
         out_specs=[
             pl.BlockSpec((1, tile_l, g), lambda b, l, j, f: (b, l, 0)),
@@ -423,9 +455,7 @@ def gradpsi_pallas_batched(
     )
 
     ga_part, gb_part, psi = pl.pallas_call(
-        functools.partial(
-            _dense_kernel_batched, tau=float(tau), gamma=float(gamma)
-        ),
+        functools.partial(_dense_kernel_batched, gamma=float(gamma)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, L, g), jnp.float32),
@@ -433,7 +463,7 @@ def gradpsi_pallas_batched(
             jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(flags, alpha_g, beta, C4)
+    )(flags, alpha_g, beta, C4, tau_g)
 
     return (
         ga_part.reshape(B, -1),
@@ -472,8 +502,8 @@ def build_batch_tile_schedule(
 
 
 def _compact_kernel_batched(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
-                            ga_ref, gb_ref, psi_ref, steps_ref,
-                            *, tau: float, gamma: float):
+                            tau_ref, ga_ref, gb_ref, psi_ref, steps_ref,
+                            *, gamma: float):
     s = pl.program_id(0)
 
     @pl.when(s == 0)
@@ -485,7 +515,8 @@ def _compact_kernel_batched(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
     alpha = alpha_ref[0].astype(jnp.float32)             # (TL, g)
     beta = beta_ref[0].astype(jnp.float32)               # (TN,)
     c = c_ref[0].astype(jnp.float32)                     # (TL, g, TN)
-    t, psi = _gradpsi_tile(alpha, beta, c, tau=tau, gamma=gamma)
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
     # per-step slots: every visited block is written exactly once, so no
     # cross-step accumulation state and no uninitialized revisits.
     ga_ref[...] = jnp.sum(t, axis=2)[None]               # (1, TL, g)
@@ -495,7 +526,7 @@ def _compact_kernel_batched(sched_ref, nact_ref, alpha_ref, beta_ref, c_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("num_groups", "group_size", "tau", "gamma",
+    static_argnames=("num_groups", "group_size", "gamma",
                      "tile_l", "tile_n", "interpret"),
 )
 def gradpsi_pallas_compact_batched(
@@ -507,7 +538,7 @@ def gradpsi_pallas_compact_batched(
     *,
     num_groups: int,
     group_size: int,
-    tau: float,
+    tau,
     gamma: float,
     tile_l: int = 0,
     tile_n: int = DEFAULT_TILE_N,
@@ -518,10 +549,12 @@ def gradpsi_pallas_compact_batched(
 
     Returns (T_rowsum (B, m_pad), T_colsum (B, n), psi (B,), steps ()).
     With ``num_active == 0`` one sentinel step runs (a grid cannot be
-    empty) and its outputs are masked to exact zeros.
+    empty) and its outputs are masked to exact zeros.  ``tau`` (scalar or
+    per-group ``(L,)``) is shared batch-wide, gathered per scheduled tile.
     """
     L, g = num_groups, group_size
     B, n = beta.shape
+    tau_g = tau_row(tau, L)
     if tile_l == 0:
         tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
     assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
@@ -544,6 +577,7 @@ def gradpsi_pallas_compact_batched(
             pl.BlockSpec((1, tile_n), lambda s, sc, na: (sc[0, s], sc[2, s])),
             pl.BlockSpec((1, tile_l, g, tile_n),
                          lambda s, sc, na: (sc[0, s], sc[1, s], 0, sc[2, s])),
+            pl.BlockSpec((tile_l,), lambda s, sc, na: (sc[1, s],)),
         ],
         out_specs=[
             pl.BlockSpec((1, tile_l, g), lambda s, sc, na: (s, 0, 0)),
@@ -554,9 +588,7 @@ def gradpsi_pallas_compact_batched(
     )
 
     ga_steps, gb_steps, psi_steps, steps = pl.pallas_call(
-        functools.partial(
-            _compact_kernel_batched, tau=float(tau), gamma=float(gamma)
-        ),
+        functools.partial(_compact_kernel_batched, gamma=float(gamma)),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((BT, tile_l, g), jnp.float32),
@@ -565,7 +597,7 @@ def gradpsi_pallas_compact_batched(
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(sched, nact, alpha_g, beta, C4)
+    )(sched, nact, alpha_g, beta, C4, tau_g)
 
     # assemble: slots past num_active were never visited (garbage) — route
     # them to an out-of-range segment so the scatter drops them.  Segments

@@ -53,6 +53,7 @@ from repro.kernels.gradpsi import (
     gradpsi_pallas_compact,
     gradpsi_pallas_compact_batched,
     resolve_tile_l,
+    tau_row,
 )
 from repro.kernels.screen import screen_pallas
 
@@ -60,6 +61,17 @@ from repro.kernels.screen import screen_pallas
 def default_interpret() -> bool:
     """Interpret Pallas on anything that is not a real TPU."""
     return jax.default_backend() != "tpu"
+
+
+def _pad_tau(tau, L: int, tile_l: int) -> jnp.ndarray:
+    """Normalize ``tau`` (scalar or per-group ``(L,)``) to (L_pad,) fp32.
+
+    Padded groups get tau = 0; together with their all-zero snapshots
+    (zbar = 0 <= 0) they still always certify ZERO, so tile padding keeps
+    costing nothing for every regularizer — including pure-l2, whose real
+    groups also carry tau = 0.
+    """
+    return _pad_axis(tau_row(tau, L), 0, tile_l, 0.0)
 
 
 def _pad_axis(x: jnp.ndarray, axis: int, mult: int, value=0.0):
@@ -191,13 +203,15 @@ def screen_tile_flags(
     alpha: jnp.ndarray,
     beta: jnp.ndarray,
     pp: PaddedProblem,
-    tau: float,
+    tau,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Per-eval fused screening -> (L_tiles, N_tiles) skip flags.
 
     Computes the O(L + n) delta norms in jnp, then one Pallas pass over the
-    padded bound matrices; the verdict matrix never reaches HBM.
+    padded bound matrices; the verdict matrix never reaches HBM.  ``tau``
+    is a scalar or per-group ``(L,)`` threshold (see
+    :meth:`repro.core.regularizers.Regularizer.tau_vec`).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -211,7 +225,7 @@ def screen_tile_flags(
     _, flags = screen_pallas(
         pstate.z, pstate.k, pstate.o, pstate.act,
         padL(da_plus), padL(da_full), padL(da_neg), padN(db), pstate.sqrt_g,
-        tau=float(tau), tile_l=pp.tile_l, tile_n=pp.tile_n,
+        tau=_pad_tau(tau, L, pp.tile_l), tile_l=pp.tile_l, tile_n=pp.tile_n,
         interpret=interpret, emit_verdict=False,
     )
     return flags
@@ -272,7 +286,7 @@ def dual_value_and_grad_padded(
     alphap, betap = pad_tile_inputs(alpha, beta, pp)
     kw = dict(
         num_groups=pp.L_pad, group_size=g,
-        tau=prob.reg.tau, gamma=prob.reg.gamma,
+        tau=_pad_tau(prob.tau_vec(), pp.L, pp.tile_l), gamma=prob.reg.gamma,
         tile_l=pp.tile_l, tile_n=pp.tile_n, interpret=interpret,
     )
 
@@ -361,18 +375,21 @@ def screen_tile_flags_batched(
     alpha: jnp.ndarray,                # (B, m_pad)
     beta: jnp.ndarray,                 # (B, n)
     pp: PaddedProblem,
-    tau: float,
+    tau,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Per-eval fused screening for a batch -> (B, L_tiles, N_tiles) flags.
 
     The O(B (L + n)) delta norms run in jnp; the screening kernel vmaps
     over the problem axis (screening state never couples problems), so the
-    per-problem verdict matrices still never reach HBM.
+    per-problem verdict matrices still never reach HBM.  ``tau`` (scalar
+    or per-group ``(L,)``) is shared by every problem in the batch — a
+    bucket packs one regularizer.
     """
     if interpret is None:
         interpret = default_interpret()
     L = pp.L
+    tau_p = _pad_tau(tau, L, pp.tile_l)
     da_plus, da_full, da_neg = screening.grouped_norms(
         alpha - pstate.alpha_snap, L
     )
@@ -383,7 +400,7 @@ def screen_tile_flags_batched(
     def one(z, k, o, act, dap, daf, dan, dbv, sg):
         _, flags = screen_pallas(
             z, k, o, act, dap, daf, dan, dbv, sg,
-            tau=float(tau), tile_l=pp.tile_l, tile_n=pp.tile_n,
+            tau=tau_p, tile_l=pp.tile_l, tile_n=pp.tile_n,
             interpret=interpret, emit_verdict=False,
         )
         return flags
@@ -451,7 +468,7 @@ def dual_value_and_grad_padded_batched(
     alphap, betap = pad_tile_inputs(alpha, beta, pp)
     kw = dict(
         num_groups=pp.L_pad, group_size=g,
-        tau=prob.reg.tau, gamma=prob.reg.gamma,
+        tau=_pad_tau(prob.tau_vec(), pp.L, pp.tile_l), gamma=prob.reg.gamma,
         tile_l=pp.tile_l, tile_n=pp.tile_n, interpret=interpret,
     )
 
@@ -517,16 +534,19 @@ def dual_value_and_grad(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("tau", "tile_l", "tile_n", "interpret")
+    jax.jit, static_argnames=("tile_l", "tile_n", "interpret")
 )
 def screen_verdicts(
     z_snap, k_snap, o_snap, active, da_plus, da_full, da_neg, db, sqrt_g,
-    tau: float,
+    tau,
     tile_l: int = 8,
     tile_n: int = 128,
     interpret: bool | None = None,
 ):
-    """Pallas screening pass; pads (L, n) to tile multiples transparently."""
+    """Pallas screening pass; pads (L, n) to tile multiples transparently.
+
+    ``tau`` is a scalar or per-group ``(L,)`` threshold vector.
+    """
     if interpret is None:
         interpret = default_interpret()
     L, n = z_snap.shape
@@ -535,9 +555,10 @@ def screen_verdicts(
     padN = lambda x: _pad_axis(x, 0, tile_n, 0.0)
     v, flags = screen_pallas(
         pad2(z_snap), pad2(k_snap),
-        # padded k/o rows are zero => zlow <= 0 < tau => never ACTIVE
+        # padded k/o rows are zero => zlow <= 0 <= tau => never ACTIVE
         pad2(o_snap), pad2(active.astype(jnp.int8)),
         padL(da_plus), padL(da_full), padL(da_neg), padN(db), padL(sqrt_g),
-        tau=float(tau), tile_l=tile_l, tile_n=tile_n, interpret=interpret,
+        tau=_pad_tau(tau, L, tile_l), tile_l=tile_l, tile_n=tile_n,
+        interpret=interpret,
     )
     return v[:L, :n], flags

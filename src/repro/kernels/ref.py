@@ -6,6 +6,7 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from repro.core.screening import ACTIVE, CHECK, ZERO
+from repro.kernels.gradpsi import tau_row
 
 
 def gradpsi_ref(
@@ -16,14 +17,19 @@ def gradpsi_ref(
     *,
     num_groups: int,
     group_size: int,
-    tau: float,
+    tau,
     gamma: float,
     tile_l: int,
     tile_n: int,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Oracle for gradpsi_pallas: same tile-masking semantics, plain jnp."""
+    """Oracle for gradpsi_pallas: same tile-masking semantics, plain jnp.
+
+    ``tau`` is a scalar or a per-group ``(L,)`` threshold vector, exactly
+    as the kernel accepts it.
+    """
     L, g = num_groups, group_size
     n = beta.shape[0]
+    tau_c = tau_row(tau, L)[:, None]
     F = (
         alpha.reshape(L, g)[:, :, None].astype(jnp.float32)
         + beta[None, None, :].astype(jnp.float32)
@@ -31,14 +37,16 @@ def gradpsi_ref(
     )
     Fp = jnp.maximum(F, 0.0)
     Z = jnp.sqrt(jnp.sum(Fp * Fp, axis=1))               # (L, n)
-    on = Z > tau
+    on = Z > tau_c
     Zs = jnp.where(on, Z, 1.0)
-    s = jnp.where(on, 1.0 - tau / Zs, 0.0)
+    s = jnp.where(on, 1.0 - tau_c / Zs, 0.0)
     # expand tile flags to per-entry mask
     mask = jnp.repeat(jnp.repeat(flags != 0, tile_l, axis=0), tile_n, axis=1)
     s = jnp.where(mask, s, 0.0)
     T = s[:, None, :] * Fp / gamma
-    psi = jnp.where(on, s * Zs * Zs / gamma * (1.0 - 0.5 * s) - (tau / gamma) * s * Zs, 0.0)
+    psi = jnp.where(
+        on, s * Zs * Zs / gamma * (1.0 - 0.5 * s) - (tau_c / gamma) * s * Zs, 0.0
+    )
     psi = jnp.where(mask, psi, 0.0)
     return (
         jnp.sum(T, axis=2).reshape(-1),
@@ -63,9 +71,10 @@ def build_tile_schedule_ref(flags) -> Tuple[jnp.ndarray, int]:
 
 def screen_ref(
     z_snap, k_snap, o_snap, active, da_plus, da_full, da_neg, db, sqrt_g,
-    *, tau: float, tile_l: int, tile_n: int,
+    *, tau, tile_l: int, tile_n: int,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Oracle for screen_pallas."""
+    """Oracle for screen_pallas (``tau`` scalar or per-group ``(L,)``)."""
+    tau_c = tau_row(tau, z_snap.shape[0])[:, None]
     zbar = z_snap + da_plus[:, None] + sqrt_g[:, None] * jnp.maximum(db, 0.0)[None, :]
     zlow = (
         k_snap
@@ -75,9 +84,9 @@ def screen_ref(
         - da_neg[:, None]
         - sqrt_g[:, None] * jnp.maximum(-db, 0.0)[None, :]
     )
-    v = jnp.where(zbar <= tau, ZERO, CHECK)
+    v = jnp.where(zbar <= tau_c, ZERO, CHECK)
     v = jnp.where(active != 0, ACTIVE, v)
-    v = jnp.where(jnp.logical_and(v == CHECK, zlow > tau), ACTIVE, v)
+    v = jnp.where(jnp.logical_and(v == CHECK, zlow > tau_c), ACTIVE, v)
     v = v.astype(jnp.int32)
     L, n = v.shape
     vt = v.reshape(L // tile_l, tile_l, n // tile_n, tile_n)

@@ -28,14 +28,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.screening import ZERO, CHECK, ACTIVE
+from repro.kernels.gradpsi import tau_row
 
 
 def _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
-                  db_ref, sg_ref, *, tau: float):
+                  db_ref, sg_ref, tau_ref):
     dap = dap_ref[...][:, None]                       # (TL, 1)
     daf = daf_ref[...][:, None]
     dan = dan_ref[...][:, None]
     sg = sg_ref[...][:, None]
+    tau = tau_ref[...][:, None]                       # (TL, 1) per-group
     db = db_ref[...][None, :]                         # (1, TN)
 
     zbar = z_ref[...] + dap + sg * jnp.maximum(db, 0.0)
@@ -56,23 +58,23 @@ def _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
 
 
 def _kernel_full(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
-                 db_ref, sg_ref, verdict_ref, flag_ref, *, tau: float):
+                 db_ref, sg_ref, tau_ref, verdict_ref, flag_ref):
     v = _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref,
-                      dan_ref, db_ref, sg_ref, tau=tau)
+                      dan_ref, db_ref, sg_ref, tau_ref)
     verdict_ref[...] = v
     flag_ref[0, 0] = jnp.any(v != ZERO).astype(jnp.int32)
 
 
 def _kernel_flags(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
-                  db_ref, sg_ref, flag_ref, *, tau: float):
+                  db_ref, sg_ref, tau_ref, flag_ref):
     v = _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref,
-                      dan_ref, db_ref, sg_ref, tau=tau)
+                      dan_ref, db_ref, sg_ref, tau_ref)
     flag_ref[0, 0] = jnp.any(v != ZERO).astype(jnp.int32)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tau", "tile_l", "tile_n", "interpret", "emit_verdict"),
+    static_argnames=("tile_l", "tile_n", "interpret", "emit_verdict"),
 )
 def screen_pallas(
     z_snap: jnp.ndarray,       # (L, n)
@@ -85,7 +87,7 @@ def screen_pallas(
     db: jnp.ndarray,           # (n,)  d_beta
     sqrt_g: jnp.ndarray,       # (L,)
     *,
-    tau: float,
+    tau,
     tile_l: int = 8,
     tile_n: int = 128,
     interpret: bool = False,
@@ -93,12 +95,15 @@ def screen_pallas(
 ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray]:
     """Returns (verdict (L, n) int32 | None, tile_flags (L/tl, n/tn) int32).
 
-    ``emit_verdict=False`` skips the (L, n) HBM write-back entirely; only
-    the tile-flag reduction leaves the chip.
+    ``tau`` is a scalar or per-group ``(L,)`` threshold vector (the
+    regularizer's screening thresholds); it rides as a row operand next to
+    ``sqrt_g``.  ``emit_verdict=False`` skips the (L, n) HBM write-back
+    entirely; only the tile-flag reduction leaves the chip.
     """
     L, n = z_snap.shape
     assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
     grid = (L // tile_l, n // tile_n)
+    tau_g = tau_row(tau, L)
 
     row = pl.BlockSpec((tile_l,), lambda l, j: (l,))
     col = pl.BlockSpec((tile_n,), lambda l, j: (j,))
@@ -118,14 +123,14 @@ def screen_pallas(
         out_shape = [jax.ShapeDtypeStruct(grid, jnp.int32)]
 
     outs = pl.pallas_call(
-        functools.partial(kernel, tau=float(tau)),
+        kernel,
         grid=grid,
-        in_specs=[mat, mat, mat, mat, row, row, row, col, row],
+        in_specs=[mat, mat, mat, mat, row, row, row, col, row, row],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(z_snap, k_snap, o_snap, active.astype(jnp.int8),
-      da_plus, da_full, da_neg, db, sqrt_g)
+      da_plus, da_full, da_neg, db, sqrt_g, tau_g)
 
     if emit_verdict:
         return outs[0], outs[1]

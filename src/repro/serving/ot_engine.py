@@ -52,7 +52,7 @@ from repro.core import groups as G
 from repro.core import solver as slv
 from repro.core.dual import DualProblem, plan_from_duals
 from repro.core.lbfgs import where_state
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import Regularizer
 from repro.utils.logging import get_logger
 
 log = get_logger("ot_serving")
@@ -75,6 +75,11 @@ class OTRequest:
         ``(m,)`` source marginal; defaults to uniform ``1/m``.
     b : np.ndarray, optional
         ``(n,)`` target marginal; defaults to uniform ``1/n``.
+    reg : Regularizer, optional
+        Per-request regularizer; defaults to the engine's.  Requests with
+        different regularizers never share a bucket (the compiled program
+        and the screening thresholds specialize on the regularizer), so
+        mixed-regularizer traffic packs into per-regularizer batches.
 
     Attributes
     ----------
@@ -96,6 +101,8 @@ class OTRequest:
     labels: np.ndarray                 # (m,) integer class labels
     a: Optional[np.ndarray] = None     # (m,) source marginal (default 1/m)
     b: Optional[np.ndarray] = None     # (n,) target marginal (default 1/n)
+    reg: Optional[Regularizer] = None  # per-request regularizer (default:
+    #   the engine's; distinct regularizers go to distinct buckets)
     # filled at retirement:
     value: Optional[float] = None      # dual objective at convergence
     plan: Optional[np.ndarray] = None  # (m, n) primal plan, original order
@@ -111,18 +118,21 @@ def _select_slots(mask, new, old):
 
 
 class _Bucket:
-    """Fixed-slot batch of one padded geometry (L, g_pad, n_pad).
+    """Fixed-slot batch of one (padded geometry, regularizer) combination.
 
-    ``num_slots`` = ``num_devices * slots_per_device``; with a mesh
-    attached, slot arrays and solver state are committed shard-wise so an
-    engine tick dispatches one sharded ``batch_round`` with no implicit
-    resharding.
+    The bucket key is ``(L, g_pad, n_pad, reg)``: problems only share a
+    bucket — and therefore a compiled program, a screening-threshold
+    vector, and a batch — when both their padded geometry AND their
+    regularizer coincide.  ``num_slots`` = ``num_devices *
+    slots_per_device``; with a mesh attached, slot arrays and solver state
+    are committed shard-wise so an engine tick dispatches one sharded
+    ``batch_round`` with no implicit resharding.
     """
 
-    def __init__(self, key: Tuple[int, int, int], slots_per_device: int,
-                 reg: GroupSparseReg, opts: slv.SolveOptions, dtype,
+    def __init__(self, key: Tuple, slots_per_device: int,
+                 reg: Regularizer, opts: slv.SolveOptions, dtype,
                  mesh=None):
-        L, g_pad, n_pad = key
+        L, g_pad, n_pad = key[:3]
         self.key = key
         self.mesh = mesh
         self.num_devices = mesh.size if mesh is not None else 1
@@ -202,7 +212,7 @@ class _Bucket:
 
     def admit(self, slot: int, req: OTRequest, spec: G.GroupSpec):
         """Write ``req``'s padded arrays into ``slot`` (no state init)."""
-        L, g_pad, n_pad = self.key
+        L, g_pad, n_pad = self.key[:3]
         m, n = req.C.shape
         dtype = self.C.dtype
         a = req.a if req.a is not None else np.full((m,), 1.0 / m, dtype)
@@ -333,17 +343,19 @@ class OTServingEngine:
     """Serve a stream of OT solve requests with bucketed continuous batching.
 
     Requests whose padded geometry ``(L, g_pad, ceil(n / n_quant) *
-    n_quant)`` coincides share a bucket — and therefore a compiled program
-    and a batch.  Each tick advances every active bucket by one fused
+    n_quant)`` AND regularizer coincide share a bucket — and therefore
+    a compiled program and a batch (mixed-regularizer traffic packs
+    into per-regularizer buckets; see :meth:`_bucket_key`).  Each tick
+    advances every active bucket by one fused
     Algorithm-1 round in a single program launch per bucket; attached to a
     device mesh, that launch is a ``shard_map`` program with the slot axis
     split across devices (see :mod:`repro.core.sharded`).
 
     Parameters
     ----------
-    reg : GroupSparseReg
-        Regularizer shared by every request (compiled programs specialize
-        on it).
+    reg : Regularizer
+        Default regularizer for requests that don't carry their own
+        (compiled programs specialize on it per bucket).
     opts : SolveOptions, optional
         Solver options, including the ``grad_impl`` backend
         ('dense' | 'screened' | 'pallas').
@@ -374,7 +386,7 @@ class OTServingEngine:
 
     def __init__(
         self,
-        reg: GroupSparseReg,
+        reg: Regularizer,
         opts: slv.SolveOptions = slv.SolveOptions(),
         max_batch: int = 4,
         n_quant: int = 64,
@@ -390,13 +402,27 @@ class OTServingEngine:
         self.dtype = dtype
         self.mesh = mesh
         self.num_devices = mesh.size if mesh is not None else 1
-        self.buckets: Dict[Tuple[int, int, int], _Bucket] = {}
+        self.buckets: Dict[Tuple, _Bucket] = {}
 
-    def _bucket_key(self, req: OTRequest) -> Tuple[Tuple[int, int, int], G.GroupSpec]:
+    def _bucket_key(self, req: OTRequest) -> Tuple[Tuple, G.GroupSpec]:
+        """Bucket key ``(L, g_pad, n_pad, reg)`` + the request's group spec.
+
+        The regularizer is part of the key (regularizers are hashable
+        frozen dataclasses): two requests with identical padded geometry
+        but different regularizer kinds — or the same kind with different
+        parameters — must not share a batch, because the compiled solver
+        program and the per-group screening thresholds specialize on the
+        regularizer.
+        """
         spec = G.spec_from_labels(req.labels, pad_to=self.pad_to)
         n = req.C.shape[1]
         n_pad = -(-n // self.n_quant) * self.n_quant
-        return (spec.num_groups, spec.group_size, n_pad), spec
+        reg = req.reg if req.reg is not None else self.reg
+        # validate per-group parameters against THIS request's group count
+        # before any slot/bucket mutation: a malformed request must be
+        # rejected here, not poison a bucket from inside state init
+        reg.mu_vec(spec.num_groups)
+        return (spec.num_groups, spec.group_size, n_pad, reg), spec
 
     def try_admit(self, req: OTRequest) -> bool:
         """Admit into the request's bucket if a slot is free (no round run).
@@ -415,7 +441,7 @@ class OTServingEngine:
         key, spec = self._bucket_key(req)
         bucket = self.buckets.get(key)
         if bucket is None:
-            bucket = _Bucket(key, self.max_batch, self.reg, self.opts,
+            bucket = _Bucket(key, self.max_batch, key[3], self.opts,
                              self.dtype, mesh=self.mesh)
             self.buckets[key] = bucket
         slot = bucket.free_slot()

@@ -1,3 +1,4 @@
+import json
 import os
 import sys
 
@@ -6,3 +7,53 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402  (after the env/path setup above)
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def make_ot_problem(seed: int, L: int, g: int, n: int, pad_to: int = 8):
+    """Deterministic padded OT problem shared by tests and golden fixtures.
+
+    The geometry mirrors the paper's domain-adaptation setup: L classes of
+    g source samples each, class-shifted Gaussians, normalized squared-
+    Euclidean costs, uniform marginals.  Everything derives from
+    ``np.random.default_rng(seed)``, so a committed (seed, L, g, n) tuple
+    pins the problem exactly — the golden fixtures store only those
+    numbers plus the expected outputs.
+
+    Returns ``(C_pad, a, b, spec, labels)`` in the padded group layout.
+    """
+    import numpy as np
+
+    from repro.core import groups as G
+    from repro.core.ot import squared_euclidean_cost
+
+    rng = np.random.default_rng(seed)
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
+    C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+    C /= C.max()
+    spec = G.spec_from_labels(labels, pad_to=pad_to)
+    C_pad = G.pad_cost_matrix(C, labels, spec)
+    a = G.pad_marginal(np.full((m,), 1.0 / m, np.float32), labels, spec)
+    b = np.full((n,), 1.0 / n, np.float32)
+    return C_pad, a, b, spec, labels
+
+
+@pytest.fixture(scope="session")
+def golden_regularizer_cases():
+    """Known-answer cases from tests/fixtures/golden_regularizers.json.
+
+    Each case carries the problem coordinates (seed, L, g, n, pad_to), the
+    regularizer config (rebuilt via ``repro.core.regularizers.from_config``)
+    and the expected outputs; see tests/test_regularizers.py for the gate.
+    """
+    path = os.path.join(FIXTURE_DIR, "golden_regularizers.json")
+    with open(path) as f:
+        data = json.load(f)
+    assert data["schema_version"] == 1
+    return data["cases"]

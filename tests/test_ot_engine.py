@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.lbfgs import LbfgsOptions
 from repro.core.ot import solve_groupsparse_ot, squared_euclidean_cost
-from repro.core.regularizers import GroupSparseReg
+from repro.core.regularizers import ElasticNetGroupReg, GroupSparseReg, L2Reg
 from repro.core.solver import (
     SolveOptions,
     dispatch_count,
@@ -113,6 +113,86 @@ def test_no_head_of_line_blocking_across_buckets():
     # with max_batch=1 and 3 A-requests ahead of it, B can only have been
     # served concurrently if admission skipped over the blocked A queue
     assert req_b.done and req_b.converged
+
+
+def test_mixed_regularizer_streams_do_not_share_buckets():
+    """Requests with identical padded geometry but different regularizers
+    must land in different buckets (the compiled program and the screening
+    thresholds specialize per regularizer), and every retired request must
+    match a solo solve with ITS regularizer."""
+    rng = np.random.default_rng(5)
+    regs = {
+        0: None,                                            # engine default
+        1: L2Reg(gamma=0.4),
+        2: ElasticNetGroupReg(gamma=0.4, mu_weights=(0.0, 0.5, 1.0, 1.5)),
+        3: None,                                            # shares bucket w/ 0
+    }
+    reqs, raws = [], []
+    for rid, reg in regs.items():
+        req, raw = _make_request(rng, rid, 4, 6, 30 + rid)  # same bucket geom
+        req.reg = reg
+        reqs.append(req)
+        raws.append(raw)
+
+    default = GroupSparseReg.from_rho(1.0, 0.6)
+    engine = OTServingEngine(default, OPTS, max_batch=4, n_quant=64)
+    done = engine.run(reqs)
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    # one geometry, three regularizers -> exactly three buckets
+    assert len(engine.buckets) == 3
+    kinds = sorted(type(key[3]).kind for key in engine.buckets)
+    assert kinds == ["elastic_net", "group_sparse", "l2"]
+
+    for req, (Xs, labels, Xt) in zip(reqs, raws):
+        assert req.done and req.converged
+        reg = req.reg if req.reg is not None else default
+        sol = solve_groupsparse_ot(Xs, labels, Xt, reg=reg, opts=OPTS, pad_to=8)
+        np.testing.assert_allclose(req.value, sol.value, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(req.plan, sol.plan, rtol=1e-3, atol=2e-4)
+
+    # a malformed per-group regularizer is rejected at admission, BEFORE
+    # any slot/bucket mutation — it must not poison the engine
+    bad = reqs[0]
+    malformed = OTRequest(
+        rid=9, C=bad.C, labels=bad.labels,
+        reg=ElasticNetGroupReg(gamma=1.0, mu_weights=(0.1, 0.2)),  # 2 != 4
+    )
+    with pytest.raises(ValueError, match="group"):
+        engine.try_admit(malformed)
+    assert len(engine.buckets) == 3                       # no new bucket
+    assert all(not b.occupied() for b in engine.buckets.values())
+    assert engine.tick() == []                            # engine still healthy
+
+
+def test_retired_plan_matches_solo_solve_per_regularizer():
+    """A request retired from a mixed-convergence bucket gets the same plan
+    (bitwise value) as the same problem solved alone with the same
+    regularizer — for the non-default kinds too."""
+    rng = np.random.default_rng(6)
+    for reg in (
+        L2Reg(gamma=0.4),
+        ElasticNetGroupReg(gamma=0.4, mu_weights=(0.0, 0.5, 1.0, 1.5)),
+    ):
+        r0, _ = _make_request(rng, 0, 4, 6, 30)
+        r1, _ = _make_request(rng, 1, 4, 6, 31)
+        r0.reg = r1.reg = reg
+
+        # reference: r0 alone in its own engine
+        e0 = OTServingEngine(GroupSparseReg.from_rho(1.0, 0.6), OPTS, max_batch=2)
+        solo = OTRequest(r0.rid, r0.C, r0.labels, reg=reg)
+        ref = {r.rid: (r.value, r.plan) for r in e0.run([solo])}
+
+        # r0 + a late-arriving bucket-mate
+        engine = OTServingEngine(GroupSparseReg.from_rho(1.0, 0.6), OPTS, max_batch=2)
+        assert engine.try_admit(OTRequest(r0.rid, r0.C, r0.labels, reg=reg))
+        finished = []
+        finished += engine.tick()
+        assert engine.try_admit(OTRequest(r1.rid, r1.C, r1.labels, reg=reg))
+        while len(finished) < 2:
+            finished += engine.tick()
+        vals = {r.rid: (r.value, r.plan) for r in finished}
+        assert vals[0][0] == pytest.approx(ref[0][0], abs=0.0), type(reg).kind
+        np.testing.assert_array_equal(vals[0][1], ref[0][1])
 
 
 def test_engine_dispatch_efficiency():

@@ -4,9 +4,14 @@ The safety of the paper's screening is exactly the kind of invariant
 hypothesis shines on: for ANY snapshot point and ANY current point, the
 Eq. 6 value must upper-bound the true group norm and the Eq. 7 value must
 lower-bound it — otherwise Lemma 2/5 break and the solver silently returns
-wrong gradients.
+wrong gradients.  With the pluggable regularizer subsystem the invariants
+are quantified over the regularizer too: ANY member of the thresholded
+soft-scale family (group-sparse / pure-l2 / per-group elastic-net weights)
+must keep (i) "skip verdict => gradient block exactly zero" and (ii) the
+closed-form conjugate gradient consistent with autodiff of psi.
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -14,12 +19,34 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import screening as S
-from repro.core.dual import DualProblem, snapshot_norms
-from repro.core.regularizers import GroupSparseReg, psi_from_z, scale_from_z
+from repro.core.dual import DualProblem, plan_from_duals, snapshot_norms
+from repro.core.regularizers import (
+    ElasticNetGroupReg,
+    GroupSparseReg,
+    L2Reg,
+    grad_psi,
+    psi_from_z,
+    scale_from_z,
+)
 from repro.sharding.partition import fit_spec
 from jax.sharding import PartitionSpec as P
 
 _f32 = st.floats(-10.0, 10.0, allow_nan=False, width=32)
+
+
+def _regularizers(L: int):
+    """Strategy over all regularizer kinds, sized for L groups."""
+    gamma = st.floats(0.05, 5.0)
+    mu = st.floats(0.0, 5.0)
+    return st.one_of(
+        st.builds(GroupSparseReg, gamma=gamma, mu=mu),
+        st.builds(L2Reg, gamma=gamma),
+        st.builds(
+            lambda g_, ws: ElasticNetGroupReg(gamma=g_, mu_weights=tuple(ws)),
+            gamma,
+            st.lists(mu, min_size=L, max_size=L),
+        ),
+    )
 
 
 def _arrays(rng_seed, L, g, n, scale):
@@ -77,6 +104,87 @@ def test_soft_threshold_properties(z, gamma, mu):
     assert bool(jnp.all(jnp.diff(s) >= -1e-6))  # monotone in z
     assert float(scale_from_z(jnp.zeros((1,)), reg)[0]) == 0.0
     assert float(psi_from_z(jnp.zeros((1,)), reg)[0]) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    L=st.integers(1, 5),
+    g=st.integers(1, 8),
+    n=st.integers(1, 16),
+    scale=st.floats(0.01, 10.0),
+    data=st.data(),
+)
+def test_skip_verdict_implies_zero_gradient_block(seed, L, g, n, scale, data):
+    """Screening invariant, quantified over the regularizer family: a ZERO
+    verdict must certify an exactly-zero gradient block.
+
+    At the snapshot point the bound equals the true group norm bitwise, so
+    the implication is asserted *exactly*; at a displaced point fp32
+    rounding of the Eq. 6 terms admits an O(eps * scale) slack (the same
+    slack the bounds-validity test tolerates)."""
+    C, a0, b0, da, db = _arrays(seed, L, g, n, scale)
+    reg = data.draw(_regularizers(L))
+    prob = DualProblem(L, g, n, reg)
+    row_mask = jnp.ones((L * g,), bool)
+    sqrt_g = jnp.full((L,), np.sqrt(g), jnp.float32)
+    tau = prob.tau_vec()
+
+    alpha0, beta0 = jnp.asarray(a0), jnp.asarray(b0)
+    z, k, o = snapshot_norms(alpha0, beta0, jnp.asarray(C), prob, row_mask)
+    state = S.take_snapshot(
+        S.init_state(L * g, n, L), alpha0, beta0, z, k, o
+    )
+
+    # (a) at the snapshot point: exact implication
+    verd0 = S.verdicts(state, alpha0, beta0, sqrt_g, tau)
+    T0 = plan_from_duals(alpha0, beta0, jnp.asarray(C), prob)
+    blk0 = jnp.max(jnp.abs(T0.reshape(L, g, n)), axis=1)        # (L, n)
+    assert bool(jnp.all(jnp.where(verd0 == S.ZERO, blk0, 0.0) == 0.0))
+
+    # (b) displaced point: implication up to fp32 bound rounding
+    alpha1, beta1 = alpha0 + jnp.asarray(da), beta0 + jnp.asarray(db)
+    verd = S.verdicts(state, alpha1, beta1, sqrt_g, tau)
+    T1 = plan_from_duals(alpha1, beta1, jnp.asarray(C), prob)
+    blk = jnp.max(jnp.abs(T1.reshape(L, g, n)), axis=1)
+    tol = 1e-4 * max(scale, 1.0) / reg.gamma
+    assert bool(jnp.all(jnp.where(verd == S.ZERO, blk, 0.0) <= tol))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    L=st.integers(1, 5),
+    g=st.integers(1, 8),
+    scale=st.floats(0.01, 10.0),
+    data=st.data(),
+)
+def test_conjugate_consistency_with_autodiff(seed, L, g, scale, data):
+    """The closed-form conjugate gradient equals autodiff of psi for every
+    regularizer kind (Danskin), on screened and unscreened blocks alike."""
+    reg = data.draw(_regularizers(L))
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray((rng.normal(size=L * g) * scale).astype(np.float32))
+
+    def psi_of_f(ff):
+        fg = ff.reshape(L, -1)
+        # tiny clamp keeps sqrt' finite when a whole group is nonpositive
+        Z = jnp.sqrt(jnp.sum(jnp.maximum(fg, 0.0) ** 2, axis=-1) + 1e-30)
+        return jnp.sum(reg.psi_from_z(Z))
+
+    gad = jax.grad(psi_of_f)(f)
+    gcf = grad_psi(f, L, reg)
+    assert bool(jnp.all(jnp.isfinite(gad)))
+    tol = 2e-4 * max(scale, 1.0) / reg.gamma
+    np.testing.assert_allclose(np.asarray(gad), np.asarray(gcf), atol=tol)
+    # Fenchel identity at the maximizer: psi(f) = f.g* - Psi(g*)
+    fen = float(jnp.dot(f, gcf) - reg.primal(gcf[:, None], L))
+    np.testing.assert_allclose(
+        float(psi_of_f(f)), fen,
+        rtol=1e-4, atol=1e-4 * (1.0 + max(scale, 1.0) ** 2 * g / reg.gamma),
+    )
+    # psi itself vanishes below the threshold and at the origin
+    assert float(psi_of_f(jnp.zeros_like(f))) == pytest.approx(0.0, abs=1e-12)
 
 
 @settings(max_examples=80, deadline=None)

@@ -97,6 +97,43 @@ def test_sharded_solve_batch_bitwise_all_backends():
         assert f"MATCH {gi}" in r.stdout
 
 
+def test_sharded_bitwise_parity_per_regularizer():
+    """The PR 4 regularizer subsystem must be invisible to the sharding:
+    sharded == unsharded bitwise for the pure-l2 and elastic-net kinds on
+    all three backends (the group-sparse kind is covered exhaustively by
+    test_sharded_solve_batch_bitwise_all_backends above)."""
+    r = _run(_PROBLEM_SETUP + """
+    from repro.core.regularizers import ElasticNetGroupReg, L2Reg
+    from repro.core.sharded import solve_batch_sharded
+
+    C, a, b = make_batch(4)
+    regs = {
+        "l2": L2Reg(gamma=0.4),
+        "elastic_net": ElasticNetGroupReg(
+            gamma=0.4, mu_weights=(0.0, 0.4, 0.8, 1.2, 1.6)
+        ),
+    }
+    for kind, reg_k in regs.items():
+        for gi in ("dense", "screened", "pallas"):
+            opts = slv.SolveOptions(
+                grad_impl=gi, lbfgs=LbfgsOptions(max_iters=150)
+            )
+            rs = solve_batch_sharded(C, a, b, spec, reg_k, opts)
+            rb = slv.solve_batch(C, a, b, spec, reg_k, opts)
+            assert bool(jnp.all(rs.alpha == rb.alpha)), (kind, gi)
+            assert bool(jnp.all(rs.beta == rb.beta)), (kind, gi)
+            assert bool(jnp.all(rs.values == rb.values)), (kind, gi)
+            assert bool(jnp.all(rs.rounds == rb.rounds)), (kind, gi)
+            assert bool(jnp.all(rs.stats == rb.stats)), (kind, gi)
+            assert bool(jnp.all(rs.converged)), (kind, gi)
+            print("MATCH", kind, gi)
+    """)
+    assert r.returncode == 0, r.stderr[-3000:]
+    for kind in ("l2", "elastic_net"):
+        for gi in ("dense", "screened", "pallas"):
+            assert f"MATCH {kind} {gi}" in r.stdout
+
+
 def test_sharded_ragged_batch_and_launch_count():
     """B=6 over 4 devices pads with dummies, un-pads, stays bitwise; the
     whole sharded solve is ONE program launch."""

@@ -23,6 +23,7 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parents[1]
 
 DEFAULT_FILES = [
+    "src/repro/core/regularizers.py",
     "src/repro/core/solver.py",
     "src/repro/core/sharded.py",
     "src/repro/kernels/ops.py",
