@@ -33,12 +33,10 @@ DEVICES = 4
 _CHILD = """
     import json
     import numpy as np, jax, jax.numpy as jnp
+    import repro.ot as rot
     from repro.core import groups as G
-    from repro.core import solver as slv
-    from repro.core.lbfgs import LbfgsOptions
     from repro.core.ot import squared_euclidean_cost
     from repro.core.regularizers import GroupSparseReg
-    from repro.core.sharded import solve_batch_sharded
 
     B, L, g, n = {B}, {L}, {g}, {n}
     impls = {impls}
@@ -48,43 +46,43 @@ _CHILD = """
     m = L * g
     labels = np.repeat(np.arange(L), g)
     spec = G.spec_from_labels(labels, pad_to=8)
-    Cs, As, Bs = [], [], []
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    problems = []
     for _ in range(B):
         Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
         Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
         C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
         C /= C.max()
-        Cs.append(G.pad_cost_matrix(C, labels, spec))
-        As.append(G.pad_marginal(np.full(m, 1/m, np.float32), labels, spec))
-        Bs.append(np.full(n, 1/n, np.float32))
-    C = jnp.asarray(np.stack(Cs))
-    a = jnp.asarray(np.stack(As))
-    b = jnp.asarray(np.stack(Bs))
-    reg = GroupSparseReg.from_rho(1.0, 0.6)
+        problems.append(rot.Problem.from_padded(
+            G.pad_cost_matrix(C, labels, spec),
+            G.pad_marginal(np.full(m, 1/m, np.float32), labels, spec),
+            np.full(n, 1/n, np.float32), spec, reg,
+        ))
 
     rows = []
     for gi in impls:
-        opts = slv.SolveOptions(
-            grad_impl=gi, lbfgs=LbfgsOptions(max_iters=150)
-        )
-        slv.reset_dispatch_count()
-        rs = solve_batch_sharded(C, a, b, spec, reg, opts)
-        launches = slv.dispatch_count()
-        rb = slv.solve_batch(C, a, b, spec, reg, opts)
-        mismatches = int(jnp.sum(
-            jnp.any(rs.lbfgs_state.x != rb.lbfgs_state.x, axis=-1)
-            | (rs.values != rb.values)
-            | (rs.rounds != rb.rounds)
+        exs = rot.compile(problems[0], rot.ExecutionPlan(
+            grad_impl=gi, max_iters=150, devices="all"
         ))
-        stats = np.asarray(rs.stats)
+        sols_s = exs.solve_many(problems)
+        launches = exs.stats()["launches"]
+        exb = rot.compile(problems[0], rot.ExecutionPlan(
+            grad_impl=gi, max_iters=150
+        ))
+        sols_b = exb.solve_many(problems)
+        mismatches = sum(
+            int(bool(jnp.any(s.result.lbfgs_state.x != u.result.lbfgs_state.x))
+                or s.value != u.value or s.rounds != u.rounds)
+            for s, u in zip(sols_s, sols_b)
+        )
         rows.append({{
             "grad_impl": gi,
             "counters": {{
-                "rounds_total": int(jnp.sum(rs.rounds)),
-                "rounds_max": int(jnp.max(rs.rounds)),
-                "zero": int(stats[:, 0].sum()),
-                "check": int(stats[:, 1].sum()),
-                "active": int(stats[:, 2].sum()),
+                "rounds_total": sum(s.rounds for s in sols_s),
+                "rounds_max": max(s.rounds for s in sols_s),
+                "zero": sum(s.stats["zero"] for s in sols_s),
+                "check": sum(s.stats["check"] for s in sols_s),
+                "active": sum(s.stats["active"] for s in sols_s),
                 "launches": launches,
                 "bitwise_mismatches": mismatches,
             }},

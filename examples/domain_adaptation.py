@@ -4,11 +4,13 @@ A narrated, runnable walkthrough of the whole stack on the paper's task
 (unsupervised domain adaptation): source samples are labeled, target
 samples are not, and the group-sparse transport plan moves class-coherent
 mass so each target point can be labeled by the class that sends it the
-most mass.  The walkthrough climbs the three execution tiers:
+most mass.  Everything runs through the ``repro.ot`` façade — one
+declarative Problem, one compiled Executor — climbing the three
+execution tiers:
 
-  1. SOLO     one problem, one program        (core.solver.solve_dual)
-  2. BATCHED  B problems, ONE program         (core.solver.solve_batch)
-  3. SHARDED  B problems over all devices     (core.sharded.solve_batch_sharded)
+  1. SOLO     one problem, one program        (Executor.solve)
+  2. BATCHED  B problems, ONE program         (Executor.solve_many)
+  3. SHARDED  B problems over all devices     (Executor.solve_many + mesh)
 
 and verifies at each step that the answer is *bitwise* the same — the
 batch axis and the device mesh are performance structure, never numerics.
@@ -36,13 +38,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import groups as G
-from repro.core import solver as slv
-from repro.core import sinkhorn_log, solve_groupsparse_ot, squared_euclidean_cost
-from repro.core.distributed import make_batch_mesh
-from repro.core.lbfgs import LbfgsOptions
+import repro.ot as ot
+from repro.core import sinkhorn_log, squared_euclidean_cost
 from repro.core.regularizers import GroupSparseReg
-from repro.core.sharded import solve_batch_sharded
 from repro.data.pipeline import DomainPairConfig, make_domain_pair
 
 
@@ -63,7 +61,6 @@ def main():
                     help="target domains for the batched/sharded stages")
     args = ap.parse_args()
     L = args.classes
-    rng = np.random.default_rng(0)
 
     # ----------------------------------------------------------------- setup
     # One labeled source domain and `--domains` unlabeled target domains
@@ -84,15 +81,18 @@ def main():
         )[2:])
     m, n = len(ys), len(targets[0][0])
 
-    # the padded group layout every layer shares (rows sorted by class,
-    # classes padded to a uniform size) + the solver configuration
-    spec = G.spec_from_labels(ys, pad_to=8)
+    # ONE declarative problem per target domain; the regularizer, group
+    # layout and execution policy live in the Problem / ExecutionPlan
     reg = GroupSparseReg.from_rho(1.0, 0.6)
-    opts = slv.SolveOptions(grad_impl="screened",
-                            lbfgs=LbfgsOptions(max_iters=150))
+    problems = [
+        ot.Problem.from_samples(Xs, ys, Xt, reg=reg, pad_to=8)
+        for Xt, _ in targets
+    ]
+    plan = ot.ExecutionPlan(grad_impl="screened", max_iters=150)
+    ex = ot.compile(problems[0], plan)
     print(f"source: {m} samples, {L} classes; "
           f"targets: {len(targets)} domains x {n} samples")
-    print(slv.describe(spec, n, reg, opts))
+    print(ex.describe())
 
     # ------------------------------------------------------------ 1. solo
     # One problem end to end, plus the entropic baseline for accuracy
@@ -102,8 +102,7 @@ def main():
     print("STAGE 1 — SOLO: one problem, one program")
     print("=" * 72)
     t0 = time.perf_counter()
-    sol = solve_groupsparse_ot(Xs, ys, Xt0, gamma=1.0, rho=0.6, opts=opts,
-                               pad_to=8)
+    sol = ex.solve(problems[0])
     t_solo = time.perf_counter() - t0
     acc_gs = float((predict_from_plan(sol.plan, ys, L) == yt0).mean())
 
@@ -117,68 +116,60 @@ def main():
     print(f"entropic OT:      accuracy {acc_sk:.1%}  (no group structure)")
 
     # ---------------------------------------------------------- 2. batched
-    # All target domains at once: every array gains a leading B axis and
-    # the whole batch advances in ONE jitted program (masked per-problem
-    # convergence — no recompiles, no Python loop over problems).
+    # All target domains at once: solve_many stacks every problem behind a
+    # leading B axis and the whole batch advances in ONE jitted program
+    # (masked per-problem convergence — no recompiles, no Python loop).
     print()
     print("=" * 72)
     print(f"STAGE 2 — BATCHED: {len(targets)} problems, ONE program")
     print("=" * 72)
-    Cs, As, Bs = [], [], []
-    for Xt, _ in targets:
-        C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
-        C /= C.max()
-        Cs.append(G.pad_cost_matrix(C, ys, spec))
-        As.append(G.pad_marginal(np.full(m, 1 / m, np.float32), ys, spec))
-        Bs.append(np.full(n, 1 / n, np.float32))
-    Cb = jnp.asarray(np.stack(Cs))
-    ab = jnp.asarray(np.stack(As))
-    bb = jnp.asarray(np.stack(Bs))
-
-    slv.reset_dispatch_count()
+    launches_before = ex.stats()["launches"]
     t0 = time.perf_counter()
-    rb = slv.solve_batch(Cb, ab, bb, spec, reg, opts)
+    sols = ex.solve_many(problems)
     t_batch = time.perf_counter() - t0
-    print(f"solved {len(rb)} problems in {t_batch:.2f}s (incl. jit) with "
-          f"{slv.dispatch_count()} program launch(es)")
-    print(f"per-problem rounds: {[int(r) for r in rb.rounds]}")
+    print(f"solved {len(sols)} problems in {t_batch:.2f}s (incl. jit) with "
+          f"{ex.stats()['launches'] - launches_before} program launch(es)")
+    print(f"per-problem rounds: {[s.rounds for s in sols]}")
     # the batch axis is invisible to numerics: problem 0 solved inside the
     # batch equals the solo solve of stage 1 bit for bit
-    assert float(rb.values[0]) == float(sol.value), "batched != solo ?!"
+    assert sols[0].value == sol.value, "batched != solo ?!"
     print("bitwise check: batched problem 0 == solo solve        OK")
 
     # ---------------------------------------------------------- 3. sharded
-    # Same batch, problem axis split over every local device with
-    # shard_map: each device runs the stage-2 solver on its slice (its own
-    # screening state, its own compact tile schedules), no collectives
-    # inside a round.  Still one program launch.
+    # Same batch, problem axis split over every local device: attach a
+    # mesh (ExecutionPlan(devices='all')) and solve_many dispatches to the
+    # shard_map program — each device runs the stage-2 solver on its slice
+    # (its own screening state, its own compact tile schedules), no
+    # collectives inside a round.  Still one program launch.
     print()
     print("=" * 72)
     print(f"STAGE 3 — SHARDED: {len(targets)} problems over "
           f"{jax.local_device_count()} devices")
     print("=" * 72)
-    mesh = make_batch_mesh()
-    slv.reset_dispatch_count()
+    exs = ot.compile(problems[0], ot.ExecutionPlan(
+        grad_impl="screened", max_iters=150, devices="all"
+    ))
+    mesh = exs.mesh
     t0 = time.perf_counter()
-    rs = solve_batch_sharded(Cb, ab, bb, spec, reg, opts, mesh=mesh)
+    sols_sh = exs.solve_many(problems)
     t_shard = time.perf_counter() - t0
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} -> "
           f"{mesh.size} x {len(targets) // mesh.size} problems/device, "
-          f"{slv.dispatch_count()} launch(es), {t_shard:.2f}s (incl. jit)")
+          f"{exs.stats()['launches']} launch(es), {t_shard:.2f}s (incl. jit)")
     # the mesh is invisible too: every problem bitwise-equals stage 2
-    same = bool(jnp.all(rs.lbfgs_state.x == rb.lbfgs_state.x))
+    same = all(
+        bool(jnp.all(a.result.lbfgs_state.x == b.result.lbfgs_state.x))
+        for a, b in zip(sols_sh, sols)
+    )
     assert same, "sharded != batched ?!"
     print("bitwise check: sharded == batched (all problems)      OK")
 
-    # label all target domains from the batched plans
-    Ts = slv.recover_plan_batch(rs, Cb, spec, reg)
-    row_perm = G.pad_sources(Xs, ys, spec)[1]
-    real = row_perm >= 0
-    accs = []
-    for i, (_, yt) in enumerate(targets):
-        T = np.zeros((m, n), np.float32)
-        T[row_perm[real]] = np.asarray(Ts[i])[real][:, :n]
-        accs.append(float((predict_from_plan(T, ys, L) == yt).mean()))
+    # label all target domains — Solution.plan is already un-padded back
+    # to the caller's row order, so prediction is a one-liner per domain
+    accs = [
+        float((predict_from_plan(s.plan, ys, L) == yt).mean())
+        for s, (_, yt) in zip(sols_sh, targets)
+    ]
     print(f"target-domain accuracies: "
           f"{', '.join(f'{a:.1%}' for a in accs)}")
     print()

@@ -1,29 +1,22 @@
-"""Quickstart: group-sparse regularized OT with safe screening.
+"""Quickstart: the ``repro.ot`` façade in five minutes.
 
-Solves the paper's synthetic transportation problem three ways —
-original dense method, screened JAX solver (Algorithm 1), and the faithful
-CPU fast path — and shows the Theorem-2 equality plus the structured
-(group-sparse) transportation plan.
+Declare a Problem, compile an Executor, and solve the paper's synthetic
+domain-adaptation task — solo, as a fused batch, and as a round-step
+stream — showing the Theorem-2 equality (dense == screened, bitwise) and
+the structured (group-sparse) transportation plan along the way.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+This example is executed in CI (smoke step), so the headline API shown
+here can never silently rot.
 """
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import numpy as np
-
-from repro.core import (
-    GroupSparseReg,
-    group_sparsity,
-    solve_groupsparse_ot,
-    spec_from_labels,
-    squared_euclidean_cost,
-)
-from repro.core import groups as G
-from repro.core.cpu_baseline import fast_solve, origin_solve
-from repro.core.solver import SolveOptions
+import repro.ot as ot
+from repro.core import GroupSparseReg
 from repro.data.pipeline import DomainPairConfig, make_domain_pair
 
 
@@ -32,40 +25,50 @@ def main():
     Xs, ys, Xt, _ = make_domain_pair(
         DomainPairConfig(num_classes=8, samples_per_class=10, seed=0)
     )
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
 
-    print("=== JAX screened solver (grad_impl='screened') ===")
-    sol = solve_groupsparse_ot(Xs, ys, Xt, gamma=1.0, rho=0.6)
+    print("=== 1. Declare a problem, solve it (screened backend) ===")
+    problem = ot.Problem.from_samples(Xs, ys, Xt, reg=reg)
+    sol = ot.solve(problem)
     print(f"dual objective        : {sol.value:.6f}")
     print(f"transport cost <T,C>  : {sol.distance:.6f}")
-    print(f"group sparsity        : {group_sparsity(sol, ys):.1%} of (class,target) blocks are exactly zero")
-    print(f"L-BFGS iterations     : {sol.result.iterations} "
-          f"(skipped blocks: {sol.result.stats['zero']})")
+    print(f"group sparsity        : {sol.group_sparsity:.1%} of (class,target) "
+          "blocks are exactly zero")
+    print(f"L-BFGS iterations     : {sol.iterations} "
+          f"(skipped blocks: {sol.stats['zero']})")
 
-    print("\n=== Theorem 2 check: dense == screened ===")
-    sol_dense = solve_groupsparse_ot(
-        Xs, ys, Xt, gamma=1.0, rho=0.6, opts=SolveOptions(grad_impl="dense")
-    )
+    print("\n=== 2. Theorem 2: the dense (unscreened) backend matches ===")
+    sol_dense = ot.solve(problem, ot.ExecutionPlan(grad_impl="dense"))
     print(f"dense objective       : {sol_dense.value:.6f}")
-    print(f"identical             : {abs(sol.value - sol_dense.value) < 1e-6}")
+    print(f"identical             : {sol.value == sol_dense.value}")
 
-    print("\n=== CPU wall-clock: origin vs Algorithm 1 (|L|=40, m=n=400) ===")
-    # screening pays off with scale (paper Fig. 2): use a bigger instance
-    Xs, ys, Xt, _ = make_domain_pair(
-        DomainPairConfig(num_classes=40, samples_per_class=10, seed=0)
-    )
-    C = squared_euclidean_cost(Xs, Xt)
-    C /= C.max()
-    spec = spec_from_labels(ys, pad_to=8)
-    m = n = len(ys)
-    C_pad = G.pad_cost_matrix(C, ys, spec)
-    a = G.pad_marginal(np.full(m, 1 / m), ys, spec)
-    b = np.full(n, 1 / n)
-    reg = GroupSparseReg.from_rho(1.0, 0.6)
-    r0 = origin_solve(C_pad, a, b, spec, reg)
-    r1 = fast_solve(C_pad, a, b, spec, reg)
-    print(f"origin: {r0.wall_time:.3f}s   fast: {r1.wall_time:.3f}s   "
-          f"gain: {r0.wall_time / r1.wall_time:.2f}x   "
-          f"values match: {abs(r0.value - r1.value) < 1e-9}")
+    print("\n=== 3. A reusable executor: B problems, ONE fused program ===")
+    problems = [problem] + [
+        ot.Problem.from_samples(
+            Xs, ys,
+            make_domain_pair(
+                DomainPairConfig(num_classes=8, samples_per_class=10, seed=s)
+            )[2],
+            reg=reg,
+        )
+        for s in range(1, 4)
+    ]
+    ex = ot.compile(problem)
+    sols = ex.solve_many(problems)
+    assert sols[0].value == sol.value, "batched != solo ?!"
+    print(f"solved {len(sols)} problems in {ex.stats()['launches']} launch(es); "
+          "problem 0 == solo solve, bitwise")
+    print(f"objectives            : {[round(s.value, 6) for s in sols]}")
+
+    print("\n=== 4. Round-step streaming (the serving engine's tick) ===")
+    stream = ot.compile(problem).stream(problems)
+    for info in stream:
+        print(f"round {info['round']:2d}: {info['alive']} problem(s) still solving")
+    assert [s.value for s in stream.solutions()] == [s.value for s in sols]
+    print("stream result == fused batch, bitwise")
+
+    print("\n=== 5. Diagnostics ===")
+    print(ex.describe(sols[0]))
 
 
 if __name__ == "__main__":

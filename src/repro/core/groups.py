@@ -108,6 +108,20 @@ def pad_sources(X: np.ndarray, labels: np.ndarray, spec: GroupSpec):
     return X_pad, perm, mask.reshape(-1)
 
 
+def padded_perm(labels: np.ndarray, spec: GroupSpec) -> np.ndarray:
+    """Padded-row -> original-row map (-1 = padding), from labels alone.
+
+    Identical to the ``perm`` returned by :func:`pad_sources` (the map is a
+    pure function of the labels and the layout — sample values never enter
+    it); split out so callers that only need the permutation don't build a
+    padded copy of their data.
+    """
+    order = np.argsort(np.asarray(labels), kind="stable")
+    perm = np.full((spec.m_pad,), -1, dtype=np.int64)
+    perm[spec.row_mask().reshape(-1)] = order
+    return perm
+
+
 def pad_cost_matrix(C: np.ndarray, labels: np.ndarray, spec: GroupSpec) -> np.ndarray:
     """Sort + pad the (m, n) cost matrix rows; padded rows get PAD_COST."""
     order = np.argsort(np.asarray(labels), kind="stable")

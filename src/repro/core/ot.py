@@ -1,5 +1,12 @@
 """High-level API: group-sparse regularized OT from raw samples.
 
+.. deprecated::
+    :func:`solve_groupsparse_ot` is a thin shim over the :mod:`repro.ot`
+    façade — build a :class:`repro.ot.Problem` (``Problem.from_samples``)
+    and solve it through :func:`repro.ot.compile` / :func:`repro.ot.solve`
+    instead.  The shim stays bitwise-identical to the pre-façade
+    implementation and will keep working for one release cycle.
+
 Mirrors the paper's experimental pipeline:
 
   X_S (m, d) labeled source samples, y_S (m,) class labels in {0..L-1},
@@ -14,14 +21,14 @@ distance in the ORIGINAL row order.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import groups as G
 from repro.core.regularizers import GroupSparseReg, Regularizer
-from repro.core.solver import OTResult, SolveOptions, recover_plan, solve_dual
+from repro.core.solver import OTResult, SolveOptions
 
 
 @dataclasses.dataclass
@@ -65,7 +72,16 @@ def solve_groupsparse_ot(
     — pure-l2 or elastic-net group weights ride the same pipeline).
     ``gamma`` (default 1.0) only applies with rho/mu; a full ``reg``
     carries its own gamma, so combining the two is rejected rather than
-    silently ignoring one."""
+    silently ignoring one.
+
+    .. deprecated:: use :mod:`repro.ot` (``Problem.from_samples`` +
+       ``compile``/``solve``) — this shim delegates there and emits a
+       ``DeprecationWarning``."""
+    warnings.warn(
+        "solve_groupsparse_ot() is deprecated; use repro.ot "
+        "(Problem.from_samples + compile/solve) instead",
+        DeprecationWarning, stacklevel=2,
+    )
     if sum(p is not None for p in (rho, mu, reg)) != 1:
         raise ValueError("provide exactly one of rho / mu / reg")
     if reg is not None:
@@ -79,35 +95,20 @@ def solve_groupsparse_ot(
             else GroupSparseReg(gamma=gamma, mu=mu)
         )
 
-    m, n = X_S.shape[0], X_T.shape[0]
-    C = squared_euclidean_cost(X_S, X_T).astype(np.float32)
-    if normalize_cost:
-        C = C / max(C.max(), 1e-12)
+    from repro import ot as facade
 
-    spec = G.spec_from_labels(y_S, pad_to=pad_to)
-    C_pad = G.pad_cost_matrix(C, y_S, spec)
-    a = G.pad_marginal(np.full((m,), 1.0 / m, np.float32), y_S, spec)
-    b = np.full((n,), 1.0 / n, np.float32)
-
-    _, perm, _ = G.pad_sources(X_S, y_S, spec)
-
-    result = solve_dual(
-        jnp.asarray(C_pad), jnp.asarray(a), jnp.asarray(b), spec, reg, opts
+    problem = facade.Problem.from_samples(
+        X_S, y_S, X_T, reg=reg, normalize_cost=normalize_cost, pad_to=pad_to
     )
-    T_pad = np.asarray(recover_plan(result, jnp.asarray(C_pad), spec, reg))
-
-    # un-pad, un-sort rows back to the caller's order
-    T = np.zeros((m, n), np.float32)
-    real = perm >= 0
-    T[perm[real]] = T_pad[real]
-    distance = float(np.sum(T * C))
+    plan = facade.ExecutionPlan.from_solve_options(opts)
+    sol = facade.compile(problem, plan).solve()
     return GroupSparseOTSolution(
-        plan=T,
-        value=float(result.value),
-        distance=distance,
-        result=result,
-        spec=spec,
-        perm=perm,
+        plan=sol.plan,
+        value=sol.value,
+        distance=sol.distance,
+        result=sol.result,
+        spec=sol.spec,
+        perm=sol.perm,
     )
 
 

@@ -354,35 +354,30 @@ def solve_batch_sharded(
     repro.core.solver.BatchOTResult
         Result container whose leaves remain device-sharded; indexing
         (``result[i]``) and the host conversions gather transparently.
+
+    .. deprecated:: use :meth:`repro.ot.Executor.solve_many` with a mesh
+       (``ExecutionPlan(devices='all')`` or ``compile(..., mesh=mesh)``)
+       — this shim delegates there and emits a ``DeprecationWarning``.
     """
+    import warnings
+
+    warnings.warn(
+        "solve_batch_sharded() is deprecated; use repro.ot "
+        "(compile(..., ExecutionPlan(devices='all')).solve_many) instead",
+        DeprecationWarning, stacklevel=2,
+    )
     assert C.ndim == 3, f"expected (B, m_pad, n) costs, got {C.shape}"
     if mesh is None:
         mesh = make_batch_mesh()
-    B = C.shape[0]
-    prob = DualProblem(
-        num_groups=spec.num_groups,
-        group_size=spec.group_size,
-        n=int(C.shape[2]),
-        reg=reg,
+    from repro.ot.executor import Executor
+    from repro.ot.plan import ExecutionPlan
+
+    ex = Executor(
+        spec, int(C.shape[2]), reg, ExecutionPlan.from_solve_options(opts),
+        mesh=mesh,
     )
-    # per-problem forms (broadcast is exact, so bitwise parity holds)
-    row_mask = jnp.broadcast_to(
-        jnp.asarray(spec.row_mask().reshape(-1)), (B, prob.m_pad)
-    )
-    sqrt_g = jnp.broadcast_to(
-        jnp.asarray(spec.sqrt_sizes(), C.dtype), (B, prob.num_groups)
-    )
-    C, a, b, row_mask, sqrt_g, B = pad_batch_to_devices(
-        jnp.asarray(C), jnp.asarray(a), jnp.asarray(b), row_mask, sqrt_g,
-        mesh.size,
-    )
-    args = device_put_batch((C, a, b, row_mask, sqrt_g), mesh)
-    solve, _, _ = _sharded_programs(mesh, prob, opts)
-    lb, scr, rounds, stats = slv._launch(solve, *args)
-    if B != C.shape[0]:            # drop the dummy padding problems
-        cut = lambda t: jax.tree_util.tree_map(lambda v: v[:B], t)
-        lb, scr, rounds, stats = cut(lb), cut(scr), rounds[:B], stats[:B]
-    alpha, beta = slv._split(lb.x, prob.m_pad)
+    lb, scr, rounds, stats = ex._solve_padded_batch_sharded(C, a, b)
+    alpha, beta = slv._split(lb.x, ex._prob.m_pad)
     return slv.BatchOTResult(alpha, beta, -lb.f, lb, scr, rounds, stats)
 
 

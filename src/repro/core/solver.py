@@ -520,6 +520,36 @@ def batch_round(state, C, a, b, row_mask, sqrt_g, prob, opts, padded=None):
     return _round_body(state, C, a, b, row_mask, sqrt_g, prob, opts, padded)
 
 
+def _solve_solo(C, a, b, spec, reg, opts, launch) -> OTResult:
+    """Shared solo-solve body: operand construction, launch, packing.
+
+    ``launch`` is the launcher wrapper — the module-level :func:`_launch`
+    for :func:`solve_dual`, or an ``Executor._launch`` bound method so the
+    façade counts the program against its own stats.  Keeping ONE copy of
+    this op sequence is what makes ``Executor.solve`` bitwise-identical
+    to ``solve_dual`` by construction.
+    """
+    prob = DualProblem(
+        num_groups=spec.num_groups,
+        group_size=spec.group_size,
+        n=int(C.shape[1]),
+        reg=reg,
+    )
+    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
+    sqrt_g = jnp.asarray(spec.sqrt_sizes(), C.dtype)
+
+    lb, scr, rounds, stats = launch(
+        _solve_jit, C, a, b, row_mask, sqrt_g, prob, opts
+    )
+    alpha, beta = _split(lb.x, prob.m_pad)
+    stats_dict = {
+        "zero": int(stats[0]),
+        "check": int(stats[1]),
+        "active": int(stats[2]),
+    }
+    return OTResult(alpha, beta, -lb.f, lb, scr, int(rounds), stats_dict)
+
+
 def solve_dual(
     C: jnp.ndarray,
     a: jnp.ndarray,
@@ -555,25 +585,7 @@ def solve_dual(
     OTResult
         Optimal duals, objective, final solver/screening state, stats.
     """
-    prob = DualProblem(
-        num_groups=spec.num_groups,
-        group_size=spec.group_size,
-        n=int(C.shape[1]),
-        reg=reg,
-    )
-    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
-    sqrt_g = jnp.asarray(spec.sqrt_sizes(), C.dtype)
-
-    lb, scr, rounds, stats = _launch(
-        _solve_jit, C, a, b, row_mask, sqrt_g, prob, opts
-    )
-    alpha, beta = _split(lb.x, prob.m_pad)
-    stats_dict = {
-        "zero": int(stats[0]),
-        "check": int(stats[1]),
-        "active": int(stats[2]),
-    }
-    return OTResult(alpha, beta, -lb.f, lb, scr, int(rounds), stats_dict)
+    return _solve_solo(C, a, b, spec, reg, opts, _launch)
 
 
 def solve_batch(
@@ -613,21 +625,24 @@ def solve_batch(
     -------
     BatchOTResult
         Batched result; ``result[i]`` views problem i as an OTResult.
-    """
-    assert C.ndim == 3, f"solve_batch expects (B, m_pad, n) costs, got {C.shape}"
-    prob = DualProblem(
-        num_groups=spec.num_groups,
-        group_size=spec.group_size,
-        n=int(C.shape[2]),
-        reg=reg,
-    )
-    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
-    sqrt_g = jnp.asarray(spec.sqrt_sizes(), C.dtype)
 
-    lb, scr, rounds, stats = _launch(
-        _solve_batch_jit, C, a, b, row_mask, sqrt_g, prob, opts
+    .. deprecated:: use :meth:`repro.ot.Executor.solve_many` — this shim
+       delegates there and emits a ``DeprecationWarning``.
+    """
+    import warnings
+
+    warnings.warn(
+        "solve_batch() is deprecated; use repro.ot "
+        "(compile(...).solve_many) instead",
+        DeprecationWarning, stacklevel=2,
     )
-    alpha, beta = _split(lb.x, prob.m_pad)
+    assert C.ndim == 3, f"solve_batch expects (B, m_pad, n) costs, got {C.shape}"
+    from repro.ot.executor import Executor
+    from repro.ot.plan import ExecutionPlan
+
+    ex = Executor(spec, int(C.shape[2]), reg, ExecutionPlan.from_solve_options(opts))
+    lb, scr, rounds, stats = ex._solve_padded_batch(C, a, b)
+    alpha, beta = _split(lb.x, ex._prob.m_pad)
     return BatchOTResult(alpha, beta, -lb.f, lb, scr, rounds, stats)
 
 

@@ -1,0 +1,39 @@
+"""``repro.ot`` — THE public surface: declarative Problem -> compiled Executor.
+
+One way in, whatever the scale::
+
+    import repro.ot as ot
+
+    problem = ot.Problem.from_samples(Xs, ys, Xt, reg=GroupSparseReg.from_rho(1.0, 0.6))
+    ex = ot.compile(problem, ot.ExecutionPlan(grad_impl="screened"))
+
+    sol  = ex.solve()                 # solo: one problem, one program
+    sols = ex.solve_many(problems)    # batched: B problems, ONE program
+    for info in ex.stream(problems):  # round-step: one fused round per tick
+        print(info["alive"], "still solving")
+
+Attach a device mesh (``ExecutionPlan(devices='all')`` or
+``compile(..., mesh=...)``) and ``solve_many`` / ``stream`` run the same
+batch under ``shard_map`` with the problem axis split across devices.
+Every route returns the unified :class:`~repro.ot.solution.Solution` and
+is bitwise-identical to the legacy entry points it replaced
+(``core.ot.solve_groupsparse_ot``, ``solver.solve_batch``,
+``sharded.solve_batch_sharded`` — all now deprecated shims over this
+package).
+
+``tools/check_api_surface.py`` gates ``__all__`` against docs/api.md.
+"""
+from repro.ot.executor import Executor, Stream, compile, solve
+from repro.ot.plan import ExecutionPlan
+from repro.ot.problem import Problem
+from repro.ot.solution import Solution
+
+__all__ = [
+    "Problem",
+    "ExecutionPlan",
+    "Executor",
+    "Stream",
+    "Solution",
+    "compile",
+    "solve",
+]

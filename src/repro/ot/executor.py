@@ -1,0 +1,548 @@
+"""Compile a (Problem template, ExecutionPlan) into a reusable Executor.
+
+The façade's execution layer: :func:`compile` fixes the static geometry —
+group layout, column width, regularizer, solver options — and returns an
+:class:`Executor` whose methods route to the SAME jitted programs the
+legacy entry points used:
+
+  * :meth:`Executor.solve`       -> the solo program (``solver._solve_jit``),
+  * :meth:`Executor.solve_many`  -> the batched program
+    (``solver._solve_batch_jit``), or the ``shard_map`` program of
+    :mod:`repro.core.sharded` when a device mesh is attached,
+  * :meth:`Executor.stream`      -> the round-step API
+    (``init_batch_state`` / ``batch_round``), one fused round per step.
+
+Because the static jit arguments and operands are constructed with exactly
+the legacy op sequence, a solve routed through the façade is *bitwise*
+identical to the corresponding legacy entry point — same objectives, same
+plans, same round counts (asserted per regularizer kind and per
+``grad_impl`` backend by tests/test_facade.py).
+
+Executors own their diagnostics: :meth:`Executor.stats` counts program
+launches and solves per executor instance (concurrent executors never
+share mutable counter state), and :meth:`Executor.describe` renders the
+geometry/backend diagnostic block.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groups as G
+from repro.core import solver as slv
+from repro.core.dual import DualProblem
+from repro.core.regularizers import Regularizer
+from repro.ot.plan import ExecutionPlan
+from repro.ot.problem import Problem
+from repro.ot.solution import Solution, build_solution
+
+
+class _Prepared(NamedTuple):
+    """One problem lowered to the executor's template geometry."""
+
+    C: np.ndarray          # (m_pad, n_tpl) float32, columns padded if needed
+    a: np.ndarray          # (m_pad,)
+    b: np.ndarray          # (n_tpl,)
+    spec: G.GroupSpec      # the problem's own layout (sizes may differ)
+    perm: np.ndarray       # (m_pad,) padded-row -> original-row
+    n: int                 # the problem's true column count
+
+
+def compile(
+    problem: Problem,
+    plan: Optional[ExecutionPlan] = None,
+    mesh=None,
+) -> "Executor":
+    """Compile a problem template + plan into a reusable :class:`Executor`.
+
+    Parameters
+    ----------
+    problem : Problem
+        The template: its group layout ``(L, g_pad)``, column count ``n``
+        and regularizer become the static geometry every solve through
+        this executor must match (columns may be narrower — they are
+        padded up to the template width).
+    plan : ExecutionPlan, optional
+        Execution policy; defaults to ``ExecutionPlan()``.
+    mesh : jax.sharding.Mesh, optional
+        Explicit 1-D batch mesh for sharded execution.  When omitted, the
+        plan's ``devices`` policy decides: ``'single'`` stays unsharded,
+        ``'all'`` / an int builds a default mesh via
+        :func:`repro.core.distributed.make_batch_mesh`.
+
+    Returns
+    -------
+    Executor
+        Ready to ``solve`` / ``solve_many`` / ``stream`` any compatible
+        problem; jit compilation itself happens lazily on first use and is
+        shared process-wide through the jax program cache.
+    """
+    plan = plan if plan is not None else ExecutionPlan()
+    if mesh is None and plan.devices != "single":
+        from repro.core.distributed import make_batch_mesh
+
+        mesh = make_batch_mesh(None if plan.devices == "all" else int(plan.devices))
+    return Executor(
+        problem.group_spec(), problem.num_target, problem.reg, plan,
+        mesh=mesh, template=problem,
+    )
+
+
+def solve(problem: Problem, plan: Optional[ExecutionPlan] = None, mesh=None) -> Solution:
+    """One-shot convenience: ``compile(problem, plan, mesh).solve()``.
+
+    The heavyweight work (jitted programs) is cached process-wide by jax,
+    so repeated one-shot solves of same-geometry problems do not
+    recompile; hold an :class:`Executor` only when you want its stats or
+    the round-step stream.
+    """
+    return compile(problem, plan, mesh).solve(problem)
+
+
+class Executor:
+    """A compiled, reusable solver for one problem geometry.
+
+    Built by :func:`compile`; see the module docstring for the routing
+    map.  All methods accept any :class:`~repro.ot.problem.Problem` whose
+    ``(L, g_pad)`` layout and regularizer match the template (narrower
+    column counts are padded up to the template width with zero-mass
+    ``PAD_COST`` columns, which is exact — padded columns carry an
+    identically-zero plan column and dual gradient).
+    """
+
+    def __init__(self, spec: G.GroupSpec, n: int, reg: Regularizer,
+                 plan: ExecutionPlan, mesh=None, template: Optional[Problem] = None):
+        self._spec = spec
+        self._n = int(n)
+        self._reg = reg
+        self._plan = plan
+        self._mesh = mesh
+        self._template = template
+        self._prob = DualProblem(
+            num_groups=spec.num_groups, group_size=spec.group_size,
+            n=self._n, reg=reg,
+        )
+        self._opts = plan.solve_options()
+        self._counters = {
+            "launches": 0, "solves": 0, "problems_solved": 0, "rounds_total": 0,
+        }
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def plan(self) -> ExecutionPlan:
+        """The execution plan this executor was compiled with."""
+        return self._plan
+
+    @property
+    def spec(self) -> G.GroupSpec:
+        """The template group layout ``(L, g_pad)``."""
+        return self._spec
+
+    @property
+    def num_target(self) -> int:
+        """The compiled column width ``n``."""
+        return self._n
+
+    @property
+    def reg(self) -> Regularizer:
+        """The regularizer the programs specialize on."""
+        return self._reg
+
+    @property
+    def mesh(self):
+        """The attached device mesh (None = unsharded)."""
+        return self._mesh
+
+    def stats(self) -> dict:
+        """Per-executor counters (no module-global state is involved).
+
+        Returns
+        -------
+        dict
+            ``launches`` — host->device program launches issued by this
+            executor; ``solves`` — ``solve``/``solve_many``/``stream``
+            completions; ``problems_solved`` — problems across them;
+            ``rounds_total`` — Algorithm-1 rounds summed over problems.
+            Concurrent executors never share this state (the legacy
+            module-level ``solver.dispatch_count`` keeps aggregating
+            process-wide for back-compat).
+        """
+        return dict(self._counters)
+
+    def describe(self, result=None) -> str:
+        """Geometry/backend diagnostic block (see ``solver.describe``).
+
+        Parameters
+        ----------
+        result : Solution, OTResult or BatchOTResult, optional
+            When given, appends convergence + screening-verdict totals.
+        """
+        if isinstance(result, Solution):
+            result = result.result
+        return slv.describe(self._spec, self._n, self._reg, self._opts, result)
+
+    # -- launch bookkeeping ---------------------------------------------------
+    def _launch(self, fn, *args):
+        """Run one jitted program, counting it here AND process-wide."""
+        self._counters["launches"] += 1
+        slv._DISPATCHES["count"] += 1
+        return fn(*args)
+
+    def _record(self, rounds) -> None:
+        self._counters["solves"] += 1
+        n = int(np.size(rounds))
+        self._counters["problems_solved"] += n
+        self._counters["rounds_total"] += int(np.sum(np.asarray(rounds)))
+
+    # -- problem lowering -----------------------------------------------------
+    def _prepare(self, problem: Problem) -> _Prepared:
+        """Validate compatibility and lower to the template geometry."""
+        if problem.reg != self._reg:
+            raise ValueError(
+                f"problem regularizer {problem.reg!r} does not match the "
+                f"executor's {self._reg!r} (programs specialize on it)"
+            )
+        pa = problem.padded()
+        L, g = pa.spec.num_groups, pa.spec.group_size
+        if (L, g) != (self._spec.num_groups, self._spec.group_size):
+            raise ValueError(
+                f"problem layout (L={L}, g_pad={g}) does not match the "
+                f"executor template (L={self._spec.num_groups}, "
+                f"g_pad={self._spec.group_size})"
+            )
+        n = int(pa.C.shape[1])
+        if n > self._n:
+            raise ValueError(
+                f"problem has {n} target columns but the executor compiled "
+                f"for {self._n}; re-compile with the wider template"
+            )
+        C, b = pa.C, pa.b
+        if n < self._n:                      # auto-pad columns up to template
+            Cf = np.full((C.shape[0], self._n), G.PAD_COST, np.float32)
+            Cf[:, :n] = C
+            bf = np.zeros((self._n,), np.float32)
+            bf[:n] = b
+            C, b = Cf, bf
+        return _Prepared(C, pa.a, b, pa.spec, pa.perm, n)
+
+    def _stack(self, problems: Sequence[Problem]):
+        """Lower + stack a batch; the host cost stack is returned too (it
+        is the largest allocation of a solve — build it exactly once)."""
+        preps = [self._prepare(p) for p in problems]
+        C_host = np.stack([p.C for p in preps])
+        C = jnp.asarray(C_host)
+        a = jnp.asarray(np.stack([p.a for p in preps]))
+        b = jnp.asarray(np.stack([p.b for p in preps]))
+        shared = all(p.spec == self._spec for p in preps)
+        if shared:
+            row_mask = jnp.asarray(self._spec.row_mask().reshape(-1))
+            sqrt_g = jnp.asarray(self._spec.sqrt_sizes(), C.dtype)
+        else:
+            row_mask = jnp.asarray(
+                np.stack([p.spec.row_mask().reshape(-1) for p in preps])
+            )
+            sqrt_g = jnp.asarray(
+                np.stack([p.spec.sqrt_sizes() for p in preps]).astype(np.float32)
+            )
+        return preps, C_host, C, a, b, row_mask, sqrt_g
+
+    # -- raw padded-batch launches (shims + solve_many share these) ------------
+    def _solve_padded_batch(self, C, a, b, row_mask=None, sqrt_g=None):
+        """One fused batched solve; legacy ``(lb, scr, rounds, stats)`` tuple.
+
+        ``row_mask`` / ``sqrt_g`` default to the template's shared forms —
+        exactly the operands the legacy ``solve_batch`` passed, so the
+        jitted program (and its cache entry) is the same.
+        """
+        if row_mask is None:
+            row_mask = jnp.asarray(self._spec.row_mask().reshape(-1))
+        if sqrt_g is None:
+            sqrt_g = jnp.asarray(self._spec.sqrt_sizes(), C.dtype)
+        return self._launch(
+            slv._solve_batch_jit, C, a, b, row_mask, sqrt_g, self._prob, self._opts
+        )
+
+    def _solve_padded_batch_sharded(self, C, a, b, row_mask=None, sqrt_g=None):
+        """One sharded batched solve (mesh required); legacy output tuple.
+
+        Replicates ``core.sharded.solve_batch_sharded`` step for step:
+        per-problem broadcast, ragged-batch padding with zero-gradient
+        dummies, mesh placement, ONE program launch, un-pad.
+        """
+        from repro.core import sharded as shd
+
+        assert self._mesh is not None, "sharded launch without a mesh"
+        assert (row_mask is None) == (sqrt_g is None), \
+            "pass row_mask and sqrt_g together or not at all"
+        B = C.shape[0]
+        if row_mask is None:
+            row_mask = jnp.asarray(self._spec.row_mask().reshape(-1))
+            sqrt_g = jnp.asarray(self._spec.sqrt_sizes(), C.dtype)
+        if row_mask.ndim == 1:
+            # shared forms cannot shard over the problem axis; the exact
+            # broadcast preserves bitwise parity (see core.sharded)
+            row_mask = jnp.broadcast_to(row_mask, (B, self._prob.m_pad))
+            sqrt_g = jnp.broadcast_to(sqrt_g, (B, self._prob.num_groups))
+        C, a, b, row_mask, sqrt_g, B = shd.pad_batch_to_devices(
+            jnp.asarray(C), jnp.asarray(a), jnp.asarray(b), row_mask, sqrt_g,
+            self._mesh.size,
+        )
+        args = shd.device_put_batch((C, a, b, row_mask, sqrt_g), self._mesh)
+        solve_fn, _, _ = shd._sharded_programs(self._mesh, self._prob, self._opts)
+        lb, scr, rounds, stats = self._launch(solve_fn, *args)
+        if B != C.shape[0]:              # drop the dummy padding problems
+            cut = lambda t: jax.tree_util.tree_map(lambda v: v[:B], t)
+            lb, scr, rounds, stats = cut(lb), cut(scr), rounds[:B], stats[:B]
+        return lb, scr, rounds, stats
+
+    def _as_batch_result(self, lb, scr, rounds, stats) -> slv.BatchOTResult:
+        """Wrap raw batched state into the legacy result container."""
+        alpha, beta = slv._split(lb.x, self._prob.m_pad)
+        return slv.BatchOTResult(alpha, beta, -lb.f, lb, scr, rounds, stats)
+
+    def _wrap_batch(self, preps, C_host, batch: slv.BatchOTResult) -> List[Solution]:
+        """Slice a batched result into per-problem :class:`Solution`\\ s.
+
+        Plan recovery runs ONCE for the whole batch (one ``plan_from_duals``
+        launch over the leading axis) instead of one small program + gather
+        per problem — the dual ops are batch-polymorphic, so the per-problem
+        slices are bitwise those of a solo recovery.
+        """
+        from repro.core.dual import plan_from_duals
+
+        T_all = np.asarray(plan_from_duals(
+            batch.alpha, batch.beta, jnp.asarray(C_host), self._prob
+        ))
+        return [
+            build_solution(batch[i], self._reg, C_host[i], p.spec, p.perm, p.n,
+                           T_pad=T_all[i])
+            for i, p in enumerate(preps)
+        ]
+
+    # -- public execution -----------------------------------------------------
+    def solve(self, problem: Optional[Problem] = None) -> Solution:
+        """Solve ONE problem with the solo program (B = 1 slice).
+
+        Parameters
+        ----------
+        problem : Problem, optional
+            Defaults to the template problem the executor was compiled
+            from.
+
+        Returns
+        -------
+        Solution
+            Bitwise-identical to the legacy ``solver.solve_dual`` on the
+            same padded operands (same jitted program, same inputs).
+        """
+        problem = problem if problem is not None else self._template
+        if problem is None:
+            raise ValueError("no problem given and the executor has no template")
+        p = self._prepare(problem)
+        result = slv._solve_solo(
+            jnp.asarray(p.C), jnp.asarray(p.a), jnp.asarray(p.b),
+            p.spec, self._reg, self._opts, self._launch,
+        )
+        self._record(result.rounds)
+        return build_solution(result, self._reg, p.C, p.spec, p.perm, p.n)
+
+    def solve_many(self, problems: Sequence[Problem]) -> List[Solution]:
+        """Solve a list of problems, dispatching solo -> batched -> sharded.
+
+        The plan's ``batching`` policy picks the route: ``'solo'`` loops
+        the solo program; ``'batched'`` (or ``'auto'`` with more than one
+        problem) fuses everything into ONE launch; with a mesh attached
+        the fused launch is the ``shard_map`` program with the problem
+        axis split over devices.  Mixed true group sizes and narrower
+        column counts are auto-padded to the template geometry.
+
+        Returns
+        -------
+        list of Solution
+            One per problem, in input order; each bitwise-identical to
+            the same problem solved through the legacy ``solve_batch`` /
+            ``solve_batch_sharded`` (or solo) paths.
+        """
+        problems = list(problems)
+        if not problems:
+            return []
+        solo = self._plan.batching == "solo" or (
+            self._plan.batching == "auto" and len(problems) == 1
+            and self._mesh is None
+        )
+        if solo:
+            return [self.solve(p) for p in problems]
+        preps, C_host, C, a, b, row_mask, sqrt_g = self._stack(problems)
+        if self._mesh is not None:
+            lb, scr, rounds, stats = self._solve_padded_batch_sharded(
+                C, a, b,
+                None if row_mask.ndim == 1 else row_mask,
+                None if row_mask.ndim == 1 else sqrt_g,
+            )
+        else:
+            lb, scr, rounds, stats = self._solve_padded_batch(
+                C, a, b, row_mask, sqrt_g
+            )
+        self._record(rounds)
+        return self._wrap_batch(
+            preps, C_host, self._as_batch_result(lb, scr, rounds, stats)
+        )
+
+    def stream(self, problems: Union[Problem, Sequence[Problem]]) -> "Stream":
+        """Open a round-step :class:`Stream` over one or more problems.
+
+        Each iteration runs ONE fused Algorithm-1 round (one program
+        launch — the serving engine's tick granularity) and yields a
+        diagnostics dict; :meth:`Stream.solutions` assembles the final
+        :class:`Solution` list.  The round sequence is bitwise-identical
+        to :meth:`solve_many` on the same problems.
+        """
+        if isinstance(problems, Problem):
+            problems = [problems]
+        return Stream(self, list(problems))
+
+
+class Stream:
+    """Round-step iteration over a batch of problems (one launch per round).
+
+    Created by :meth:`Executor.stream`.  Iterating advances every
+    unconverged problem by one fused round and yields a diagnostics dict
+    (``round``, ``alive``, per-problem ``converged`` / ``failed`` /
+    ``rounds``, cumulative verdict ``stats``); iteration stops when every
+    problem is finished or the plan's ``max_rounds`` cap is hit —
+    exactly the loop condition of the fused batched solve, so the final
+    state is bitwise-identical to :meth:`Executor.solve_many`.
+    """
+
+    def __init__(self, executor: Executor, problems: Sequence[Problem]):
+        self._ex = executor
+        self._round = 0
+        self._recorded = False
+        if not problems:               # empty batch: a stream that is born done
+            self._preps, self._C_host, self._B = [], None, 0
+            self._state = None
+            return
+        preps, C_host, C, a, b, row_mask, sqrt_g = executor._stack(problems)
+        self._preps = preps
+        self._C_host = C_host
+        self._B = len(preps)
+        prob, opts, mesh = executor._prob, executor._opts, executor._mesh
+        if mesh is not None:
+            from repro.core import sharded as shd
+
+            B = C.shape[0]
+            if row_mask.ndim == 1:
+                row_mask = jnp.broadcast_to(row_mask, (B, prob.m_pad))
+                sqrt_g = jnp.broadcast_to(sqrt_g, (B, prob.num_groups))
+            C, a, b, row_mask, sqrt_g, _ = shd.pad_batch_to_devices(
+                C, a, b, row_mask, sqrt_g, mesh.size
+            )
+            C, a, b, row_mask, sqrt_g = shd.device_put_batch(
+                (C, a, b, row_mask, sqrt_g), mesh
+            )
+            self._padded = (
+                shd.prepare_padded_sharded(C, prob, mesh)
+                if opts.grad_impl == "pallas" else None
+            )
+            self._state = executor._launch(
+                shd.init_batch_state_sharded, C, a, b, row_mask, sqrt_g,
+                prob, opts, mesh, self._padded,
+            )
+        else:
+            self._padded = slv._prepare_padded(C, prob, opts)
+            self._state = executor._launch(
+                slv.init_batch_state, C, a, b, row_mask, sqrt_g,
+                prob, opts, self._padded,
+            )
+        self._args = (C, a, b, row_mask, sqrt_g)
+
+    # -- iteration ------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        """True when every problem finished or the round cap was hit."""
+        if self._B == 0 or self._round >= self._ex._opts.max_rounds:
+            return True
+        lb = self._state.lb
+        alive = ~np.asarray(lb.converged)[: self._B] & ~np.asarray(lb.failed)[: self._B]
+        return not bool(alive.any())
+
+    def __iter__(self) -> "Stream":
+        """Iterator protocol: the stream iterates itself."""
+        return self
+
+    def __next__(self) -> dict:
+        """Run ONE fused round; return its diagnostics (or StopIteration)."""
+        if self.done:
+            self._maybe_record()
+            raise StopIteration
+        ex = self._ex
+        prob, opts, mesh = ex._prob, ex._opts, ex._mesh
+        if mesh is not None:
+            from repro.core import sharded as shd
+
+            self._state = ex._launch(
+                shd.batch_round_sharded, self._state, *self._args,
+                prob, opts, mesh, self._padded,
+            )
+        else:
+            self._state = ex._launch(
+                slv.batch_round, self._state, *self._args, prob, opts, self._padded,
+            )
+        self._round += 1
+        lb = self._state.lb
+        conv = np.asarray(lb.converged)[: self._B]
+        failed = np.asarray(lb.failed)[: self._B]
+        return {
+            "round": self._round,
+            "alive": int(np.sum(~conv & ~failed)),
+            "converged": conv,
+            "failed": failed,
+            "rounds": np.asarray(self._state.rounds)[: self._B],
+            "stats": np.asarray(self._state.stats)[: self._B],
+        }
+
+    # -- results --------------------------------------------------------------
+    def _maybe_record(self) -> None:
+        """Count the drained stream in the executor's stats exactly once.
+
+        Runs when iteration exhausts (so a ``for info in stream`` loop that
+        never calls :meth:`solutions` still registers its work) and again
+        defensively from :meth:`solutions`.
+        """
+        if self._recorded:
+            return
+        self._recorded = True
+        if self._B:                    # an empty stream did no work to count
+            self._ex._record(np.asarray(self._state.rounds)[: self._B])
+
+    def _batch_result(self) -> slv.BatchOTResult:
+        cut = lambda t: jax.tree_util.tree_map(lambda v: v[: self._B], t)
+        return self._ex._as_batch_result(
+            cut(self._state.lb), cut(self._state.scr),
+            self._state.rounds[: self._B], self._state.stats[: self._B],
+        )
+
+    def solutions(self) -> List[Solution]:
+        """Assemble the per-problem :class:`Solution` list (drains first).
+
+        If the stream has not been iterated to completion yet, the
+        remaining rounds run here (so ``stream(...).solutions()`` is the
+        eager solve).
+        """
+        for _ in self:
+            pass
+        self._maybe_record()
+        if self._B == 0:
+            return []
+        return self._ex._wrap_batch(
+            self._preps, self._C_host, self._batch_result()
+        )
+
+    def describe(self) -> str:
+        """The executor's diagnostic block + this stream's live progress."""
+        if self._B == 0:
+            return self._ex.describe()
+        return self._ex.describe(self._batch_result())

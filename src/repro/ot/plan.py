@@ -1,0 +1,154 @@
+"""Execution policy for the ``repro.ot`` façade.
+
+An :class:`ExecutionPlan` says HOW a :class:`~repro.ot.problem.Problem`
+runs — gradient backend, round schedule, inner-optimizer tolerances,
+batching and device policy — and absorbs the two legacy static-config
+dataclasses (:class:`repro.core.solver.SolveOptions` and
+:class:`repro.core.lbfgs.LbfgsOptions`) into one flat, JSON-able spec.
+
+The mapping to the legacy options is exact and bijective
+(:meth:`ExecutionPlan.solve_options` / :meth:`ExecutionPlan.from_solve_options`),
+which is what lets the deprecated shims route through the façade while
+staying bitwise-identical: the same ``SolveOptions`` reaches the same
+jitted program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+from repro.core.lbfgs import LbfgsOptions
+from repro.core.solver import SolveOptions
+
+GRAD_IMPLS = ("dense", "screened", "pallas")
+PALLAS_IMPLS = ("grid", "compact", "auto")
+BATCHING = ("auto", "solo", "batched")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Static execution policy (compiled programs specialize on it).
+
+    Parameters
+    ----------
+    grad_impl : {'dense', 'screened', 'pallas'}
+        Gradient oracle backend (see :mod:`repro.core.solver`).
+    pallas_impl : {'grid', 'compact', 'auto'}
+        Kernel grid mode for ``grad_impl='pallas'``.
+    snapshot_every : int
+        ``r`` in Algorithm 1 — L-BFGS iterations per screening round.
+    max_rounds : int
+        Cap on the number of rounds.
+    tight_active_refresh : bool
+        Beyond-paper tighter active-set refresh (off for paper fidelity).
+    batching : {'auto', 'solo', 'batched'}
+        How ``Executor.solve_many`` runs: one fused batched program
+        (``'batched'``), one program per problem (``'solo'``), or batched
+        unless there is exactly one problem (``'auto'``).
+    devices : {'single', 'all'} or int
+        Device policy: ``'single'`` stays on one device; ``'all'`` (or an
+        int device count) runs batched solves under ``shard_map`` with the
+        problem axis over a 1-D mesh (:mod:`repro.core.sharded`).
+    history, max_iters, gtol, ftol, c1, c2, max_linesearch, init_step :
+        Inner L-BFGS configuration, field-for-field
+        :class:`repro.core.lbfgs.LbfgsOptions`.
+    """
+
+    grad_impl: str = "screened"
+    pallas_impl: str = "auto"
+    snapshot_every: int = 10
+    max_rounds: int = 200
+    tight_active_refresh: bool = False
+    batching: str = "auto"
+    devices: Union[str, int] = "single"
+    # inner optimizer (absorbs LbfgsOptions field-for-field)
+    history: int = 10
+    max_iters: int = 500
+    gtol: float = 1e-6
+    ftol: float = 1e-10
+    c1: float = 1e-4
+    c2: float = 0.9
+    max_linesearch: int = 25
+    init_step: float = 1.0
+
+    def __post_init__(self):
+        if self.grad_impl not in GRAD_IMPLS:
+            raise ValueError(
+                f"grad_impl must be one of {GRAD_IMPLS}, got {self.grad_impl!r}"
+            )
+        if self.pallas_impl not in PALLAS_IMPLS:
+            raise ValueError(
+                f"pallas_impl must be one of {PALLAS_IMPLS}, got {self.pallas_impl!r}"
+            )
+        if self.batching not in BATCHING:
+            raise ValueError(
+                f"batching must be one of {BATCHING}, got {self.batching!r}"
+            )
+        if isinstance(self.devices, str):
+            if self.devices not in ("single", "all"):
+                raise ValueError(
+                    f"devices must be 'single', 'all' or an int, got {self.devices!r}"
+                )
+        elif self.devices < 1:
+            raise ValueError(f"devices count must be >= 1, got {self.devices}")
+        for name in ("snapshot_every", "max_rounds", "history", "max_iters",
+                     "max_linesearch"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+
+    # -- legacy-option mapping (exact, bijective) ------------------------------
+    def lbfgs_options(self) -> LbfgsOptions:
+        """The inner-optimizer slice as a legacy ``LbfgsOptions``."""
+        return LbfgsOptions(
+            history=self.history, max_iters=self.max_iters, gtol=self.gtol,
+            ftol=self.ftol, c1=self.c1, c2=self.c2,
+            max_linesearch=self.max_linesearch, init_step=self.init_step,
+        )
+
+    def solve_options(self) -> SolveOptions:
+        """The solver slice as a legacy ``SolveOptions`` (static jit arg)."""
+        return SolveOptions(
+            snapshot_every=self.snapshot_every,
+            max_rounds=self.max_rounds,
+            grad_impl=self.grad_impl,
+            pallas_impl=self.pallas_impl,
+            tight_active_refresh=self.tight_active_refresh,
+            lbfgs=self.lbfgs_options(),
+        )
+
+    @staticmethod
+    def from_solve_options(
+        opts: SolveOptions, *, batching: str = "auto",
+        devices: Union[str, int] = "single",
+    ) -> "ExecutionPlan":
+        """Lift legacy ``SolveOptions`` into a plan (shims use this).
+
+        Round-trips exactly: ``from_solve_options(o).solve_options() == o``.
+        """
+        lb = opts.lbfgs
+        return ExecutionPlan(
+            grad_impl=opts.grad_impl,
+            pallas_impl=opts.pallas_impl,
+            snapshot_every=opts.snapshot_every,
+            max_rounds=opts.max_rounds,
+            tight_active_refresh=opts.tight_active_refresh,
+            batching=batching,
+            devices=devices,
+            history=lb.history, max_iters=lb.max_iters, gtol=lb.gtol,
+            ftol=lb.ftol, c1=lb.c1, c2=lb.c2,
+            max_linesearch=lb.max_linesearch, init_step=lb.init_step,
+        )
+
+    # -- (de)serialization -----------------------------------------------------
+    def config(self) -> dict:
+        """JSON-able description; :meth:`from_config` inverts it exactly."""
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_config(cfg: dict) -> "ExecutionPlan":
+        """Rebuild an :class:`ExecutionPlan` from its :meth:`config` dict."""
+        known = {f.name for f in dataclasses.fields(ExecutionPlan)}
+        extra = set(cfg) - known
+        if extra:
+            raise ValueError(f"unknown ExecutionPlan config keys: {sorted(extra)}")
+        return ExecutionPlan(**cfg)

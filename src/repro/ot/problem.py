@@ -1,0 +1,373 @@
+"""Declarative problem specification for the ``repro.ot`` façade.
+
+A :class:`Problem` is a frozen, validated description of ONE regularized
+OT instance — what to solve, never how to solve it (that is
+:class:`repro.ot.plan.ExecutionPlan`).  Three construction modes cover
+every entry point the repo previously exposed:
+
+  * **samples**  — raw features + class labels (``Problem.from_samples``):
+    the paper's experimental pipeline (squared-Euclidean cost, optional
+    max-normalization, uniform marginals), previously
+    ``core.ot.solve_groupsparse_ot``,
+  * **cost**     — a precomputed ``(m, n)`` cost matrix + labels in the
+    caller's row order (the serving engine's request payload),
+  * **padded**   — arrays already in the canonical padded group layout of
+    :mod:`repro.core.groups` (``Problem.from_padded``), previously the raw
+    operands of ``solver.solve_dual`` / ``solve_batch``.
+
+Whatever the mode, :meth:`Problem.padded` lowers to ONE canonical padded
+form — ``(C_pad, a_pad, b, spec, perm)`` — with exactly the op sequence the
+legacy entry points used, so a solve routed through the façade is bitwise
+identical to the legacy paths (asserted by tests/test_facade.py).
+
+Problems round-trip through JSON-able dicts (:meth:`Problem.config` /
+:meth:`Problem.from_config`) so they can ride fixtures and request wires.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.core import groups as G
+from repro.core.regularizers import Regularizer, from_config as reg_from_config
+
+
+class PaddedArrays(NamedTuple):
+    """The canonical padded lowering of a :class:`Problem`.
+
+    Attributes
+    ----------
+    C : np.ndarray
+        ``(m_pad, n)`` float32 cost, rows sorted by group and padded.
+    a : np.ndarray
+        ``(m_pad,)`` float32 source marginal (zero mass on padding).
+    b : np.ndarray
+        ``(n,)`` float32 target marginal.
+    spec : repro.core.groups.GroupSpec
+        The padded group layout.
+    perm : np.ndarray
+        ``(m_pad,)`` padded-row -> original-row map (-1 = padding).
+    """
+
+    C: np.ndarray
+    a: np.ndarray
+    b: np.ndarray
+    spec: G.GroupSpec
+    perm: np.ndarray
+
+
+def _opt_array(x, dtype=None) -> Optional[np.ndarray]:
+    if x is None:
+        return None
+    return np.asarray(x) if dtype is None else np.asarray(x, dtype)
+
+
+def _maybe_list(x: Optional[np.ndarray]):
+    return None if x is None else np.asarray(x).tolist()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Problem:
+    """One regularized OT instance, declaratively.
+
+    Use the mode constructors (:meth:`from_samples`, :meth:`from_padded`)
+    or pass a precomputed cost directly; validation runs at construction,
+    so a malformed problem fails fast — before it can reach a compiled
+    executor or poison a serving bucket.
+
+    Parameters
+    ----------
+    reg : Regularizer
+        The regularizer (any member of the thresholded soft-scale family,
+        see :mod:`repro.core.regularizers`).  Compiled programs specialize
+        on it, so it is part of the problem's geometry key.
+    C : np.ndarray, optional
+        ``(m, n)`` cost matrix — caller's row order (cost mode), or the
+        padded layout when ``spec`` is given (padded mode).
+    labels : np.ndarray, optional
+        ``(m,)`` integer class labels (samples / cost modes).
+    X_S, X_T : np.ndarray, optional
+        ``(m, d)`` / ``(n, d)`` raw features (samples mode; the cost is
+        derived as normalized squared-Euclidean distances).
+    a, b : np.ndarray, optional
+        Marginals; default uniform.  In padded mode ``a`` must already be
+        padded (``(m_pad,)``, zero mass on padding).
+    spec : GroupSpec, optional
+        Explicit padded layout — giving it switches to padded mode.
+    normalize_cost : bool
+        Samples mode only: divide the cost by its max (paper pipeline).
+    pad_to : int
+        Group-size padding granularity for the derived layout.
+    """
+
+    reg: Regularizer
+    C: Optional[np.ndarray] = None
+    labels: Optional[np.ndarray] = None
+    X_S: Optional[np.ndarray] = None
+    X_T: Optional[np.ndarray] = None
+    a: Optional[np.ndarray] = None
+    b: Optional[np.ndarray] = None
+    spec: Optional[G.GroupSpec] = None
+    normalize_cost: bool = True
+    pad_to: int = 8
+
+    def __post_init__(self):
+        for name in ("C", "labels", "X_S", "X_T", "a", "b"):
+            object.__setattr__(self, name, _opt_array(getattr(self, name)))
+        self.validate()
+
+    # -- constructors ---------------------------------------------------------
+    @staticmethod
+    def from_samples(
+        X_S, y_S, X_T, reg: Regularizer, *,
+        a=None, b=None, normalize_cost: bool = True, pad_to: int = 8,
+    ) -> "Problem":
+        """The paper's pipeline: features + labels -> squared-Euclidean OT."""
+        return Problem(
+            reg=reg, X_S=X_S, labels=y_S, X_T=X_T, a=a, b=b,
+            normalize_cost=normalize_cost, pad_to=pad_to,
+        )
+
+    @staticmethod
+    def from_padded(C_pad, a_pad, b, spec: G.GroupSpec, reg: Regularizer) -> "Problem":
+        """Adopt arrays already in the canonical padded group layout."""
+        return Problem(reg=reg, C=C_pad, a=a_pad, b=b, spec=spec)
+
+    # -- validation -----------------------------------------------------------
+    @property
+    def mode(self) -> str:
+        """``'samples'`` | ``'cost'`` | ``'padded'`` — the construction mode."""
+        if self.spec is not None:
+            return "padded"
+        return "samples" if self.X_S is not None else "cost"
+
+    def validate(self) -> None:
+        """Raise ``ValueError`` on any inconsistency (shapes, modes, reg)."""
+        if not isinstance(self.reg, Regularizer):
+            raise ValueError(f"reg must be a Regularizer, got {type(self.reg).__name__}")
+        if self.pad_to < 1:
+            raise ValueError(f"pad_to must be >= 1, got {self.pad_to}")
+        has_samples = self.X_S is not None or self.X_T is not None
+        if has_samples and (self.X_S is None or self.X_T is None):
+            raise ValueError("samples mode needs both X_S and X_T")
+        if has_samples and self.C is not None:
+            raise ValueError("provide raw samples OR a precomputed cost, not both")
+        if not has_samples and self.C is None:
+            raise ValueError("provide raw samples (X_S, X_T) or a cost matrix C")
+        if self.C is not None and self.C.ndim != 2:
+            raise ValueError(f"C must be 2-D (m, n), got shape {self.C.shape}")
+
+        if self.spec is not None:                      # padded mode
+            if has_samples:
+                raise ValueError("padded mode (spec given) is incompatible with samples")
+            if self.labels is not None:
+                raise ValueError("padded mode derives its layout from spec, not labels")
+            if self.C.shape[0] != self.spec.m_pad:
+                raise ValueError(
+                    f"padded C has {self.C.shape[0]} rows, spec expects m_pad="
+                    f"{self.spec.m_pad}"
+                )
+            if self.a is None or self.b is None:
+                raise ValueError("padded mode requires explicit marginals a and b")
+            if self.a.shape != (self.spec.m_pad,):
+                raise ValueError(
+                    f"padded a must have shape ({self.spec.m_pad},), got {self.a.shape}"
+                )
+        else:
+            if self.labels is None:
+                raise ValueError("samples/cost modes need integer class labels")
+            m = self.X_S.shape[0] if has_samples else self.C.shape[0]
+            if self.labels.shape != (m,):
+                raise ValueError(
+                    f"labels must have shape ({m},), got {self.labels.shape}"
+                )
+            if has_samples and self.X_S.shape[1:] != self.X_T.shape[1:]:
+                raise ValueError(
+                    f"X_S and X_T feature dims differ: {self.X_S.shape} vs "
+                    f"{self.X_T.shape}"
+                )
+            if self.a is not None and self.a.shape != (m,):
+                raise ValueError(f"a must have shape ({m},), got {self.a.shape}")
+        n = self.num_target
+        if self.b is not None and self.b.shape != (n,):
+            raise ValueError(f"b must have shape ({n},), got {self.b.shape}")
+        for name in ("a", "b"):
+            v = getattr(self, name)
+            if v is not None and np.any(np.asarray(v) < 0):
+                raise ValueError(f"marginal {name} has negative entries")
+        # per-group regularizer parameters must fit THIS problem's layout
+        self.reg.mu_vec(self.group_spec().num_groups)
+
+    # -- derived geometry -----------------------------------------------------
+    @property
+    def num_source(self) -> int:
+        """``m`` — true (unpadded) number of source samples."""
+        if self.spec is not None:
+            return self.spec.m
+        return self.X_S.shape[0] if self.X_S is not None else self.C.shape[0]
+
+    @property
+    def num_target(self) -> int:
+        """``n`` — number of target samples / cost columns."""
+        return self.X_T.shape[0] if self.X_T is not None else self.C.shape[1]
+
+    def group_spec(self) -> G.GroupSpec:
+        """The padded group layout (explicit, or derived from the labels).
+
+        The derived spec is memoized on the instance (frozen fields never
+        change), so the serving hot path — which consults the layout at
+        validation, bucketing and admission — sorts the labels once.
+        """
+        if self.spec is not None:
+            return self.spec
+        cached = self.__dict__.get("_derived_spec")
+        if cached is None:
+            cached = G.spec_from_labels(self.labels, pad_to=self.pad_to)
+            object.__setattr__(self, "_derived_spec", cached)
+        return cached
+
+    def geometry(self) -> Tuple[int, int, int]:
+        """``(L, g_pad, n)`` — the static shape a program compiles for."""
+        spec = self.group_spec()
+        return (spec.num_groups, spec.group_size, self.num_target)
+
+    # -- canonical lowering ---------------------------------------------------
+    def cost(self, dtype=np.float32) -> np.ndarray:
+        """The ``(m, n)`` cost in the problem's own row order.
+
+        Samples mode computes it with exactly the legacy
+        ``solve_groupsparse_ot`` op sequence (squared-Euclidean, float32
+        cast, then max-normalization) so façade solves stay bitwise equal
+        to the pre-façade pipeline; ``dtype`` (the serving engine passes
+        its slot dtype) only recasts the final array.
+        """
+        if self.C is not None:
+            return np.asarray(self.C, dtype)
+        from repro.core.ot import squared_euclidean_cost
+
+        C = squared_euclidean_cost(self.X_S, self.X_T).astype(np.float32)
+        if self.normalize_cost:
+            C = C / max(C.max(), 1e-12)
+        return C if C.dtype == dtype else C.astype(dtype)
+
+    def padded(self, dtype=np.float32) -> PaddedArrays:
+        """Lower to the canonical padded form every solver layer consumes.
+
+        ``dtype`` is the storage dtype of the returned arrays (default
+        float32, the solver convention).  The serving engine passes its
+        own slot dtype, so precomputed costs and marginals reach
+        non-float32 engines untruncated; the samples-mode cost derivation
+        stays pinned to the legacy float32 pipeline (bitwise parity) and
+        is only recast afterwards.
+        """
+        spec = self.group_spec()
+        m, n = self.num_source, self.num_target
+        if self.spec is not None:                      # already padded
+            perm = np.full((spec.m_pad,), -1, np.int64)
+            perm[spec.row_mask().reshape(-1)] = np.arange(m)
+            return PaddedArrays(
+                np.asarray(self.C, dtype), np.asarray(self.a, dtype),
+                np.asarray(self.b, dtype), spec, perm,
+            )
+        C = self.cost(dtype)
+        a = self.a if self.a is not None else np.full((m,), 1.0 / m, dtype)
+        b = self.b if self.b is not None else np.full((n,), 1.0 / n, dtype)
+        return PaddedArrays(
+            G.pad_cost_matrix(C, self.labels, spec),
+            G.pad_marginal(np.asarray(a, dtype), self.labels, spec),
+            np.asarray(b, dtype),
+            spec,
+            G.padded_perm(self.labels, spec),
+        )
+
+    # -- (de)serialization + equality -----------------------------------------
+    def config(self) -> dict:
+        """JSON-able description; :meth:`from_config` inverts it exactly."""
+        cfg = {
+            "mode": self.mode,
+            "reg": self.reg.config(),
+            "normalize_cost": bool(self.normalize_cost),
+            "pad_to": int(self.pad_to),
+        }
+        dtypes = {}
+        for name in ("C", "labels", "X_S", "X_T", "a", "b"):
+            v = getattr(self, name)
+            if v is not None:
+                cfg[name] = _maybe_list(v)
+                dtypes[name] = str(np.asarray(v).dtype)
+        if dtypes:
+            cfg["dtypes"] = dtypes
+        if self.spec is not None:
+            cfg["spec"] = {
+                "num_groups": self.spec.num_groups,
+                "group_size": self.spec.group_size,
+                "sizes": list(self.spec.sizes),
+                "m": self.spec.m,
+            }
+        return cfg
+
+    @staticmethod
+    def from_config(cfg: dict) -> "Problem":
+        """Rebuild a :class:`Problem` from its :meth:`config` dict."""
+        cfg = dict(cfg)
+        cfg.pop("mode", None)
+        reg = reg_from_config(cfg.pop("reg"))
+        spec = cfg.pop("spec", None)
+        if spec is not None:
+            spec = G.GroupSpec(
+                num_groups=int(spec["num_groups"]),
+                group_size=int(spec["group_size"]),
+                sizes=tuple(int(s) for s in spec["sizes"]),
+                m=int(spec["m"]),
+            )
+        # restore each array at its recorded dtype — a float32-samples
+        # problem must rebuild bitwise-identical (its cost derivation is
+        # dtype-sensitive); older configs without the record fall back to
+        # the canonical dtypes
+        dtypes = cfg.pop("dtypes", {})
+        defaults = {
+            "C": np.float32, "labels": np.int64, "X_S": np.float64,
+            "X_T": np.float64, "a": np.float32, "b": np.float32,
+        }
+        arrays = {}
+        for name, default in defaults.items():
+            if name in cfg:
+                dtype = np.dtype(dtypes[name]) if name in dtypes else default
+                arrays[name] = np.asarray(cfg.pop(name), dtype)
+        return Problem(reg=reg, spec=spec, **arrays, **cfg)
+
+    def __eq__(self, other) -> bool:
+        """Field-wise equality (arrays compared by value)."""
+        if not isinstance(other, Problem):
+            return NotImplemented
+        for f in dataclasses.fields(self):
+            va, vb = getattr(self, f.name), getattr(other, f.name)
+            if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+                if va is None or vb is None or not np.array_equal(va, vb):
+                    return False
+            elif va != vb:
+                return False
+        return True
+
+    def __hash__(self) -> int:
+        """Value hash consistent with :meth:`__eq__` (array bytes included).
+
+        Problems are frozen, so hashing over the field values is sound;
+        this keeps them usable as dict/set keys (e.g. template caches)
+        despite the custom ``__eq__``.  Arrays hash through a float64
+        normalization so that value-equal arrays of different dtypes —
+        which ``__eq__`` (``np.array_equal``) treats as equal — hash
+        equal too.  Cost is O(total array bytes), so don't key hot
+        per-tick maps on large problems.
+        """
+        parts = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                canon = np.ascontiguousarray(v, np.float64)
+                parts.append((f.name, v.shape, canon.tobytes()))
+            else:
+                parts.append((f.name, v))
+        return hash(tuple(parts))

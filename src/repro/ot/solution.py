@@ -1,0 +1,165 @@
+"""The unified solution type returned by every ``repro.ot`` execution path.
+
+One container whatever the route — solo, batched, sharded, or a serving
+slot: the primal plan restored to the caller's original row order, the
+padded plan and duals for bitwise comparisons, objective / transport cost /
+group sparsity, and the convergence record.  The legacy result objects
+(``OTResult`` et al.) remain reachable through :attr:`Solution.result` so
+deprecated shims can re-wrap a façade solve without recomputation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import groups as G
+from repro.core.solver import OTResult
+
+
+@dataclasses.dataclass
+class Solution:
+    """Result of solving one :class:`~repro.ot.problem.Problem`.
+
+    Attributes
+    ----------
+    plan : np.ndarray
+        ``(m, n)`` primal transport plan in the problem's original row
+        order (padding rows/columns dropped).
+    value : float
+        Dual objective at convergence.
+    distance : float
+        Transport cost ``<T, C>_F`` over the real entries.
+    group_sparsity : float
+        Fraction of (group, target) blocks that are exactly zero — the
+        structure the group-lasso term drives up.
+    alpha, beta : arrays
+        Optimal duals in the padded layout (``(m_pad,)`` / ``(n_solved,)``).
+    plan_padded : np.ndarray
+        ``(m_pad, n_solved)`` plan in the solver's padded layout (bitwise
+        comparisons against legacy entry points).
+    rounds : int
+        Algorithm-1 rounds run.
+    converged : bool
+        Whether the dual solve converged (vs. failed / hit caps).
+    iterations, n_evals : int
+        L-BFGS iterations / oracle evaluations.
+    stats : dict
+        Screening verdict totals ``{'zero', 'check', 'active'}``.
+    spec : GroupSpec
+        The padded group layout the solve ran in.
+    perm : np.ndarray
+        ``(m_pad,)`` padded-row -> original-row map (-1 = padding).
+    result : OTResult
+        The underlying legacy container (duals, solver + screening state).
+    """
+
+    plan: np.ndarray
+    value: float
+    distance: float
+    group_sparsity: float
+    alpha: np.ndarray
+    beta: np.ndarray
+    plan_padded: np.ndarray
+    rounds: int
+    converged: bool
+    iterations: int
+    n_evals: int
+    stats: dict
+    spec: G.GroupSpec
+    perm: np.ndarray
+    result: Optional[OTResult] = None
+
+    def transport_sources(self, X_S: np.ndarray) -> np.ndarray:
+        """Barycentric map of targets: each target as the plan-weighted mean
+        of the sources sending it mass, ``X_T_hat_j = (T^T X_S)_j / T_j``.
+
+        With uniform marginals the column masses are ``1/n`` and this is
+        the paper's ``n * T^T X_S`` (§Prelim); normalizing by the actual
+        column sums keeps the map correct for non-uniform ``b`` too.
+        Targets receiving no mass (possible only before convergence) map
+        to the origin rather than dividing by zero.
+        """
+        mass = self.plan.sum(axis=0)
+        scale = np.where(mass > 0, 1.0 / np.maximum(mass, 1e-38), 0.0)
+        return scale[:, None] * (self.plan.T @ X_S)
+
+    def summary(self) -> str:
+        """One-line human-readable summary (logs / examples)."""
+        return (
+            f"Solution(value={self.value:.6f}, distance={self.distance:.6f}, "
+            f"group_sparsity={self.group_sparsity:.1%}, rounds={self.rounds}, "
+            f"converged={self.converged})"
+        )
+
+
+def build_solution(
+    result: OTResult,
+    reg,
+    C_pad: np.ndarray,
+    spec: G.GroupSpec,
+    perm: np.ndarray,
+    n: int,
+    tol: float = 1e-9,
+    T_pad: Optional[np.ndarray] = None,
+) -> Solution:
+    """Assemble a :class:`Solution` from a legacy ``OTResult``.
+
+    ``C_pad`` is the ``(m_pad, n_solved)`` cost the solve actually ran on
+    (``n_solved >= n`` when columns were padded up to a template width);
+    ``n`` is the problem's true column count.  The plan is recovered from
+    the duals (or taken from ``T_pad`` when the caller already recovered
+    a whole batch in one launch — ``Executor._wrap_batch``), un-padded
+    back to the original row order, and the derived quantities (transport
+    cost, group sparsity) are computed with the same op sequence the
+    legacy ``solve_groupsparse_ot`` used so shims reproduce its outputs
+    exactly.
+    """
+    if T_pad is None:
+        import jax.numpy as jnp
+
+        from repro.core.dual import DualProblem, plan_from_duals
+
+        prob = DualProblem(
+            spec.num_groups, spec.group_size, int(C_pad.shape[1]), reg
+        )
+        T_pad = np.asarray(
+            plan_from_duals(result.alpha, result.beta, jnp.asarray(C_pad), prob)
+        )
+    else:
+        T_pad = np.asarray(T_pad)
+    m = int(spec.m)
+    real = perm >= 0
+    T = np.zeros((m, n), T_pad.dtype)
+    T[perm[real]] = T_pad[real][:, :n]
+    C_real = np.zeros((m, n), np.float32)
+    C_real[perm[real]] = np.asarray(C_pad, np.float32)[real][:, :n]
+    distance = float(np.sum(T * C_real))
+
+    # fraction of (group, target) blocks that are entirely zero, over the
+    # REAL rows of each group (the padded-layout form of
+    # ``core.ot.group_sparsity``)
+    row_mask = spec.row_mask()
+    Tg = T_pad[:, :n].reshape(spec.num_groups, spec.group_size, n)
+    masked = np.where(row_mask[:, :, None], np.abs(Tg), 0.0)
+    zero_blocks = int(np.sum(masked.max(axis=1) <= tol))
+    gs = zero_blocks / float(max(spec.num_groups * n, 1))
+
+    return Solution(
+        plan=T,
+        value=float(result.value),
+        distance=distance,
+        group_sparsity=gs,
+        alpha=result.alpha,
+        beta=result.beta,
+        plan_padded=T_pad,
+        rounds=int(result.rounds),
+        converged=bool(result.converged),
+        iterations=int(result.iterations),
+        n_evals=int(result.n_evals),
+        stats=dict(result.stats),
+        spec=spec,
+        perm=perm,
+        result=result,
+    )

@@ -53,6 +53,7 @@ from repro.core import solver as slv
 from repro.core.dual import DualProblem, plan_from_duals
 from repro.core.lbfgs import where_state
 from repro.core.regularizers import Regularizer
+from repro.ot.problem import Problem
 from repro.utils.logging import get_logger
 
 log = get_logger("ot_serving")
@@ -62,24 +63,32 @@ log = get_logger("ot_serving")
 class OTRequest:
     """One OT solve request (inputs in the caller's row order).
 
+    The payload is a declarative :class:`repro.ot.Problem` — pass one via
+    ``problem`` (or :meth:`from_problem`), or pass the raw ``C`` +
+    ``labels`` fields and the engine lifts them into a cost-mode Problem
+    at admission (the pre-façade wire format, kept for compatibility).
+
     Parameters
     ----------
     rid : int
         Caller-chosen request id (echoed back on retirement).
-    C : np.ndarray
-        ``(m, n)`` float cost matrix in the caller's row/column order.
-    labels : np.ndarray
-        ``(m,)`` integer class labels of the source rows (the group
-        structure of the regularizer).
+    C : np.ndarray, optional
+        ``(m, n)`` float cost matrix in the caller's row/column order
+        (raw form; ignored when ``problem`` is given).
+    labels : np.ndarray, optional
+        ``(m,)`` integer class labels of the source rows (raw form).
     a : np.ndarray, optional
-        ``(m,)`` source marginal; defaults to uniform ``1/m``.
+        ``(m,)`` source marginal; defaults to uniform ``1/m`` (raw form).
     b : np.ndarray, optional
-        ``(n,)`` target marginal; defaults to uniform ``1/n``.
+        ``(n,)`` target marginal; defaults to uniform ``1/n`` (raw form).
     reg : Regularizer, optional
         Per-request regularizer; defaults to the engine's.  Requests with
         different regularizers never share a bucket (the compiled program
         and the screening thresholds specialize on the regularizer), so
         mixed-regularizer traffic packs into per-regularizer batches.
+    problem : repro.ot.Problem, optional
+        The declarative payload; carries its own regularizer, marginals
+        and group layout (``reg`` / ``C`` / ``labels`` are then unused).
 
     Attributes
     ----------
@@ -97,18 +106,24 @@ class OTRequest:
     """
 
     rid: int
-    C: np.ndarray                      # (m, n) cost matrix
-    labels: np.ndarray                 # (m,) integer class labels
+    C: Optional[np.ndarray] = None     # (m, n) cost matrix (raw form)
+    labels: Optional[np.ndarray] = None  # (m,) integer class labels (raw form)
     a: Optional[np.ndarray] = None     # (m,) source marginal (default 1/m)
     b: Optional[np.ndarray] = None     # (n,) target marginal (default 1/n)
     reg: Optional[Regularizer] = None  # per-request regularizer (default:
     #   the engine's; distinct regularizers go to distinct buckets)
+    problem: Optional[Problem] = None  # declarative payload (preferred)
     # filled at retirement:
     value: Optional[float] = None      # dual objective at convergence
     plan: Optional[np.ndarray] = None  # (m, n) primal plan, original order
     rounds: int = 0
     converged: bool = False
     done: bool = False
+
+    @staticmethod
+    def from_problem(rid: int, problem: Problem) -> "OTRequest":
+        """Wrap a declarative :class:`repro.ot.Problem` as a request."""
+        return OTRequest(rid=rid, problem=problem)
 
 
 @jax.jit
@@ -210,17 +225,11 @@ class _Bucket:
                 load[i // self.slots_per_device] += 1
         return min(free, key=lambda i: (load[i // self.slots_per_device], i))
 
-    def admit(self, slot: int, req: OTRequest, spec: G.GroupSpec):
-        """Write ``req``'s padded arrays into ``slot`` (no state init)."""
-        L, g_pad, n_pad = self.key[:3]
-        m, n = req.C.shape
+    def admit(self, slot: int, req: OTRequest, problem: Problem):
+        """Write the request's padded Problem arrays into ``slot`` (no state init)."""
+        m, n = problem.num_source, problem.num_target
         dtype = self.C.dtype
-        a = req.a if req.a is not None else np.full((m,), 1.0 / m, dtype)
-        b = req.b if req.b is not None else np.full((n,), 1.0 / n, dtype)
-
-        C_pad = G.pad_cost_matrix(np.asarray(req.C, dtype), req.labels, spec)
-        a_pad = G.pad_marginal(np.asarray(a, dtype), req.labels, spec)
-        _, perm, _ = G.pad_sources(np.asarray(req.C, dtype), req.labels, spec)
+        C_pad, a_pad, b, spec, perm = problem.padded(dtype=dtype)
 
         self.C[slot] = G.PAD_COST
         self.C[slot, :, :n] = C_pad
@@ -342,10 +351,14 @@ class _Bucket:
 class OTServingEngine:
     """Serve a stream of OT solve requests with bucketed continuous batching.
 
-    Requests whose padded geometry ``(L, g_pad, ceil(n / n_quant) *
-    n_quant)`` AND regularizer coincide share a bucket — and therefore
-    a compiled program and a batch (mixed-regularizer traffic packs
-    into per-regularizer buckets; see :meth:`_bucket_key`).  Each tick
+    Requests are declarative :class:`repro.ot.Problem` objects — admitted
+    directly (:meth:`submit`, or ``run`` on a list of Problems) or wrapped
+    in an :class:`OTRequest` envelope (which also lifts the pre-façade raw
+    ``C`` + ``labels`` wire format).  Problems whose padded geometry
+    ``(L, g_pad, ceil(n / n_quant) * n_quant)`` AND regularizer coincide
+    share a bucket — and therefore a compiled program and a batch
+    (mixed-regularizer traffic packs into per-regularizer buckets; see
+    :meth:`_bucket_key`).  Each tick
     advances every active bucket by one fused
     Algorithm-1 round in a single program launch per bucket; attached to a
     device mesh, that launch is a ``shard_map`` program with the slot axis
@@ -403,26 +416,74 @@ class OTServingEngine:
         self.mesh = mesh
         self.num_devices = mesh.size if mesh is not None else 1
         self.buckets: Dict[Tuple, _Bucket] = {}
+        self._next_rid = 0
 
-    def _bucket_key(self, req: OTRequest) -> Tuple[Tuple, G.GroupSpec]:
-        """Bucket key ``(L, g_pad, n_pad, reg)`` + the request's group spec.
+    def _as_problem(self, req: OTRequest) -> Problem:
+        """The request's declarative payload (lifting raw C + labels).
+
+        Construction validates shapes, marginals and the regularizer's
+        per-group parameters against the request's own group count BEFORE
+        any slot/bucket mutation — a malformed request is rejected here,
+        not from inside state init where it would poison a bucket.
+        """
+        if req.problem is not None:
+            return req.problem
+        if req.C is None or req.labels is None:
+            raise ValueError(
+                f"request {req.rid} carries neither a Problem nor raw C + labels"
+            )
+        reg = req.reg if req.reg is not None else self.reg
+        # cache the lifted Problem on the request — run() retries admission
+        # on every tick while buckets are full, and re-validating (array
+        # conversions + label sort) per retry would tax the serving loop —
+        # but key the cache on the resolved (reg, pad_to): the raw fields
+        # stay authoritative, so reusing the request with another engine
+        # (different defaults) or after changing req.reg re-lifts it
+        cached = getattr(req, "_lifted", None)
+        if cached is not None and cached[0] == reg and cached[1] == self.pad_to:
+            return cached[2]
+        problem = Problem(
+            reg=reg, C=req.C, labels=req.labels, a=req.a, b=req.b,
+            pad_to=self.pad_to,
+        )
+        req._lifted = (reg, self.pad_to, problem)
+        return problem
+
+    def _bucket_key(self, problem: Problem) -> Tuple:
+        """Bucket key ``(L, g_pad, n_pad, reg)`` from the Problem geometry.
 
         The regularizer is part of the key (regularizers are hashable
-        frozen dataclasses): two requests with identical padded geometry
+        frozen dataclasses): two problems with identical padded geometry
         but different regularizer kinds — or the same kind with different
         parameters — must not share a batch, because the compiled solver
         program and the per-group screening thresholds specialize on the
         regularizer.
         """
-        spec = G.spec_from_labels(req.labels, pad_to=self.pad_to)
-        n = req.C.shape[1]
+        L, g_pad, n = problem.geometry()
         n_pad = -(-n // self.n_quant) * self.n_quant
-        reg = req.reg if req.reg is not None else self.reg
-        # validate per-group parameters against THIS request's group count
-        # before any slot/bucket mutation: a malformed request must be
-        # rejected here, not poison a bucket from inside state init
-        reg.mu_vec(spec.num_groups)
-        return (spec.num_groups, spec.group_size, n_pad, reg), spec
+        return (L, g_pad, n_pad, problem.reg)
+
+    def submit(self, problem: Problem, rid: Optional[int] = None) -> Optional[OTRequest]:
+        """Admit a declarative :class:`repro.ot.Problem` directly.
+
+        Parameters
+        ----------
+        problem : repro.ot.Problem
+            The problem to serve (carries its own regularizer/layout).
+        rid : int, optional
+            Request id; defaults to an engine-assigned sequence number.
+
+        Returns
+        -------
+        OTRequest or None
+            The in-flight request handle, or None if the problem's bucket
+            is full (caller retries after a tick).
+        """
+        if rid is None:
+            rid = self._next_rid
+            self._next_rid += 1
+        req = OTRequest.from_problem(rid, problem)
+        return req if self.try_admit(req) else None
 
     def try_admit(self, req: OTRequest) -> bool:
         """Admit into the request's bucket if a slot is free (no round run).
@@ -430,7 +491,7 @@ class OTServingEngine:
         Parameters
         ----------
         req : OTRequest
-            The request to place.
+            The request to place (Problem payload or raw C + labels).
 
         Returns
         -------
@@ -438,7 +499,8 @@ class OTServingEngine:
             True if a slot was free (the request is now in flight), False
             if the bucket is full (caller retries after a tick).
         """
-        key, spec = self._bucket_key(req)
+        problem = self._as_problem(req)
+        key = self._bucket_key(problem)
         bucket = self.buckets.get(key)
         if bucket is None:
             bucket = _Bucket(key, self.max_batch, key[3], self.opts,
@@ -447,7 +509,7 @@ class OTServingEngine:
         slot = bucket.free_slot()
         if slot is None:
             return False
-        bucket.admit(slot, req, spec)
+        bucket.admit(slot, req, problem)
         new_mask = np.zeros((bucket.num_slots,), bool)
         new_mask[slot] = True
         bucket.refresh_state(new_mask)
@@ -476,8 +538,9 @@ class OTServingEngine:
 
         Parameters
         ----------
-        requests : list of OTRequest
+        requests : list of OTRequest or repro.ot.Problem
             The workload; consumed in order subject to slot availability.
+            Bare Problems are wrapped with engine-assigned request ids.
 
         Returns
         -------
@@ -485,7 +548,12 @@ class OTServingEngine:
             All requests, each retired (``done=True``), in completion
             order.
         """
-        pending = list(requests)
+        pending = []
+        for r in requests:
+            if isinstance(r, Problem):
+                rid, self._next_rid = self._next_rid, self._next_rid + 1
+                r = OTRequest.from_problem(rid, r)
+            pending.append(r)
         done: List[OTRequest] = []
         while pending or any(b.occupied() for b in self.buckets.values()):
             pending = [req for req in pending if not self.try_admit(req)]

@@ -20,6 +20,12 @@ from repro.core.regularizers import GroupSparseReg, grad_psi, psi_value
 from repro.core.sinkhorn import sinkhorn_log
 from repro.core.solver import SolveOptions, recover_plan, solve_dual
 
+# exercises the deprecated solve_groupsparse_ot shim ON PURPOSE (the
+# façade's own coverage lives in test_facade.py)
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:solve_groupsparse_ot:DeprecationWarning"
+)
+
 
 def _problem(rng, L=5, g=8, n=40, rho=0.6, gamma=1.0, pad_to=4):
     m = L * g

@@ -1,0 +1,492 @@
+"""The ``repro.ot`` façade: bitwise parity with every legacy entry point.
+
+The façade routes, it never re-implements — so its contract is exact:
+for EVERY regularizer kind (group-sparse / l2 / elastic-net) and EVERY
+``grad_impl`` backend (dense / screened / pallas),
+
+  * ``Executor.solve``      ==  ``solver.solve_dual``          bitwise,
+  * ``Executor.solve_many`` ==  ``solver.solve_batch``         bitwise,
+  * ``Executor.solve_many`` (mesh)  ==  ``sharded.solve_batch_sharded``
+    bitwise (default mesh: every local device — 4 forced host devices in
+    the CI sharded job),
+  * ``Executor.stream``     ==  ``Executor.solve_many``        bitwise,
+
+objectives, duals, plans, round counts and verdict stats all compared
+exactly.  Plus: Problem/ExecutionPlan config round-trips, validation
+errors, per-executor stats isolation, and the serving engine's
+Problem-payload admission.
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+# the differential layer calls the deprecated shims ON PURPOSE — they are
+# the reference implementations this suite gates the façade against
+pytestmark = [
+    pytest.mark.filterwarnings("ignore:solve_batch:DeprecationWarning"),
+    pytest.mark.filterwarnings("ignore:solve_groupsparse_ot:DeprecationWarning"),
+]
+
+from conftest import make_ot_problem
+
+import repro.ot as ot
+from repro.core import solver as slv
+from repro.core.lbfgs import LbfgsOptions
+from repro.core.ot import solve_groupsparse_ot
+from repro.core.regularizers import (
+    ElasticNetGroupReg,
+    GroupSparseReg,
+    L2Reg,
+)
+from repro.core.sharded import solve_batch_sharded
+from repro.core.solver import SolveOptions, recover_plan, solve_dual
+
+KINDS = ("group_sparse", "l2", "elastic_net")
+IMPLS = ("dense", "screened", "pallas")
+L, GSZ, N = 3, 4, 24          # tiny geometry: parity is shape-independent
+
+
+def make_reg(kind, num_groups=L):
+    if kind == "group_sparse":
+        return GroupSparseReg.from_rho(1.0, 0.6)
+    if kind == "l2":
+        return L2Reg(gamma=0.4)
+    return ElasticNetGroupReg(
+        gamma=0.4, mu_weights=tuple(0.5 + 0.25 * i for i in range(num_groups))
+    )
+
+
+def make_opts(grad_impl):
+    return SolveOptions(grad_impl=grad_impl, lbfgs=LbfgsOptions(max_iters=150))
+
+
+def padded_batch(B, seed0=0):
+    Cs, As, Bs = [], [], []
+    spec = None
+    for s in range(B):
+        C, a, b, spec, _ = make_ot_problem(seed0 + s, L, GSZ, N, pad_to=4)
+        Cs.append(C), As.append(a), Bs.append(b)
+    return Cs, As, Bs, spec
+
+
+def assert_result_bitwise(sol: ot.Solution, legacy, C, spec, reg):
+    """One Solution vs one legacy OTResult: everything exact."""
+    assert sol.value == float(legacy.value)
+    assert np.array_equal(np.asarray(sol.alpha), np.asarray(legacy.alpha))
+    assert np.array_equal(np.asarray(sol.beta), np.asarray(legacy.beta))
+    assert sol.rounds == legacy.rounds
+    assert sol.stats == legacy.stats
+    T_legacy = np.asarray(recover_plan(legacy, jnp.asarray(C), spec, reg))
+    assert np.array_equal(sol.plan_padded, T_legacy)
+
+
+# ---------------------------------------------------------------- solve (solo)
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("impl", IMPLS)
+def test_solve_matches_solve_dual_bitwise(kind, impl):
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    reg, opts = make_reg(kind), make_opts(impl)
+    legacy = solve_dual(jnp.asarray(C), jnp.asarray(a), jnp.asarray(b),
+                        spec, reg, opts)
+    problem = ot.Problem.from_padded(C, a, b, spec, reg)
+    sol = ot.compile(problem, ot.ExecutionPlan.from_solve_options(opts)).solve()
+    assert_result_bitwise(sol, legacy, C, spec, reg)
+
+
+# ------------------------------------------------------------------ solve_many
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("impl", IMPLS)
+def test_solve_many_matches_solve_batch_bitwise(kind, impl):
+    B = 3
+    Cs, As, Bs, spec = padded_batch(B)
+    reg, opts = make_reg(kind), make_opts(impl)
+    rb = slv.solve_batch(
+        jnp.asarray(np.stack(Cs)), jnp.asarray(np.stack(As)),
+        jnp.asarray(np.stack(Bs)), spec, reg, opts,
+    )
+    problems = [ot.Problem.from_padded(Cs[i], As[i], Bs[i], spec, reg)
+                for i in range(B)]
+    ex = ot.compile(problems[0], ot.ExecutionPlan.from_solve_options(opts))
+    sols = ex.solve_many(problems)
+    assert np.array_equal(
+        np.asarray(rb.lbfgs_state.x),
+        np.stack([np.asarray(s.result.lbfgs_state.x) for s in sols]),
+    )
+    for i in range(B):
+        assert_result_bitwise(sols[i], rb[i], Cs[i], spec, reg)
+    # ONE fused launch for the whole batch
+    assert ex.stats()["launches"] == 1
+    assert ex.stats()["problems_solved"] == B
+
+
+# --------------------------------------------------------------------- sharded
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("impl", IMPLS)
+def test_solve_many_sharded_matches_legacy_bitwise(kind, impl):
+    B = 4
+    Cs, As, Bs, spec = padded_batch(B)
+    reg, opts = make_reg(kind), make_opts(impl)
+    rs = solve_batch_sharded(
+        jnp.asarray(np.stack(Cs)), jnp.asarray(np.stack(As)),
+        jnp.asarray(np.stack(Bs)), spec, reg, opts,
+    )
+    problems = [ot.Problem.from_padded(Cs[i], As[i], Bs[i], spec, reg)
+                for i in range(B)]
+    ex = ot.compile(
+        problems[0],
+        ot.ExecutionPlan.from_solve_options(opts, devices="all"),
+    )
+    sols = ex.solve_many(problems)
+    assert ex.mesh is not None
+    assert ex.stats()["launches"] == 1
+    for i in range(B):
+        assert_result_bitwise(sols[i], rs[i], Cs[i], spec, reg)
+
+
+# ---------------------------------------------------------------------- stream
+@pytest.mark.parametrize("kind", KINDS)
+def test_stream_matches_solve_many_bitwise(kind):
+    B = 3
+    Cs, As, Bs, spec = padded_batch(B)
+    reg = make_reg(kind)
+    problems = [ot.Problem.from_padded(Cs[i], As[i], Bs[i], spec, reg)
+                for i in range(B)]
+    ex = ot.compile(problems[0])
+    sols = ex.solve_many(problems)
+
+    stream = ot.compile(problems[0]).stream(problems)
+    seen_alive = []
+    for info in stream:
+        seen_alive.append(info["alive"])
+        assert info["converged"].shape == (B,)
+    sols_st = stream.solutions()
+    for i in range(B):
+        assert sols_st[i].value == sols[i].value
+        assert np.array_equal(
+            np.asarray(sols_st[i].result.lbfgs_state.x),
+            np.asarray(sols[i].result.lbfgs_state.x),
+        )
+        assert sols_st[i].rounds == sols[i].rounds
+    # progress is monotone: problems only ever finish
+    assert seen_alive == sorted(seen_alive, reverse=True)
+    assert "rounds=" in stream.describe()
+
+
+def test_stream_of_nothing_is_empty_not_an_error():
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    ex = ot.compile(ot.Problem.from_padded(C, a, b, spec, make_reg("l2")))
+    stream = ex.stream([])
+    assert list(stream) == []
+    assert stream.solutions() == []
+    assert ex.stats()["launches"] == 0
+    assert "grad_impl=" in stream.describe()
+
+
+def test_stream_iteration_alone_records_stats():
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    problem = ot.Problem.from_padded(C, a, b, spec, make_reg("group_sparse"))
+    ex = ot.compile(problem)
+    for _ in ex.stream([problem]):          # drained, solutions() never called
+        pass
+    stats = ex.stats()
+    assert stats["solves"] == 1
+    assert stats["problems_solved"] == 1
+    assert stats["rounds_total"] > 0
+
+
+def test_stream_respects_max_rounds_cap():
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    reg = make_reg("group_sparse")
+    problem = ot.Problem.from_padded(C, a, b, spec, reg)
+    ex = ot.compile(problem, ot.ExecutionPlan(max_rounds=2))
+    stream = ex.stream(problem)
+    assert len(list(stream)) <= 2
+
+
+# ---------------------------------------------------------- samples-mode shim
+def test_from_samples_matches_legacy_solve_groupsparse_ot():
+    rng = np.random.default_rng(0)
+    m, n = 24, 20
+    labels = np.repeat(np.arange(L), m // L)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+    Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
+    legacy = solve_groupsparse_ot(Xs, labels, Xt, gamma=1.0, rho=0.6)
+    sol = ot.solve(ot.Problem.from_samples(
+        Xs, labels, Xt, reg=GroupSparseReg.from_rho(1.0, 0.6)
+    ))
+    assert sol.value == legacy.value
+    assert sol.distance == legacy.distance
+    assert np.array_equal(sol.plan, legacy.plan)
+    assert np.array_equal(sol.perm, legacy.perm)
+
+
+# ---------------------------------------------------------- column auto-padding
+def test_executor_auto_pads_narrower_columns():
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    reg = make_reg("group_sparse")
+    template = ot.Problem.from_padded(C, a, b, spec, reg)
+    Cn, an, bn, spec_n, _ = make_ot_problem(0, L, GSZ, N - 8, pad_to=4)
+    assert spec_n == spec                 # same row layout, narrower columns
+    narrow = ot.Problem.from_padded(Cn, an, bn, spec, reg)
+    ex = ot.compile(template)
+    sol = ex.solve(narrow)
+    # un-padded back to the problem's own width, marginals preserved
+    assert sol.plan.shape == (spec.m, N - 8)
+    np.testing.assert_allclose(
+        sol.plan.sum(axis=0), np.asarray(bn), atol=5e-4
+    )
+    # the same problem solved at its own width agrees to solver tolerance
+    solo = ot.solve(narrow)
+    np.testing.assert_allclose(sol.value, solo.value, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------- config round-trip
+def test_problem_config_roundtrip_all_modes():
+    rng = np.random.default_rng(1)
+    reg = make_reg("elastic_net")
+    labels = np.repeat(np.arange(L), 5)
+    Xs = rng.normal(size=(15, 2))
+    Xt = rng.normal(size=(10, 2))
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    cases = [
+        ot.Problem.from_samples(Xs, labels, Xt, reg=reg, pad_to=4),
+        ot.Problem(reg=reg, C=rng.random((15, 10), dtype=np.float32),
+                   labels=labels),
+        ot.Problem.from_padded(C, a, b, spec, reg),
+    ]
+    for p in cases:
+        cfg = json.loads(json.dumps(p.config()))      # must be JSON-able
+        assert ot.Problem.from_config(cfg) == p
+        assert ot.Problem.from_config(cfg).mode == p.mode
+
+
+def test_problem_config_roundtrip_preserves_sample_dtype():
+    # a float32-samples problem must rebuild with a bitwise-identical cost
+    # derivation (the squared-Euclidean expansion is dtype-sensitive)
+    rng = np.random.default_rng(7)
+    labels = np.repeat(np.arange(L), 5)
+    p32 = ot.Problem.from_samples(
+        rng.normal(size=(15, 2)).astype(np.float32), labels,
+        rng.normal(size=(10, 2)).astype(np.float32),
+        reg=make_reg("group_sparse"),
+    )
+    p2 = ot.Problem.from_config(json.loads(json.dumps(p32.config())))
+    assert p2.X_S.dtype == np.float32
+    assert np.array_equal(p2.cost(), p32.cost())
+
+
+def test_problem_is_hashable_consistent_with_eq():
+    rng = np.random.default_rng(9)
+    labels = np.repeat(np.arange(L), 5)
+    C = rng.random((15, 10), dtype=np.float32)
+    reg = make_reg("group_sparse")
+    p1 = ot.Problem(reg=reg, C=C, labels=labels)
+    p2 = ot.Problem(reg=reg, C=C.copy(), labels=labels.copy())
+    assert p1 == p2 and hash(p1) == hash(p2)
+    assert len({p1, p2}) == 1                  # usable as a set/dict key
+    p3 = ot.Problem(reg=reg, C=C + 1.0, labels=labels)
+    assert p1 != p3
+    # __eq__ is value-based across dtypes (np.array_equal); hash must agree
+    p64 = ot.Problem(reg=reg, C=C.astype(np.float64), labels=labels)
+    assert p1 == p64 and hash(p1) == hash(p64)
+
+
+def test_problem_padded_respects_requested_dtype():
+    rng = np.random.default_rng(10)
+    labels = np.repeat(np.arange(L), 5)
+    C64 = rng.random((15, 10)).astype(np.float64)
+    p = ot.Problem(reg=make_reg("group_sparse"), C=C64, labels=labels)
+    pa = p.padded(dtype=np.float64)
+    assert pa.C.dtype == np.float64 and pa.a.dtype == np.float64
+    # no float32 truncation on the real rows
+    real = pa.perm >= 0
+    assert np.array_equal(np.sort(pa.C[real], axis=0), np.sort(C64, axis=0))
+    assert p.padded().C.dtype == np.float32     # solver default unchanged
+
+
+def test_transport_sources_handles_nonuniform_marginals():
+    rng = np.random.default_rng(8)
+    m, n = 15, 10
+    labels = np.repeat(np.arange(L), m // L)
+    Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+    Xt = rng.normal(size=(n, 2))
+    b = np.linspace(1.0, 2.0, n).astype(np.float32)
+    b /= b.sum()
+    sol = ot.solve(ot.Problem.from_samples(Xs, labels, Xt,
+                                           reg=make_reg("l2"), b=b))
+    mapped = sol.transport_sources(Xs)
+    mass = sol.plan.sum(axis=0)
+    expect = (sol.plan.T @ Xs) / mass[:, None]
+    np.testing.assert_allclose(mapped, expect, rtol=1e-5)
+
+
+def test_execution_plan_config_roundtrip():
+    plan = ot.ExecutionPlan(grad_impl="pallas", pallas_impl="compact",
+                            max_iters=77, devices="all", batching="batched")
+    cfg = json.loads(json.dumps(plan.config()))
+    assert ot.ExecutionPlan.from_config(cfg) == plan
+
+
+def test_execution_plan_solve_options_bijection():
+    opts = SolveOptions(
+        grad_impl="pallas", pallas_impl="grid", snapshot_every=7,
+        max_rounds=33, tight_active_refresh=True,
+        lbfgs=LbfgsOptions(history=4, max_iters=99, gtol=1e-5),
+    )
+    assert ot.ExecutionPlan.from_solve_options(opts).solve_options() == opts
+
+
+# ------------------------------------------------------------------- validation
+def test_problem_validation_errors():
+    rng = np.random.default_rng(2)
+    reg = make_reg("group_sparse")
+    labels = np.repeat(np.arange(L), 5)
+    Xs, Xt = rng.normal(size=(15, 2)), rng.normal(size=(10, 2))
+    C = rng.random((15, 10), dtype=np.float32)
+    with pytest.raises(ValueError, match="not both"):
+        ot.Problem(reg=reg, X_S=Xs, X_T=Xt, C=C, labels=labels)
+    with pytest.raises(ValueError, match="samples .*or a cost"):
+        ot.Problem(reg=reg, labels=labels)
+    with pytest.raises(ValueError, match="both X_S and X_T"):
+        ot.Problem(reg=reg, X_S=Xs, labels=labels)
+    with pytest.raises(ValueError, match="labels"):
+        ot.Problem(reg=reg, C=C, labels=labels[:-1])
+    with pytest.raises(ValueError, match="negative"):
+        ot.Problem(reg=reg, C=C, labels=labels, a=-np.ones(15, np.float32))
+    with pytest.raises(ValueError, match="group weights"):
+        ot.Problem(reg=ElasticNetGroupReg(gamma=0.4, mu_weights=(0.5,)),
+                   C=C, labels=labels)
+    Cp, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    with pytest.raises(ValueError, match="marginals"):
+        ot.Problem(reg=reg, C=Cp, spec=spec)
+    with pytest.raises(ValueError, match="rows"):
+        ot.Problem.from_padded(Cp[:-1], a, b, spec, reg)
+
+
+def test_execution_plan_validation_errors():
+    with pytest.raises(ValueError, match="grad_impl"):
+        ot.ExecutionPlan(grad_impl="magic")
+    with pytest.raises(ValueError, match="pallas_impl"):
+        ot.ExecutionPlan(pallas_impl="nope")
+    with pytest.raises(ValueError, match="batching"):
+        ot.ExecutionPlan(batching="sometimes")
+    with pytest.raises(ValueError, match="devices"):
+        ot.ExecutionPlan(devices="some")
+    with pytest.raises(ValueError, match="devices"):
+        ot.ExecutionPlan(devices=0)
+    with pytest.raises(ValueError, match="snapshot_every"):
+        ot.ExecutionPlan(snapshot_every=0)
+    with pytest.raises(ValueError, match="unknown"):
+        ot.ExecutionPlan.from_config({"grad_impl": "dense", "warp": 9})
+
+
+def test_executor_rejects_incompatible_problems():
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    reg = make_reg("group_sparse")
+    ex = ot.compile(ot.Problem.from_padded(C, a, b, spec, reg))
+    C2, a2, b2, spec2, _ = make_ot_problem(0, L + 1, GSZ, N, pad_to=4)
+    with pytest.raises(ValueError, match="layout"):
+        ex.solve(ot.Problem.from_padded(C2, a2, b2, spec2, reg))
+    with pytest.raises(ValueError, match="regularizer"):
+        ex.solve(ot.Problem.from_padded(C, a, b, spec, make_reg("l2")))
+    Cw, aw, bw, specw, _ = make_ot_problem(0, L, GSZ, 2 * N, pad_to=4)
+    with pytest.raises(ValueError, match="columns"):
+        ex.solve(ot.Problem.from_padded(Cw, aw, bw, specw, reg))
+
+
+# ------------------------------------------------------------------ stats / iso
+def test_executor_stats_are_isolated_per_instance():
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    reg = make_reg("group_sparse")
+    problem = ot.Problem.from_padded(C, a, b, spec, reg)
+    ex1, ex2 = ot.compile(problem), ot.compile(problem)
+    slv.reset_dispatch_count()
+    ex1.solve()
+    assert ex1.stats()["launches"] == 1
+    assert ex1.stats()["solves"] == 1
+    assert ex2.stats() == {
+        "launches": 0, "solves": 0, "problems_solved": 0, "rounds_total": 0,
+    }
+    # the legacy module-level counter keeps aggregating process-wide
+    assert slv.dispatch_count() == 1
+    # stats() returns a snapshot, not a live reference
+    snap = ex1.stats()
+    snap["launches"] = 99
+    assert ex1.stats()["launches"] == 1
+
+
+def test_executor_describe_mentions_backend_and_geometry():
+    C, a, b, spec, _ = make_ot_problem(0, L, GSZ, N, pad_to=4)
+    problem = ot.Problem.from_padded(C, a, b, spec, make_reg("group_sparse"))
+    ex = ot.compile(problem, ot.ExecutionPlan(grad_impl="pallas"))
+    text = ex.describe()
+    assert "grad_impl=pallas" in text
+    assert f"L={L}" in text
+    sol = ot.compile(problem).solve()
+    assert "verdicts:" in ot.compile(problem).describe(sol)
+
+
+# --------------------------------------------------------------- serving engine
+def test_engine_admits_problem_payloads():
+    from repro.serving.ot_engine import OTRequest, OTServingEngine
+
+    rng = np.random.default_rng(3)
+    reg = make_reg("group_sparse")
+    opts = make_opts("screened")
+    m, n = 12, 20
+    labels = np.repeat(np.arange(L), m // L)
+    C = rng.random((m, n)).astype(np.float32)
+
+    raw = OTRequest(rid=0, C=C, labels=labels)
+    eng1 = OTServingEngine(reg, opts, max_batch=2)
+    done_raw = eng1.run([raw])
+
+    problem = ot.Problem(reg=reg, C=C, labels=labels)
+    eng2 = OTServingEngine(reg, opts, max_batch=2)
+    handle = eng2.submit(problem)
+    assert handle is not None and not handle.done
+    done_p = eng2.run([])
+    assert done_p[0] is handle and handle.done
+
+    assert done_raw[0].value == handle.value
+    assert np.array_equal(done_raw[0].plan, handle.plan)
+
+    # run() accepts bare Problems too
+    eng3 = OTServingEngine(reg, opts, max_batch=2)
+    done_b = eng3.run([problem])
+    assert done_b[0].value == handle.value
+
+
+def test_engine_request_reuse_across_engines_resolves_fresh_defaults():
+    """A raw request lifted under one engine's defaults must re-lift when
+    reused with an engine whose default regularizer differs (the lift
+    cache keys on the resolved (reg, pad_to))."""
+    from repro.serving.ot_engine import OTRequest, OTServingEngine
+
+    rng = np.random.default_rng(11)
+    m, n = 12, 20
+    labels = np.repeat(np.arange(L), m // L)
+    C = rng.random((m, n)).astype(np.float32)
+    opts = make_opts("screened")
+
+    req = OTRequest(rid=0, C=C, labels=labels)
+    eng_gs = OTServingEngine(make_reg("group_sparse"), opts, max_batch=2)
+    eng_gs.run([req])
+    value_gs = req.value
+
+    req2 = OTRequest(rid=0, C=C, labels=labels)
+    eng_l2 = OTServingEngine(make_reg("l2"), opts, max_batch=2)
+    eng_l2.run([req2])
+
+    # same raw request object through both engines: second engine's default
+    # regularizer must apply, not the first's cached lift
+    req3 = OTRequest(rid=1, C=C, labels=labels)
+    eng_gs2 = OTServingEngine(make_reg("group_sparse"), opts, max_batch=2)
+    eng_gs2.run([req3])               # lift cached under group_sparse
+    eng_l2b = OTServingEngine(make_reg("l2"), opts, max_batch=2)
+    req3.value, req3.done = None, False
+    eng_l2b.run([req3])
+    assert req3.value == req2.value   # solved under l2, not the cached gs
+    assert req3.value != value_gs

@@ -12,6 +12,12 @@ from repro.core.solver import (
 )
 from repro.serving.ot_engine import OTRequest, OTServingEngine
 
+# reference solves go through the deprecated solve_groupsparse_ot shim ON
+# PURPOSE (engine results are compared against the legacy solo path)
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:solve_groupsparse_ot:DeprecationWarning"
+)
+
 OPTS = SolveOptions(grad_impl="screened", lbfgs=LbfgsOptions(max_iters=150))
 
 

@@ -35,6 +35,12 @@ from repro.core.regularizers import (
 )
 from repro.core.solver import SolveOptions, recover_plan, solve_batch, solve_dual
 
+# the solo==batched layer exercises the deprecated solve_batch shim ON
+# PURPOSE (façade-native parity lives in test_facade.py)
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:solve_batch:DeprecationWarning"
+)
+
 REG_KINDS = ["group_sparse", "l2", "elastic_net"]
 
 GEOM = dict(L=4, g=6, n=40, pad_to=8)

@@ -24,6 +24,12 @@ from repro.core.solver import (
     solve_dual,
 )
 
+# this module tests the deprecated solve_batch shim ON PURPOSE (the façade
+# parity suite lives in test_facade.py); silence just its deprecation
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:solve_batch:DeprecationWarning"
+)
+
 B = 8
 
 

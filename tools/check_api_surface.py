@@ -1,0 +1,87 @@
+"""API-surface gate: ``repro.ot.__all__`` must match docs/api.md.
+
+  python tools/check_api_surface.py
+
+The façade's exported names are read from ``src/repro/ot/__init__.py`` by
+AST (no imports — runs without jax installed, e.g. in the CI docs job) and
+compared against the backticked symbols documented in the ``repro.ot``
+section of docs/api.md.  A symbol exported but undocumented, or documented
+but not exported, fails the gate — the docs page and the package can never
+silently diverge.
+
+Doc symbols are taken from the first backticked token of each table row in
+the section (``| `Problem` | ... |``); call signatures are stripped
+(`` `compile(problem, plan)` `` documents ``compile``).
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+INIT = REPO / "src" / "repro" / "ot" / "__init__.py"
+DOCS = REPO / "docs" / "api.md"
+SECTION = "repro.ot"
+
+
+def exported_names(init_path: Path) -> set:
+    """The ``__all__`` list of a package's ``__init__.py``, by AST."""
+    tree = ast.parse(init_path.read_text())
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "__all__" in targets:
+                return {
+                    elt.value
+                    for elt in node.value.elts
+                    if isinstance(elt, ast.Constant)
+                }
+    raise SystemExit(f"{init_path}: no literal __all__ found")
+
+
+def documented_names(docs_path: Path, section: str) -> set:
+    """Backticked lead symbols of the table rows in one api.md section."""
+    text = docs_path.read_text()
+    # the section runs from its heading to the next same-or-higher heading
+    m = re.search(rf"^##[^\n]*`{re.escape(section)}`[^\n]*$", text, re.M)
+    if m is None:
+        raise SystemExit(f"{docs_path}: no '## ... `{section}` ...' section")
+    body = text[m.end():]
+    nxt = re.search(r"^## ", body, re.M)
+    if nxt:
+        body = body[: nxt.start()]
+    names = set()
+    for row in re.finditer(r"^\|\s*`([^`|]+)`", body, re.M):
+        sym = row.group(1).strip()
+        sym = sym.split("(")[0].split(".")[0].strip()
+        if sym and sym != "symbol":
+            names.add(sym)
+    if not names:
+        raise SystemExit(f"{docs_path}: section '{section}' documents no symbols")
+    return names
+
+
+def main() -> int:
+    """Compare the two name sets; 0 = in sync."""
+    exported = exported_names(INIT)
+    documented = documented_names(DOCS, SECTION)
+    missing_docs = sorted(exported - documented)
+    missing_export = sorted(documented - exported)
+    for name in missing_docs:
+        print(f"UNDOCUMENTED: repro.ot.{name} is exported but absent from "
+              f"docs/api.md '{SECTION}' section")
+    for name in missing_export:
+        print(f"UNEXPORTED: docs/api.md documents repro.ot.{name} but "
+              f"__all__ does not export it")
+    if missing_docs or missing_export:
+        print(f"api-surface gate: {len(missing_docs) + len(missing_export)} "
+              f"mismatch(es) between repro.ot.__all__ and docs/api.md")
+        return 1
+    print(f"api-surface gate: clean ({len(exported)} symbols in sync)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,11 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parents[1]
 
 DEFAULT_FILES = [
+    "src/repro/ot/__init__.py",
+    "src/repro/ot/problem.py",
+    "src/repro/ot/plan.py",
+    "src/repro/ot/solution.py",
+    "src/repro/ot/executor.py",
     "src/repro/core/regularizers.py",
     "src/repro/core/solver.py",
     "src/repro/core/sharded.py",
