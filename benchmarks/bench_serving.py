@@ -1,0 +1,148 @@
+"""Serving SLO benchmark: deterministic latency-proxy counters under load.
+
+  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke] [--out PATH]
+
+Replays three seeded traffic scenarios against :class:`OTServingEngine`
+and records DETERMINISTIC serving counters per scenario:
+
+  * ``steady``   — arrival rate below slot throughput, no faults: the
+    happy-path envelope (everything DONE, zero shed/failed),
+  * ``overload`` — 4x the steady arrival rate into a tiny pending queue
+    with mixed priorities and deadlines: exercises priority shedding and
+    queue-side deadline expiry,
+  * ``chaos``    — the overload mix plus every fault kind from
+    :mod:`repro.utils.faults` on a bounded budget: exercises quarantine,
+    the retry ladder and the slow-bucket path.
+
+Counters are tick-denominated latency proxies (``p50_ticks`` /
+``p99_ticks`` of submission->terminal), per-terminal-status totals,
+engine launches and retry attempts — all pure functions of the seeded
+trace and the solver's deterministic round counts, so
+``benchmarks/check_regression.py`` gates them against the committed
+``BENCH_serving.json`` (20% tolerance).  ``unterminated`` is gated
+EXACTLY at its committed value of 0: it counts requests that failed to
+reach a terminal status, i.e. violations of the serving lifecycle
+invariant.  No wall-clock is recorded — the point is the counter
+envelope, not machine speed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def _scenarios(smoke: bool):
+    """The benchmark matrix: (name, traffic spec, policy, fault specs)."""
+    from repro.serving.policy import ServingPolicy
+    from repro.serving.traffic import TrafficSpec
+    from repro.utils.faults import FaultSpec
+
+    n_req = 6 if smoke else 12
+    shapes = ((12, 20, 3), (16, 24, 4))
+    return [
+        (
+            "steady",
+            TrafficSpec(num_requests=n_req, arrival_rate=1.0, seed=7,
+                        shapes=shapes),
+            ServingPolicy(),
+            (),
+        ),
+        (
+            "overload",
+            TrafficSpec(num_requests=n_req, arrival_rate=4.0, seed=7,
+                        shapes=shapes, deadline=4, deadline_fraction=0.5,
+                        priorities=(0, 1, 2)),
+            ServingPolicy(max_pending=3),
+            (),
+        ),
+        (
+            "chaos",
+            TrafficSpec(num_requests=n_req, arrival_rate=4.0, seed=7,
+                        shapes=shapes, deadline=6, deadline_fraction=0.5,
+                        priorities=(0, 1, 2)),
+            ServingPolicy(max_pending=4, max_attempts=3),
+            (
+                FaultSpec("nan_cost", count=2),
+                FaultSpec("lbfgs_fail", count=1, after_tick=1),
+                FaultSpec("admit_fail", count=2),
+                FaultSpec("slow_bucket", count=2, after_tick=2),
+            ),
+        ),
+    ]
+
+
+def _run_scenario(name, spec, policy, fault_specs) -> dict:
+    import numpy as np
+
+    from repro.core.lbfgs import LbfgsOptions
+    from repro.core.regularizers import GroupSparseReg
+    from repro.core.solver import SolveOptions
+    from repro.serving.ot_engine import OTServingEngine
+    from repro.serving.traffic import drive, make_trace
+    from repro.utils.faults import injected
+
+    opts = SolveOptions(grad_impl="screened",
+                        lbfgs=LbfgsOptions(max_iters=150))
+    engine = OTServingEngine(GroupSparseReg.from_rho(1.0, 0.6), opts,
+                             max_batch=2, policy=policy)
+    trace = make_trace(spec)
+    with injected(*fault_specs):
+        done = drive(engine, trace, max_ticks=1000)
+
+    stats = engine.stats()
+    ticks = sorted(r.ticks_in_flight for r in done
+                   if r.ticks_in_flight is not None)
+    pct = lambda q: int(np.percentile(ticks, q)) if ticks else 0
+    counters = {
+        "submitted": stats["submitted"],
+        "done": stats["status"]["DONE"],
+        "failed": stats["status"]["FAILED"],
+        "shed": stats["status"]["SHED"],
+        "deadline_exceeded": stats["status"]["DEADLINE_EXCEEDED"],
+        # the lifecycle invariant: every submitted request must have come
+        # back terminal.  Gated EXACTLY at 0 by check_regression.py.
+        "unterminated": spec.num_requests - len(done),
+        "p50_ticks": pct(50),
+        "p99_ticks": pct(99),
+        "ticks": stats["ticks"],
+        "launches": stats["launches"],
+        "retry_attempts": stats["retry_attempts"],
+        "evictions": stats["evictions"],
+    }
+    return {"scenario": name, "config": spec.config(),
+            "policy": policy.config(), "counters": counters,
+            "smoke": None}          # filled by main(): gate replays same mode
+
+
+def main(smoke: bool = False, out: str = "BENCH_serving.json"):
+    """Run the scenario matrix; write ``out`` unless None; return rows."""
+    rows = []
+    for name, spec, policy, fault_specs in _scenarios(smoke):
+        row = _run_scenario(name, spec, policy, fault_specs)
+        row["smoke"] = bool(smoke)
+        c = row["counters"]
+        print(f"[{name:9s}] done={c['done']} failed={c['failed']} "
+              f"shed={c['shed']} deadline={c['deadline_exceeded']} "
+              f"unterminated={c['unterminated']} p50={c['p50_ticks']} "
+              f"p99={c['p99_ticks']} launches={c['launches']} "
+              f"retries={c['retry_attempts']}")
+        rows.append(row)
+    if out is not None:
+        from benchmarks.bench_io import write_bench_json
+
+        write_bench_json(out, rows)
+        print(f"wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces (CI bench job)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out)

@@ -19,6 +19,13 @@ exact invariants — ``launches`` (a sharded solve is ONE program) and
 ``bitwise_mismatches`` (sharded == unsharded per problem), which must
 match the baseline exactly regardless of tolerance.
 
+The serving baseline (``BENCH_serving.json``, from
+``benchmarks/bench_serving.py``) gates the SLO counters of three seeded
+traffic scenarios (steady / overload / chaos): terminal-status totals,
+tick-denominated latency percentiles, launches and retry attempts within
+tolerance, plus one exact invariant — ``unterminated`` (requests that
+never reached a terminal status) must stay at its committed value of 0.
+
 Exit code 0 = clean, 1 = regression (or unreadable/mismatched baseline).
 """
 from __future__ import annotations
@@ -97,10 +104,39 @@ def compare_sharded(baseline_rows, fresh_rows, tolerance: float):
             yield key, f, old, new, ok
 
 
+# serving counters that must match the baseline EXACTLY: ``unterminated``
+# counts lifecycle-invariant violations (a request that never reached a
+# terminal status), which no tolerance can excuse
+SERVING_EXACT = ("unterminated",)
+
+
+def _serving_key(row: dict) -> str:
+    return str(row.get("scenario"))
+
+
+def compare_serving(baseline_rows, fresh_rows, tolerance: float):
+    """Yield (key, field, old, new, ok) for every serving counter."""
+    fresh_by_key = {_serving_key(r): r for r in fresh_rows}
+    for row in baseline_rows:
+        key = _serving_key(row)
+        fresh = fresh_by_key.get(key)
+        if fresh is None:
+            yield key, "<row>", "present", "missing", False
+            continue
+        for f, old in row.get("counters", {}).items():
+            new = fresh.get("counters", {}).get(f)
+            if f in SERVING_EXACT:
+                ok = new == old
+            else:
+                ok = new is not None and _within(old, new, tolerance)
+            yield key, f, old, new, ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_kernels.json")
     ap.add_argument("--sharded-baseline", default="BENCH_sharded.json")
+    ap.add_argument("--serving-baseline", default="BENCH_serving.json")
     ap.add_argument("--tolerance", type=float, default=0.20)
     args = ap.parse_args()
 
@@ -166,6 +202,33 @@ def main() -> int:
     ):
         status = "ok" if ok else "REGRESSION"
         print(f"  [{status}] sharded={key} {field}: {old} -> {new}")
+        if not ok:
+            failures.append((key, field, old, new))
+
+    # serving SLO counters (deterministic seeded traffic, in-process)
+    try:
+        serving_base, pver = read_bench_json(args.serving_baseline)
+    except (OSError, ValueError) as e:
+        print(f"REGRESSION GATE: cannot read serving baseline "
+              f"{args.serving_baseline}: {e}")
+        return 1
+    if not serving_base:
+        print("REGRESSION GATE: serving baseline has no rows")
+        return 1
+    head = serving_base[0]
+    print(f"serving baseline: {args.serving_baseline} (schema_version={pver}, "
+          f"{len(serving_base)} scenarios, smoke={head.get('smoke', False)})")
+
+    from benchmarks import bench_serving
+
+    fresh_serving = bench_serving.main(
+        smoke=bool(head.get("smoke", False)), out=None
+    )
+    for key, field, old, new, ok in compare_serving(
+        serving_base, fresh_serving, args.tolerance
+    ):
+        status = "ok" if ok else "REGRESSION"
+        print(f"  [{status}] serving={key} {field}: {old} -> {new}")
         if not ok:
             failures.append((key, field, old, new))
 

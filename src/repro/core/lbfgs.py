@@ -174,7 +174,11 @@ def init_state_batched(
         rho=z((B, h), x0.dtype),
         head=z((B,), jnp.int32), count=z((B,), jnp.int32),
         iter=z((B,), jnp.int32), n_evals=jnp.ones((B,), jnp.int32),
-        converged=z((B,), bool), failed=z((B,), bool),
+        # a non-finite objective at the init point means the inputs are
+        # poisoned (NaN/inf cost or marginal): flag failure immediately so
+        # the problem never runs a round ("never finished" is observable
+        # as failed with zero rounds); finite problems are unaffected
+        converged=z((B,), bool), failed=~jnp.isfinite(f0),
     )
 
 
@@ -341,8 +345,17 @@ def step_batched(
     frel = jnp.abs(f_new - state.f) / jnp.maximum(jnp.abs(state.f), 1.0)
     converged = jnp.logical_or(gnorm <= opts.gtol, frel <= opts.ftol)
 
-    # on line-search failure keep the old point but flag failure
-    keep = ls_fail
+    # fail fast on a non-finite objective (poisoned inputs): the NaN can
+    # never satisfy Wolfe or convergence tests, so without this flag the
+    # problem would burn its full line-search budget every iteration and
+    # still end up failed.  For finite objectives this is a no-op, so
+    # healthy solves stay bitwise-identical.
+    nonfinite = ~jnp.isfinite(f_new)
+    converged = jnp.logical_and(converged, ~nonfinite)
+
+    # on line-search failure (or a non-finite objective) keep the old
+    # point but flag failure
+    keep = jnp.logical_or(ls_fail, nonfinite)
     return LbfgsState(
         x=jnp.where(keep[:, None], state.x, x_new),
         f=jnp.where(keep, state.f, f_new),
@@ -351,7 +364,7 @@ def step_batched(
         iter=state.iter + 1,
         n_evals=n_evals,
         converged=jnp.logical_or(state.converged, converged),
-        failed=jnp.logical_or(state.failed, ls_fail),
+        failed=jnp.logical_or(state.failed, keep),
     )
 
 

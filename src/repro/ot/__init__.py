@@ -25,11 +25,12 @@ package).
 """
 from repro.ot.executor import Executor, Stream, compile, solve
 from repro.ot.plan import ExecutionPlan
-from repro.ot.problem import Problem
+from repro.ot.problem import Problem, SubmitOptions
 from repro.ot.solution import Solution
 
 __all__ = [
     "Problem",
+    "SubmitOptions",
     "ExecutionPlan",
     "Executor",
     "Stream",

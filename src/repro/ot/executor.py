@@ -38,6 +38,7 @@ from repro.core.regularizers import Regularizer
 from repro.ot.plan import ExecutionPlan
 from repro.ot.problem import Problem
 from repro.ot.solution import Solution, build_solution
+from repro.serving.policy import TERMINAL_STATUSES
 
 
 class _Prepared(NamedTuple):
@@ -128,6 +129,8 @@ class Executor:
         self._opts = plan.solve_options()
         self._counters = {
             "launches": 0, "solves": 0, "problems_solved": 0, "rounds_total": 0,
+            "retry_attempts": 0,
+            "status": {s.value: 0 for s in TERMINAL_STATUSES},
         }
 
     # -- introspection --------------------------------------------------------
@@ -165,15 +168,29 @@ class Executor:
             ``launches`` — host->device program launches issued by this
             executor; ``solves`` — ``solve``/``solve_many``/``stream``
             completions; ``problems_solved`` — problems across them;
-            ``rounds_total`` — Algorithm-1 rounds summed over problems.
-            Concurrent executors never share this state (the legacy
-            module-level ``solver.dispatch_count`` keeps aggregating
-            process-wide for back-compat).
+            ``rounds_total`` — Algorithm-1 rounds summed over problems;
+            ``status`` — per-terminal-status problem counts using the
+            serving state machine's vocabulary (an executor only ever
+            produces ``DONE`` — converged, or retired at the round cap —
+            and ``FAILED`` — the L-BFGS failure flag or a non-finite
+            objective; ``SHED`` / ``DEADLINE_EXCEEDED`` need the serving
+            engine's admission queue and are always 0 here, kept so the
+            two stats dicts share one schema); ``retry_attempts`` —
+            always 0 here, same schema note (retries are the engine's
+            quarantine ladder).  Concurrent executors never share this
+            state (the legacy module-level ``solver.dispatch_count``
+            keeps aggregating process-wide for back-compat).
         """
-        return dict(self._counters)
+        out = dict(self._counters)
+        out["status"] = dict(self._counters["status"])
+        return out
 
     def describe(self, result=None) -> str:
         """Geometry/backend diagnostic block (see ``solver.describe``).
+
+        Ends with this executor's lifetime health line: per-terminal-
+        status problem counts (DONE / FAILED) and retry totals, in the
+        same vocabulary :meth:`OTServingEngine.describe` uses.
 
         Parameters
         ----------
@@ -182,7 +199,14 @@ class Executor:
         """
         if isinstance(result, Solution):
             result = result.result
-        return slv.describe(self._spec, self._n, self._reg, self._opts, result)
+        base = slv.describe(self._spec, self._n, self._reg, self._opts, result)
+        st = self._counters["status"]
+        return (
+            f"{base}\n"
+            f"health:   done={st['DONE']} failed={st['FAILED']} "
+            f"retries={self._counters['retry_attempts']} "
+            f"solves={self._counters['solves']}"
+        )
 
     # -- launch bookkeeping ---------------------------------------------------
     def _launch(self, fn, *args):
@@ -191,11 +215,16 @@ class Executor:
         slv._DISPATCHES["count"] += 1
         return fn(*args)
 
-    def _record(self, rounds) -> None:
+    def _record(self, rounds, failed=None) -> None:
         self._counters["solves"] += 1
         n = int(np.size(rounds))
         self._counters["problems_solved"] += n
         self._counters["rounds_total"] += int(np.sum(np.asarray(rounds)))
+        # terminal-status split: the L-BFGS failed flag (which the solver
+        # also raises on a non-finite objective) is FAILED, all else DONE
+        nf = int(np.sum(np.asarray(failed))) if failed is not None else 0
+        self._counters["status"]["FAILED"] += nf
+        self._counters["status"]["DONE"] += n - nf
 
     # -- problem lowering -----------------------------------------------------
     def _prepare(self, problem: Problem) -> _Prepared:
@@ -346,7 +375,7 @@ class Executor:
             jnp.asarray(p.C), jnp.asarray(p.a), jnp.asarray(p.b),
             p.spec, self._reg, self._opts, self._launch,
         )
-        self._record(result.rounds)
+        self._record(result.rounds, failed=result.lbfgs_state.failed)
         return build_solution(result, self._reg, p.C, p.spec, p.perm, p.n)
 
     def solve_many(self, problems: Sequence[Problem]) -> List[Solution]:
@@ -386,7 +415,7 @@ class Executor:
             lb, scr, rounds, stats = self._solve_padded_batch(
                 C, a, b, row_mask, sqrt_g
             )
-        self._record(rounds)
+        self._record(rounds, failed=lb.failed)
         return self._wrap_batch(
             preps, C_host, self._as_batch_result(lb, scr, rounds, stats)
         )
@@ -500,6 +529,13 @@ class Stream:
             "alive": int(np.sum(~conv & ~failed)),
             "converged": conv,
             "failed": failed,
+            # per-problem lifecycle view, in the serving state machine's
+            # vocabulary (FAILED wins over converged: a slot whose L-BFGS
+            # failed is quarantine-bound even if a stale converged bit set)
+            "status": [
+                "FAILED" if f else ("DONE" if c else "RUNNING")
+                for c, f in zip(conv, failed)
+            ],
             "rounds": np.asarray(self._state.rounds)[: self._B],
             "stats": np.asarray(self._state.stats)[: self._B],
         }
@@ -516,7 +552,10 @@ class Stream:
             return
         self._recorded = True
         if self._B:                    # an empty stream did no work to count
-            self._ex._record(np.asarray(self._state.rounds)[: self._B])
+            self._ex._record(
+                np.asarray(self._state.rounds)[: self._B],
+                failed=np.asarray(self._state.lb.failed)[: self._B],
+            )
 
     def _batch_result(self) -> slv.BatchOTResult:
         cut = lambda t: jax.tree_util.tree_map(lambda v: v[: self._B], t)

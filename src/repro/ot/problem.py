@@ -58,6 +58,44 @@ class PaddedArrays(NamedTuple):
     perm: np.ndarray
 
 
+@dataclasses.dataclass(frozen=True)
+class SubmitOptions:
+    """Per-request serving SLOs a :class:`Problem` can carry.
+
+    The solver layers ignore these; the serving engine
+    (:class:`repro.serving.ot_engine.OTServingEngine`) reads them at
+    submission — they are the declarative form of the engine's
+    ``submit(problem, deadline=..., priority=...)`` keywords, so a
+    Problem can travel with its SLO through fixtures and request wires.
+
+    Parameters
+    ----------
+    deadline : int, optional
+        Tick budget: the request must reach a terminal status within
+        this many engine ticks of submission or it is retired as
+        ``DEADLINE_EXCEEDED``.  ``None`` = no deadline.
+    priority : int
+        Priority class; higher-priority requests are admitted first and
+        shed last under overload (see
+        :class:`repro.serving.policy.ServingPolicy`).
+    """
+
+    deadline: Optional[int] = None
+    priority: int = 0
+
+    def __post_init__(self):
+        if self.deadline is not None and int(self.deadline) < 1:
+            raise ValueError(
+                f"deadline must be >= 1 ticks (or None), got {self.deadline}"
+            )
+        if not isinstance(self.priority, int):
+            raise ValueError(f"priority must be an int, got {self.priority!r}")
+
+    def config(self) -> dict:
+        """JSON-able description; ``SubmitOptions(**cfg)`` inverts it."""
+        return {"deadline": self.deadline, "priority": self.priority}
+
+
 def _opt_array(x, dtype=None) -> Optional[np.ndarray]:
     if x is None:
         return None
@@ -100,6 +138,9 @@ class Problem:
         Samples mode only: divide the cost by its max (paper pipeline).
     pad_to : int
         Group-size padding granularity for the derived layout.
+    submit : SubmitOptions, optional
+        Serving SLOs (deadline in ticks, priority class); ignored by the
+        solver layers, consumed by the serving engine at submission.
     """
 
     reg: Regularizer
@@ -112,6 +153,7 @@ class Problem:
     spec: Optional[G.GroupSpec] = None
     normalize_cost: bool = True
     pad_to: int = 8
+    submit: Optional[SubmitOptions] = None
 
     def __post_init__(self):
         for name in ("C", "labels", "X_S", "X_T", "a", "b"):
@@ -197,6 +239,21 @@ class Problem:
             v = getattr(self, name)
             if v is not None and np.any(np.asarray(v) < 0):
                 raise ValueError(f"marginal {name} has negative entries")
+        # non-finite inputs must fail HERE, with a nameable field — not
+        # flow into the kernels and surface as a silent NaN objective (or
+        # poison a serving bucket).  Admission-time validation is the
+        # first rung of the serving engine's failure quarantine.
+        for name in ("C", "X_S", "X_T", "a", "b"):
+            v = getattr(self, name)
+            if v is not None and not np.all(np.isfinite(v)):
+                raise ValueError(
+                    f"{name} contains non-finite entries (NaN or inf); "
+                    "refusing to construct a Problem that cannot be solved"
+                )
+        if self.submit is not None and not isinstance(self.submit, SubmitOptions):
+            raise ValueError(
+                f"submit must be a SubmitOptions, got {type(self.submit).__name__}"
+            )
         # per-group regularizer parameters must fit THIS problem's layout
         self.reg.mu_vec(self.group_spec().num_groups)
 
@@ -306,6 +363,8 @@ class Problem:
                 "sizes": list(self.spec.sizes),
                 "m": self.spec.m,
             }
+        if self.submit is not None:
+            cfg["submit"] = self.submit.config()
         return cfg
 
     @staticmethod
@@ -314,6 +373,9 @@ class Problem:
         cfg = dict(cfg)
         cfg.pop("mode", None)
         reg = reg_from_config(cfg.pop("reg"))
+        submit = cfg.pop("submit", None)
+        if submit is not None:
+            submit = SubmitOptions(**submit)
         spec = cfg.pop("spec", None)
         if spec is not None:
             spec = G.GroupSpec(
@@ -336,7 +398,7 @@ class Problem:
             if name in cfg:
                 dtype = np.dtype(dtypes[name]) if name in dtypes else default
                 arrays[name] = np.asarray(cfg.pop(name), dtype)
-        return Problem(reg=reg, spec=spec, **arrays, **cfg)
+        return Problem(reg=reg, spec=spec, submit=submit, **arrays, **cfg)
 
     def __eq__(self, other) -> bool:
         """Field-wise equality (arrays compared by value)."""

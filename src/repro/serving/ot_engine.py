@@ -22,9 +22,39 @@ static shapes, slot recycling):
     own screening state and its own compact tile schedule, and the only
     cross-device movement is the engine's read of the ``(S,)`` converged/
     failed flags at the round boundary,
-  * finished slots (converged / failed / round cap) are retired: the
-    request gets its objective value and its primal plan un-padded back
-    to the caller's row order, and the slot is recycled.
+  * finished slots (converged / round cap) are retired: the request gets
+    its objective value and its primal plan un-padded back to the
+    caller's row order, and the slot is recycled.
+
+On top of the batching machinery sits the ROBUSTNESS layer (this is what
+turns "an engine" into "a service"; knobs in
+:class:`repro.serving.policy.ServingPolicy`):
+
+  * **lifecycle**: every request moves ``QUEUED -> RUNNING ->`` exactly
+    one terminal :class:`~repro.serving.policy.RequestStatus` (``DONE`` /
+    ``FAILED`` / ``SHED`` / ``DEADLINE_EXCEEDED``) — nothing is ever
+    silently dropped or left hanging,
+  * **SLOs**: requests carry an optional deadline (in engine ticks) and a
+    priority class (``repro.ot.SubmitOptions``, or ``submit()`` /
+    ``enqueue()`` keywords); deadlines are enforced both while queued and
+    mid-flight,
+  * **admission control**: ``enqueue()`` feeds a bounded priority queue;
+    overflow sheds the lowest-priority entries, and geometry beyond the
+    policy's limits is shed at submission (it could never be admitted),
+  * **failure quarantine**: inputs are validated at admission
+    (``Problem`` construction rejects non-finite costs/marginals);
+    non-finite duals/objectives and L-BFGS failures are detected per slot
+    at the round boundary and walked down a bounded retry ladder
+    (in-slot damped restart -> dense-grid backend -> CPU baseline) with
+    per-request attempt accounting; neighbours of a quarantined slot are
+    preserved bit-for-bit (the same ``where_state`` masked merge that
+    protects them during admission),
+  * **stall guard + idle eviction**: ``run()`` sheds work it can prove
+    will never be admitted instead of looping forever, and buckets that
+    sit empty are evicted so the bucket dict cannot grow without bound.
+
+Chaos testing hooks into :mod:`repro.utils.faults` — with an empty
+registry (production) every hook is one boolean check.
 
 Empty slots hold a dummy problem (PAD_COST costs, zero marginals) whose
 gradient is identically zero, so they converge at initialization and ride
@@ -54,6 +84,13 @@ from repro.core.dual import DualProblem, plan_from_duals
 from repro.core.lbfgs import where_state
 from repro.core.regularizers import Regularizer
 from repro.ot.problem import Problem
+from repro.serving.policy import (
+    PendingQueue,
+    RequestStatus,
+    ServingPolicy,
+    TERMINAL_STATUSES,
+)
+from repro.utils import faults
 from repro.utils.logging import get_logger
 
 log = get_logger("ot_serving")
@@ -89,9 +126,20 @@ class OTRequest:
     problem : repro.ot.Problem, optional
         The declarative payload; carries its own regularizer, marginals
         and group layout (``reg`` / ``C`` / ``labels`` are then unused).
+    deadline : int, optional
+        SLO: the request must reach a terminal status within this many
+        engine ticks of submission, or it is retired
+        ``DEADLINE_EXCEEDED`` (queued or mid-flight).  ``None`` defers to
+        the Problem's :class:`~repro.ot.problem.SubmitOptions`, then the
+        policy default.
+    priority : int
+        Priority class: higher admits first and sheds last under
+        overload.
 
     Attributes
     ----------
+    status : RequestStatus
+        Lifecycle state; ends in exactly one terminal status.
     value : float or None
         Dual objective at convergence (filled at retirement).
     plan : np.ndarray or None
@@ -100,9 +148,18 @@ class OTRequest:
     rounds : int
         Algorithm-1 rounds the solve ran.
     converged : bool
-        Whether the solver converged (vs. failed / hit the round cap).
+        Whether the solver converged (vs. retired at the round cap).
     done : bool
-        Set when the request has been retired.
+        Set when the request has reached a terminal status.
+    attempts : int
+        Solve attempts consumed (1 initial + retry-ladder rungs).
+    route : str or None
+        Which path produced the result: ``'slot'`` (the batched engine),
+        ``'restart'``, ``'dense'`` or ``'cpu'`` (fallback rungs).
+    error : str or None
+        Failure / degradation detail (``None`` on a clean ``DONE``).
+    submitted_tick / retired_tick : int or None
+        Engine clock stamps bracketing the request's lifetime.
     """
 
     rid: int
@@ -113,17 +170,44 @@ class OTRequest:
     reg: Optional[Regularizer] = None  # per-request regularizer (default:
     #   the engine's; distinct regularizers go to distinct buckets)
     problem: Optional[Problem] = None  # declarative payload (preferred)
+    # SLOs:
+    deadline: Optional[int] = None     # tick budget (None = policy default)
+    priority: int = 0                  # higher = kept longer under overload
     # filled at retirement:
     value: Optional[float] = None      # dual objective at convergence
     plan: Optional[np.ndarray] = None  # (m, n) primal plan, original order
     rounds: int = 0
     converged: bool = False
     done: bool = False
+    # lifecycle bookkeeping:
+    status: RequestStatus = RequestStatus.QUEUED
+    attempts: int = 0                  # solve attempts consumed
+    route: Optional[str] = None        # 'slot' | 'restart' | 'dense' | 'cpu'
+    error: Optional[str] = None        # failure / degradation detail
+    submitted_tick: Optional[int] = None
+    retired_tick: Optional[int] = None
+    _rung: int = 0                     # next fallback-ladder index
 
     @staticmethod
     def from_problem(rid: int, problem: Problem) -> "OTRequest":
-        """Wrap a declarative :class:`repro.ot.Problem` as a request."""
-        return OTRequest(rid=rid, problem=problem)
+        """Wrap a declarative :class:`repro.ot.Problem` as a request.
+
+        The Problem's :class:`~repro.ot.problem.SubmitOptions` (if any)
+        become the request's deadline and priority.
+        """
+        sub = problem.submit
+        return OTRequest(
+            rid=rid, problem=problem,
+            deadline=sub.deadline if sub is not None else None,
+            priority=sub.priority if sub is not None else 0,
+        )
+
+    @property
+    def ticks_in_flight(self) -> Optional[int]:
+        """Ticks from submission to retirement (the latency proxy)."""
+        if self.submitted_tick is None or self.retired_tick is None:
+            return None
+        return self.retired_tick - self.submitted_tick
 
 
 @jax.jit
@@ -146,7 +230,7 @@ class _Bucket:
 
     def __init__(self, key: Tuple, slots_per_device: int,
                  reg: Regularizer, opts: slv.SolveOptions, dtype,
-                 mesh=None):
+                 mesh=None, counters: Optional[dict] = None):
         L, g_pad, n_pad = key[:3]
         self.key = key
         self.mesh = mesh
@@ -166,11 +250,19 @@ class _Bucket:
         self.row_mask = np.zeros((S, m_pad), bool)
         self.sqrt_g = np.zeros((S, L), dtype)
         self.state: Optional[slv.BatchSolveState] = None
+        self.idle_ticks = 0             # ticks with zero occupied slots
+        # engine-owned counters (launch accounting survives eviction)
+        self._counters = counters if counters is not None else {"launches": 0}
         # device-resident copies of the slot arrays + (pallas) the padded
         # problem, rebuilt only when a slot's contents change — a tick must
         # not re-upload (S, m_pad, n_pad) buffers or re-pad C every round
         self._device: Optional[tuple] = None
         self._padded = None
+
+    def _launch(self, fn, *args):
+        """One jitted program launch, counted engine-wide."""
+        self._counters["launches"] = self._counters.get("launches", 0) + 1
+        return slv._launch(fn, *args)
 
     def slot_placement(self, slot: int) -> Tuple[int, int]:
         """Map a slot index to its ``(device, lane)`` coordinates.
@@ -254,12 +346,12 @@ class _Bucket:
         if self.mesh is not None:
             from repro.core import sharded as shd
 
-            return slv._launch(
+            return self._launch(
                 shd.init_batch_state_sharded,
                 C, a, b, row_mask, sqrt_g, self.prob, self.opts,
                 self.mesh, self._padded,
             )
-        return slv._launch(
+        return self._launch(
             slv.init_batch_state,
             C, a, b, row_mask, sqrt_g, self.prob, self.opts, self._padded,
         )
@@ -274,40 +366,92 @@ class _Bucket:
 
     # -- one engine tick -----------------------------------------------------
     def occupied(self) -> List[int]:
+        """Indices of slots currently holding a live request."""
         return [i for i, s in enumerate(self.slots) if s is not None]
 
-    def tick(self) -> List[OTRequest]:
-        """One fused solver round for all slots; returns retired requests."""
+    def tick(self, clock: int = 0) -> Tuple[List[OTRequest], List[Tuple[int, str]]]:
+        """One fused solver round for all slots.
+
+        Returns
+        -------
+        (done, bad) : tuple
+            ``done`` — requests retired healthy this round (converged, or
+            at the round cap), results filled in; ``bad`` — ``(slot,
+            reason)`` pairs the engine must quarantine (L-BFGS failure,
+            non-finite duals/objective, or an injected fault).
+        """
         active = self.occupied()
         if not active or self.state is None:
-            return []
+            return [], []
+        reg = faults.REGISTRY
+        chaos = reg.enabled()
+        if chaos and reg.fire("slow_bucket", bucket=self.key, tick=clock):
+            # simulated slow/hung bucket: the tick passes, requests age
+            # (deadlines keep counting) but no round runs
+            log.warning("bucket %s: injected slow tick %d", self.key, clock)
+            return [], []
         C, a, b, row_mask, sqrt_g = self._device_arrays()
         if self.mesh is not None:
             from repro.core import sharded as shd
 
-            self.state = slv._launch(
+            self.state = self._launch(
                 shd.batch_round_sharded,
                 self.state, C, a, b, row_mask, sqrt_g,
                 self.prob, self.opts, self.mesh, self._padded,
             )
         else:
-            self.state = slv._launch(
+            self.state = self._launch(
                 slv.batch_round,
                 self.state, C, a, b, row_mask, sqrt_g,
                 self.prob, self.opts, self._padded,
             )
         lb = self.state.lb
         # round-boundary gather: the only cross-device movement in a tick
-        # (a few bytes per device of converged/failed flags + round counts)
+        # (a few bytes per device of converged/failed/finite flags + round
+        # counts).  The finite check is the quarantine tripwire: NaN/inf
+        # duals or objectives must retire the offending slot, never ride
+        # into another round.
         conv = np.asarray(lb.converged)
         failed = np.asarray(lb.failed)
         rounds = np.asarray(self.state.rounds)
-        finished = []
+        finite = np.asarray(
+            jnp.logical_and(
+                jnp.all(jnp.isfinite(lb.x), axis=-1), jnp.isfinite(lb.f)
+            )
+        )
+        done: List[OTRequest] = []
+        bad: List[Tuple[int, str]] = []
         for i in active:
-            if not (conv[i] or failed[i] or rounds[i] >= self.opts.max_rounds):
-                continue
-            finished.append(self._retire(i, bool(conv[i]), int(rounds[i])))
-        return finished
+            rid = self.slots[i].rid
+            if chaos and reg.fire("lbfgs_fail", rid=rid, bucket=self.key,
+                                  tick=clock):
+                bad.append((i, "injected L-BFGS failure"))
+            elif not finite[i]:
+                bad.append((i, "non-finite duals/objective at round boundary"))
+            elif failed[i]:
+                bad.append((i, "L-BFGS line-search failure"))
+            elif conv[i] or rounds[i] >= self.opts.max_rounds:
+                done.append(self._retire(i, bool(conv[i]), int(rounds[i])))
+        return done, bad
+
+    def release(self, slot: int) -> Tuple[OTRequest, dict]:
+        """Vacate ``slot`` (no result recovery): recycle to the dummy problem.
+
+        The slot's arrays go back to the zero-gradient dummy, so the
+        in-flight neighbours are untouched (their state freezes through
+        the same masked merges as always).  Returns the evicted request
+        and its padding metadata.
+        """
+        req, meta = self.slots[slot], self._meta[slot]
+        self.slots[slot] = None
+        self._meta[slot] = None
+        self.C[slot] = G.PAD_COST
+        self.a[slot] = 0.0
+        self.b[slot] = 0.0
+        self.row_mask[slot] = False
+        self.sqrt_g[slot] = 0.0
+        self._device = None          # slot arrays changed: re-upload lazily
+        return req, meta
 
     def _retire(self, slot: int, converged: bool, rounds: int) -> OTRequest:
         req = self.slots[slot]
@@ -333,16 +477,8 @@ class _Bucket:
         req.plan = T
         req.rounds = rounds
         req.converged = converged
-        req.done = True
         # recycle: dummy problem (zero gradient) until the next admission
-        self.slots[slot] = None
-        self._meta[slot] = None
-        self.C[slot] = G.PAD_COST
-        self.a[slot] = 0.0
-        self.b[slot] = 0.0
-        self.row_mask[slot] = False
-        self.sqrt_g[slot] = 0.0
-        self._device = None          # slot arrays changed: re-upload lazily
+        self.release(slot)
         log.info("OT request %d finished (rounds=%d converged=%s)",
                  req.rid, rounds, converged)
         return req
@@ -363,6 +499,10 @@ class OTServingEngine:
     Algorithm-1 round in a single program launch per bucket; attached to a
     device mesh, that launch is a ``shard_map`` program with the slot axis
     split across devices (see :mod:`repro.core.sharded`).
+
+    The robustness layer (module docstring) guarantees every request ends
+    in exactly one terminal :class:`~repro.serving.policy.RequestStatus`;
+    health is observable through :meth:`stats` / :meth:`describe`.
 
     Parameters
     ----------
@@ -389,12 +529,15 @@ class OTServingEngine:
         sharded; when omitted the engine is single-device and its
         behavior (and results) are bit-for-bit those of the pre-mesh
         engine.
+    policy : ServingPolicy, optional
+        SLO / admission-control / quarantine knobs (see
+        :mod:`repro.serving.policy`).
 
     Examples
     --------
     >>> engine = OTServingEngine(GroupSparseReg.from_rho(1.0, 0.6))
     >>> done = engine.run([OTRequest(rid=0, C=C, labels=y)])
-    >>> done[0].value, done[0].plan.shape
+    >>> done[0].status, done[0].value, done[0].plan.shape
     """
 
     def __init__(
@@ -406,6 +549,7 @@ class OTServingEngine:
         pad_to: int = 8,
         dtype=np.float32,
         mesh=None,
+        policy: ServingPolicy = ServingPolicy(),
     ):
         self.reg = reg
         self.opts = opts
@@ -415,15 +559,24 @@ class OTServingEngine:
         self.dtype = dtype
         self.mesh = mesh
         self.num_devices = mesh.size if mesh is not None else 1
+        self.policy = policy
         self.buckets: Dict[Tuple, _Bucket] = {}
+        self.pending = PendingQueue(policy.max_pending)
+        self.clock = 0
         self._next_rid = 0
+        self._stats = {
+            "ticks": 0, "submitted": 0, "admitted": 0, "evictions": 0,
+            "retry_attempts": 0, "launches": 0,
+            "status": {s.value: 0 for s in TERMINAL_STATUSES},
+        }
 
     def _as_problem(self, req: OTRequest) -> Problem:
         """The request's declarative payload (lifting raw C + labels).
 
-        Construction validates shapes, marginals and the regularizer's
-        per-group parameters against the request's own group count BEFORE
-        any slot/bucket mutation — a malformed request is rejected here,
+        Construction validates shapes, marginals (non-negative AND
+        finite), costs (finite) and the regularizer's per-group
+        parameters against the request's own group count BEFORE any
+        slot/bucket mutation — a malformed request is rejected here,
         not from inside state init where it would poison a bucket.
         """
         if req.problem is not None:
@@ -463,27 +616,163 @@ class OTServingEngine:
         n_pad = -(-n // self.n_quant) * self.n_quant
         return (L, g_pad, n_pad, problem.reg)
 
-    def submit(self, problem: Problem, rid: Optional[int] = None) -> Optional[OTRequest]:
+    # -- lifecycle bookkeeping -------------------------------------------------
+    def _finish(self, req: OTRequest, status: RequestStatus,
+                error: Optional[str] = None) -> OTRequest:
+        """Move a request into its (single) terminal status."""
+        if req.status in TERMINAL_STATUSES:      # the invariant tripwire
+            log.error("request %d already terminal (%s); ignoring %s",
+                      req.rid, req.status.value, status.value)
+            return req
+        req.status = status
+        req.done = True
+        req.retired_tick = self.clock
+        if error is not None:
+            req.error = error
+        self._stats["status"][status.value] += 1
+        if status is not RequestStatus.DONE:
+            log.warning("OT request %d -> %s (%s)",
+                        req.rid, status.value, req.error)
+        return req
+
+    def _resolve_slos(self, req: OTRequest,
+                      deadline: Optional[int], priority: Optional[int]) -> None:
+        """Fill the request's SLO fields: kwargs > request > policy default."""
+        if deadline is not None:
+            req.deadline = deadline
+        elif req.deadline is None:
+            req.deadline = self.policy.default_deadline
+        if priority is not None:
+            req.priority = priority
+        elif req.priority == 0:
+            req.priority = self.policy.default_priority
+
+    def _wrap(self, r) -> OTRequest:
+        """Coerce a bare Problem into an engine-numbered OTRequest."""
+        if isinstance(r, Problem):
+            rid, self._next_rid = self._next_rid, self._next_rid + 1
+            return OTRequest.from_problem(rid, r)
+        return r
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, problem: Problem, rid: Optional[int] = None,
+               deadline: Optional[int] = None,
+               priority: Optional[int] = None) -> Optional[OTRequest]:
         """Admit a declarative :class:`repro.ot.Problem` directly.
 
         Parameters
         ----------
         problem : repro.ot.Problem
-            The problem to serve (carries its own regularizer/layout).
+            The problem to serve (carries its own regularizer/layout and
+            optionally its SLOs via ``Problem.submit``).
         rid : int, optional
             Request id; defaults to an engine-assigned sequence number.
+        deadline : int, optional
+            Tick budget override (else ``problem.submit``, else the
+            policy default).
+        priority : int, optional
+            Priority-class override (same precedence).
 
         Returns
         -------
         OTRequest or None
             The in-flight request handle, or None if the problem's bucket
-            is full (caller retries after a tick).
+            is full (caller retries after a tick, or uses
+            :meth:`enqueue` to let the engine queue it).
+
+        Raises
+        ------
+        ValueError
+            If the problem's padded geometry exceeds the policy's
+            ``max_groups`` / ``max_cols`` limits (it could never be
+            admitted, so "retry later" would be a lie).
         """
         if rid is None:
             rid = self._next_rid
             self._next_rid += 1
         req = OTRequest.from_problem(rid, problem)
+        self._resolve_slos(req, deadline, priority)
+        L, _, n_pad, _ = self._bucket_key(problem)
+        if not self.policy.within_limits(L, n_pad):
+            raise ValueError(
+                f"problem geometry (L={L}, n_pad={n_pad}) exceeds engine "
+                f"limits (max_groups={self.policy.max_groups}, "
+                f"max_cols={self.policy.max_cols})"
+            )
         return req if self.try_admit(req) else None
+
+    def enqueue(self, request, deadline: Optional[int] = None,
+                priority: Optional[int] = None) -> Tuple[OTRequest, List[OTRequest]]:
+        """Admission control: queue a request (or shed it, terminally).
+
+        Unlike :meth:`submit` — which only succeeds when a slot is free
+        right now — ``enqueue`` always disposes of the request: it either
+        joins the bounded pending queue (status ``QUEUED``; admitted by
+        :meth:`run` / :meth:`admit_pending` as slots free up), or it is
+        immediately shed/terminated:
+
+        * invalid payload (non-finite cost/marginals, bad shapes, bad
+          regularizer) -> ``FAILED`` at admission, engine untouched,
+        * geometry beyond the policy limits -> ``SHED`` (it can never be
+          admitted; queueing it would stall the engine),
+        * queue overflow -> the lowest-priority entry (possibly this
+          one) is shed.
+
+        Parameters
+        ----------
+        request : OTRequest or repro.ot.Problem
+            The work item; bare Problems are wrapped with engine-assigned
+            request ids.
+        deadline, priority : int, optional
+            SLO overrides (else the request's / Problem's own, else the
+            policy defaults).
+
+        Returns
+        -------
+        (request, shed) : tuple
+            The (wrapped) request handle, and the list of requests that
+            reached a terminal status during this call (queue overflow
+            victims, or the request itself if rejected/shed).
+        """
+        req = self._wrap(request)
+        if req.done:
+            raise ValueError(
+                f"request {req.rid} is already terminal ({req.status.value}); "
+                "reset value/done to resubmit it"
+            )
+        # a request may be reused after a manual reset (done=False): restart
+        # its lifecycle from scratch so stale terminal state cannot leak in
+        req.status = RequestStatus.QUEUED
+        req.attempts = 0
+        req.route = None
+        req.error = None
+        req.retired_tick = None
+        req._rung = 0
+        self._resolve_slos(req, deadline, priority)
+        req.submitted_tick = self.clock
+        req.status = RequestStatus.QUEUED
+        self._stats["submitted"] += 1
+        try:
+            problem = self._as_problem(req)
+        except ValueError as e:
+            self._finish(req, RequestStatus.FAILED,
+                         error=f"rejected at admission: {e}")
+            return req, [req]
+        L, _, n_pad, _ = self._bucket_key(problem)
+        if not self.policy.within_limits(L, n_pad):
+            self._finish(
+                req, RequestStatus.SHED,
+                error=f"geometry (L={L}, n_pad={n_pad}) exceeds engine limits "
+                      f"(max_groups={self.policy.max_groups}, "
+                      f"max_cols={self.policy.max_cols})",
+            )
+            return req, [req]
+        shed = self.pending.push(req)
+        for victim in shed:
+            self._finish(victim, RequestStatus.SHED,
+                         error="shed by admission control: pending queue "
+                               f"overflow (capacity {self.pending.capacity})")
+        return req, shed
 
     def try_admit(self, req: OTRequest) -> bool:
         """Admit into the request's bucket if a slot is free (no round run).
@@ -497,65 +786,345 @@ class OTServingEngine:
         -------
         bool
             True if a slot was free (the request is now in flight), False
-            if the bucket is full (caller retries after a tick).
+            if the bucket is full — or an ``admit_fail`` fault fired —
+            (caller retries after a tick).
         """
         problem = self._as_problem(req)
+        reg = faults.REGISTRY
+        if reg.enabled() and reg.fire("admit_fail", rid=req.rid,
+                                      tick=self.clock):
+            log.warning("request %d: injected admission failure", req.rid)
+            return False
         key = self._bucket_key(problem)
+        if not self.policy.within_limits(key[0], key[2]):
+            return False
         bucket = self.buckets.get(key)
         if bucket is None:
             bucket = _Bucket(key, self.max_batch, key[3], self.opts,
-                             self.dtype, mesh=self.mesh)
+                             self.dtype, mesh=self.mesh, counters=self._stats)
             self.buckets[key] = bucket
         slot = bucket.free_slot()
         if slot is None:
             return False
         bucket.admit(slot, req, problem)
+        if reg.enabled() and reg.fire("nan_cost", rid=req.rid,
+                                      bucket=bucket.key, tick=self.clock):
+            # corrupt AFTER admission validation: simulates in-flight data
+            # poisoning, the case the round-boundary tripwire must catch
+            bucket.C[slot, 0, :] = np.nan
+            bucket._device = None
+            log.warning("request %d: injected NaN cost in slot %d",
+                        req.rid, slot)
+        if req.submitted_tick is None:
+            # direct admission (submit / try_admit, no enqueue): stamp and
+            # count the submission here so admitted never exceeds submitted
+            req.submitted_tick = self.clock
+            self._stats["submitted"] += 1
+        if req.attempts == 0:
+            req.attempts = 1
+        req.status = RequestStatus.RUNNING
+        self._stats["admitted"] += 1
         new_mask = np.zeros((bucket.num_slots,), bool)
         new_mask[slot] = True
         bucket.refresh_state(new_mask)
         return True
 
+    def admit_pending(self) -> int:
+        """Admit as many pending requests as slots allow; returns the count.
+
+        Scans the whole queue in priority order, not just its head: a
+        full bucket at the front must not starve requests whose buckets
+        have free slots (no head-of-line blocking across buckets).
+        """
+        admitted = 0
+        for req in list(self.pending):
+            if self.try_admit(req):
+                self.pending.remove(req)
+                admitted += 1
+        return admitted
+
+    # -- failure quarantine ----------------------------------------------------
+    def _next_rung(self, req: OTRequest) -> Optional[str]:
+        ladder = self.policy.fallback_ladder
+        return ladder[req._rung] if req._rung < len(ladder) else None
+
+    def _quarantine(self, bucket: _Bucket, slot: int,
+                    reason: str) -> Optional[OTRequest]:
+        """Walk a failed slot down the retry ladder.
+
+        Returns the request if it reached a terminal status (FAILED, or
+        DONE via an off-slot fallback), or None if it was restarted
+        in-slot and is still in flight.  Either way the bucket's other
+        slots are untouched (state merges are masked per slot).
+        """
+        req = bucket.slots[slot]
+        log.warning("request %d quarantined in bucket %s slot %d: %s "
+                    "(attempt %d)", req.rid, bucket.key, slot, reason,
+                    req.attempts)
+        rung = self._next_rung(req)
+        if (rung == "restart" and req.attempts < self.policy.max_attempts):
+            # damped in-slot restart: zero duals, fresh snapshots, cleared
+            # L-BFGS history — a fresh solve of the same slot, through the
+            # same masked state merge admission uses (neighbours frozen)
+            req._rung += 1
+            req.attempts += 1
+            req.error = reason
+            self._stats["retry_attempts"] += 1
+            mask = np.zeros((bucket.num_slots,), bool)
+            mask[slot] = True
+            bucket.refresh_state(mask)
+            return None
+        bucket.release(slot)
+        return self._fallback(req, reason)
+
+    def _fallback(self, req: OTRequest, reason: str) -> OTRequest:
+        """Run the off-slot fallback rungs until success or exhaustion."""
+        problem = self._as_problem(req)
+        pa = problem.padded(self.dtype)
+        error = reason
+        while True:
+            rung = self._next_rung(req)
+            if rung is None or req.attempts >= self.policy.max_attempts:
+                return self._finish(
+                    req, RequestStatus.FAILED,
+                    error=f"fallback ladder exhausted after {req.attempts} "
+                          f"attempts; last error: {error}",
+                )
+            req._rung += 1
+            if rung == "restart":        # in-slot only; skip once off-slot
+                continue
+            req.attempts += 1
+            self._stats["retry_attempts"] += 1
+            try:
+                out = self._run_fallback(rung, problem, pa)
+            except Exception as e:       # a fallback must never crash serving
+                out = None
+                error = f"{rung} fallback raised {type(e).__name__}: {e}"
+            if out is None:
+                if not error.startswith(rung):
+                    error = f"{rung} fallback did not produce a finite solution"
+                log.warning("request %d: %s", req.rid, error)
+                continue
+            value, plan, rounds = out
+            req.value = value
+            req.plan = plan
+            if rounds is not None:
+                req.rounds = rounds
+            req.converged = True
+            req.route = rung
+            req.error = f"recovered via {rung} fallback after: {reason}"
+            log.info("request %d recovered via %s fallback", req.rid, rung)
+            return self._finish(req, RequestStatus.DONE)
+
+    def _run_fallback(self, rung: str, problem: Problem, pa):
+        """One fallback rung; returns (value, plan, rounds) or None."""
+        m, n = problem.num_source, problem.num_target
+        if rung == "dense":
+            # the unscreened origin backend: no screening state to poison,
+            # same device solver otherwise
+            opts = dataclasses.replace(self.opts, grad_impl="dense")
+            C = jnp.asarray(pa.C)
+            res = slv.solve_dual(C, jnp.asarray(pa.a), jnp.asarray(pa.b),
+                                 pa.spec, problem.reg, opts)
+            value = float(res.value)
+            if not (res.converged and np.isfinite(value)):
+                return None
+            T_pad = np.asarray(slv.recover_plan(res, C, pa.spec, problem.reg))
+            rounds = int(res.rounds)
+        elif rung == "cpu":
+            # last resort: the scipy f64 CPU baseline — a different
+            # optimizer on a different substrate
+            from repro.core import cpu_baseline
+
+            res = cpu_baseline.fast_solve(pa.C, pa.a, pa.b, pa.spec,
+                                          problem.reg)
+            value = float(res.value)
+            if not np.isfinite(value):
+                return None
+            prob = DualProblem(pa.spec.num_groups, pa.spec.group_size,
+                               int(pa.C.shape[1]), problem.reg)
+            T_pad = np.asarray(plan_from_duals(
+                jnp.asarray(res.alpha, self.dtype),
+                jnp.asarray(res.beta, self.dtype),
+                jnp.asarray(pa.C), prob,
+            ))
+            rounds = None
+        else:
+            raise ValueError(f"unknown fallback rung {rung!r}")
+        if not np.all(np.isfinite(T_pad)):
+            return None
+        T = np.zeros((m, n), T_pad.dtype)
+        real = pa.perm >= 0
+        T[pa.perm[real]] = T_pad[real][:, :n]
+        return value, T, rounds
+
+    # -- the tick --------------------------------------------------------------
+    def _deadline_expired(self, req: OTRequest) -> bool:
+        return (
+            req.deadline is not None
+            and req.submitted_tick is not None
+            and self.clock - req.submitted_tick >= req.deadline
+        )
+
     def tick(self) -> List[OTRequest]:
         """One fused solver round per active bucket; returns finished.
+
+        A tick advances the engine clock, runs one round per bucket,
+        retires healthy finishers, quarantines failing slots down the
+        retry ladder, expires deadlines (in-flight AND still-queued), and
+        evicts idle buckets.
 
         Returns
         -------
         list of OTRequest
-            Requests retired this round, with ``value`` / ``plan`` /
-            ``rounds`` / ``converged`` filled in.
+            Requests that reached a terminal status this tick, with
+            ``status`` / ``value`` / ``plan`` / ``rounds`` / ``error``
+            filled in as applicable.
         """
+        self.clock += 1
+        self._stats["ticks"] += 1
         finished: List[OTRequest] = []
+        for bucket in list(self.buckets.values()):
+            done, bad = bucket.tick(self.clock)
+            for req in done:
+                if req.route is None:
+                    req.route = "slot"
+                if not req.converged and req.error is None:
+                    req.error = "retired at max_rounds without convergence"
+                finished.append(self._finish(req, RequestStatus.DONE))
+            for slot, reason in bad:
+                out = self._quarantine(bucket, slot, reason)
+                if out is not None:
+                    finished.append(out)
+        # deadline sweep: mid-flight slots first, then the pending queue
         for bucket in self.buckets.values():
-            finished.extend(bucket.tick())
+            for slot in bucket.occupied():
+                req = bucket.slots[slot]
+                if self._deadline_expired(req):
+                    bucket.release(slot)
+                    finished.append(self._finish(
+                        req, RequestStatus.DEADLINE_EXCEEDED,
+                        error=f"deadline of {req.deadline} ticks expired "
+                              f"mid-flight after {req.rounds or 0} rounds",
+                    ))
+        for req in [r for r in self.pending if self._deadline_expired(r)]:
+            self.pending.remove(req)
+            finished.append(self._finish(
+                req, RequestStatus.DEADLINE_EXCEEDED,
+                error=f"deadline of {req.deadline} ticks expired while queued",
+            ))
+        # idle eviction: an empty bucket holds device buffers and host
+        # mirrors; traffic mixes shift, so the dict must not grow forever
+        for key in list(self.buckets):
+            bucket = self.buckets[key]
+            if bucket.occupied():
+                bucket.idle_ticks = 0
+            else:
+                bucket.idle_ticks += 1
+                if bucket.idle_ticks > self.policy.idle_evict_after:
+                    del self.buckets[key]
+                    self._stats["evictions"] += 1
+                    log.info("evicted idle bucket %s", key)
         return finished
+
+    def _in_flight(self) -> int:
+        return sum(len(b.occupied()) for b in self.buckets.values())
 
     def run(self, requests: List[OTRequest]) -> List[OTRequest]:
         """Drain a request list to completion (admit greedily, tick, retire).
 
-        Admission scans the whole pending list, not just its head: a full
-        bucket at the front must not starve requests whose buckets have
-        free slots (no head-of-line blocking across buckets).
+        Every submitted request comes back with exactly one terminal
+        status; ``run`` NEVER hangs — two stall guards bound it:
+
+        * nothing in flight + no admission progress for
+          ``policy.stall_passes`` consecutive passes -> the remaining
+          pending requests are shed (no future pass could admit them:
+          admission is deterministic in the engine state, which is not
+          changing),
+        * in-flight slots frozen (e.g. a fault-stalled bucket) for
+          ``policy.stall_passes + opts.max_rounds`` passes -> the frozen
+          slots are failed and the queue shed (safety valve: a healthy
+          slot retires within ``max_rounds`` ticks by construction).
 
         Parameters
         ----------
         requests : list of OTRequest or repro.ot.Problem
-            The workload; consumed in order subject to slot availability.
-            Bare Problems are wrapped with engine-assigned request ids.
+            The workload; consumed in priority order subject to slot
+            availability.  Bare Problems are wrapped with engine-assigned
+            request ids.
 
         Returns
         -------
         list of OTRequest
-            All requests, each retired (``done=True``), in completion
-            order.
+            All requests, each terminal, in completion order.
         """
-        pending = []
-        for r in requests:
-            if isinstance(r, Problem):
-                rid, self._next_rid = self._next_rid, self._next_rid + 1
-                r = OTRequest.from_problem(rid, r)
-            pending.append(r)
         done: List[OTRequest] = []
-        while pending or any(b.occupied() for b in self.buckets.values()):
-            pending = [req for req in pending if not self.try_admit(req)]
-            done.extend(self.tick())
+        for r in requests:
+            _, shed = self.enqueue(r)
+            done.extend(shed)
+        stalled = 0
+        while len(self.pending) or self._in_flight():
+            admitted = self.admit_pending()
+            retired = self.tick()
+            done.extend(retired)
+            stalled = 0 if (admitted or retired) else stalled + 1
+            if stalled >= self.policy.stall_passes and not self._in_flight():
+                for req in self.pending.drain():
+                    done.append(self._finish(
+                        req, RequestStatus.SHED,
+                        error="stall guard: no admission progress and "
+                              "nothing in flight",
+                    ))
+            elif stalled >= self.policy.stall_passes + self.opts.max_rounds:
+                for bucket in list(self.buckets.values()):
+                    for slot in bucket.occupied():
+                        req, _ = bucket.release(slot)
+                        done.append(self._finish(
+                            req, RequestStatus.FAILED,
+                            error="stall guard: bucket made no progress",
+                        ))
+                for req in self.pending.drain():
+                    done.append(self._finish(
+                        req, RequestStatus.SHED,
+                        error="stall guard: engine frozen",
+                    ))
         return done
+
+    # -- observability ---------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving-health counters (cumulative over the engine's lifetime).
+
+        Returns
+        -------
+        dict
+            ``ticks`` / ``submitted`` / ``admitted`` / ``evictions`` /
+            ``retry_attempts`` / ``launches`` scalars, a ``status`` dict
+            with one count per terminal
+            :class:`~repro.serving.policy.RequestStatus`, and the live
+            ``pending`` / ``in_flight`` / ``buckets`` gauges.
+        """
+        out = dict(self._stats)
+        out["status"] = dict(self._stats["status"])
+        out["pending"] = len(self.pending)
+        out["in_flight"] = self._in_flight()
+        out["buckets"] = len(self.buckets)
+        return out
+
+    def describe(self) -> str:
+        """Human-readable serving-health block (stats + policy + buckets)."""
+        s = self.stats()
+        st = s["status"]
+        lines = [
+            f"engine:   clock={self.clock} buckets={s['buckets']} "
+            f"pending={s['pending']} in_flight={s['in_flight']}",
+            f"policy:   max_pending={self.policy.max_pending} "
+            f"deadline={self.policy.default_deadline} "
+            f"max_attempts={self.policy.max_attempts} "
+            f"ladder={'/'.join(self.policy.fallback_ladder)}",
+            f"terminal: done={st['DONE']} failed={st['FAILED']} "
+            f"shed={st['SHED']} deadline={st['DEADLINE_EXCEEDED']}",
+            f"work:     admitted={s['admitted']}/{s['submitted']} "
+            f"retries={s['retry_attempts']} launches={s['launches']} "
+            f"evictions={s['evictions']}",
+        ]
+        return "\n".join(lines)

@@ -408,6 +408,8 @@ def test_executor_stats_are_isolated_per_instance():
     assert ex1.stats()["solves"] == 1
     assert ex2.stats() == {
         "launches": 0, "solves": 0, "problems_solved": 0, "rounds_total": 0,
+        "retry_attempts": 0,
+        "status": {"DONE": 0, "FAILED": 0, "SHED": 0, "DEADLINE_EXCEEDED": 0},
     }
     # the legacy module-level counter keeps aggregating process-wide
     assert slv.dispatch_count() == 1

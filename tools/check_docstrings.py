@@ -33,6 +33,9 @@ DEFAULT_FILES = [
     "src/repro/core/sharded.py",
     "src/repro/kernels/ops.py",
     "src/repro/serving/ot_engine.py",
+    "src/repro/serving/policy.py",
+    "src/repro/serving/traffic.py",
+    "src/repro/utils/faults.py",
 ]
 
 
