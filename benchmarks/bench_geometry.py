@@ -1,0 +1,134 @@
+"""Geometry benchmark: dense vs materialization-free cost operands.
+
+Two modeled byte counters per row, both pure functions of the shape and
+the screening flags (docs/geometry.md):
+
+* ``operand_bytes`` — what HBM must HOLD for the solve-time cost operand.
+  Dense is ``m_pad * n * 4`` (the (m, n) product); factorized is
+  ``(m_pad + n)(d + 1) * 4`` (linear in m + n), via the geometry objects'
+  own :meth:`~repro.ot.geometry.CostGeometry.hbm_bytes`.
+* ``traffic_bytes`` — what one screened gradient evaluation STREAMS.
+  Both routes issue one grid step per surviving tile; the dense kernel
+  DMAs a ``(TILE_L, g, TILE_N)`` C tile per step while the factorized
+  kernel DMAs the ``(TILE_L * g, d + 1)`` x-block and ``(TILE_N, d + 1)``
+  y-block — per-step bytes independent of n, so factorized traffic scales
+  with LIVE TILES, not problem width.
+
+Grid steps are read back from the compact factorized kernel's in-kernel
+step counter (interpret mode), never assumed.  Every recorded counter is
+deterministic (seeded flags + byte models — no wall-clock), so the CI
+gate (``benchmarks/check_regression.py``) holds them to EXACT equality
+against the committed ``BENCH_geometry.json``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import groups as G
+from repro.core.dual import DualProblem
+from repro.core.regularizers import GroupSparseReg
+from repro.data.pipeline import DomainPairConfig, make_domain_pair
+from repro.kernels import ops as kops
+from repro.kernels.gradpsi import build_tile_schedule, gradpsi_fact_pallas_compact
+from repro.ot.geometry import SquaredL2Geometry
+
+FULL = dict(L=32, g=16, n_sweep=(512, 1024, 2048),
+            densities=(1.0, 0.25, 0.05))
+SMOKE = dict(L=4, g=8, n_sweep=(128, 256), densities=(1.0, 0.25))
+
+
+def _geometry_row(geom, prob, spec, n, density):
+    """One BENCH row: steps + modeled operand/traffic bytes at ``density``."""
+    fc = kops.FactorizedCost(*(jnp.asarray(v) for v in geom.operands()))
+    fp = kops.prepare_factorized_problem(fc, prob)
+    rng = np.random.default_rng(1000 * n + int(round(100 * density)))
+    alpha = jnp.asarray(rng.normal(size=spec.m_pad).astype(np.float32) * 0.1)
+    beta = jnp.asarray(rng.normal(size=n).astype(np.float32) * 0.1)
+    alphap, betap = kops.pad_tile_inputs(alpha, beta, fp)
+
+    flags = jnp.asarray((rng.random(fp.grid) < density).astype(np.int32))
+    live = int(jnp.sum(flags != 0))
+    sched, nact = build_tile_schedule(flags)
+    *_, steps = gradpsi_fact_pallas_compact(
+        alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, sched, nact,
+        num_groups=fp.L_pad, group_size=fp.g,
+        tau=prob.reg.tau, gamma=prob.reg.gamma,
+        tile_l=fp.tile_l, tile_n=fp.tile_n, interpret=True,
+    )
+    steps = int(steps)
+
+    d = geom.dim
+    c_tile_bytes = fp.tile_l * fp.g * fp.tile_n * 4
+    fact_tile_bytes = (fp.tile_l * fp.g * (d + 1) + fp.tile_n * (d + 1)) * 4
+    return {
+        "n": n,
+        "m_pad": spec.m_pad,
+        "d": d,
+        "L": prob.num_groups,
+        "g": prob.group_size,
+        "tile_l": fp.tile_l,
+        "tile_n": fp.tile_n,
+        "density": density,
+        "live_tiles": live,
+        "total_tiles": fp.num_tiles,
+        "grid_steps": steps,
+        "operand_bytes": {
+            "dense": spec.m_pad * n * 4,
+            "factorized": geom.hbm_bytes(),
+        },
+        "traffic_bytes": {
+            "dense": steps * c_tile_bytes,
+            "factorized": steps * fact_tile_bytes,
+        },
+    }
+
+
+def main(smoke: bool = False, out: str | None = "BENCH_geometry.json",
+         L: int | None = None, g: int | None = None,
+         n_sweep=None, densities=None):
+    base = SMOKE if smoke else FULL
+    L = base["L"] if L is None else L
+    g = base["g"] if g is None else g
+    n_sweep = base["n_sweep"] if n_sweep is None else n_sweep
+    densities = base["densities"] if densities is None else densities
+
+    Xs, ys, Xt, _ = make_domain_pair(
+        DomainPairConfig(num_classes=L, samples_per_class=g, dim=8, seed=0)
+    )
+    spec = G.spec_from_labels(ys, pad_to=8)
+    reg = GroupSparseReg.from_rho(1.0, 0.8)
+
+    rows = []
+    for n in n_sweep:
+        Y = Xt[:n] if n <= len(Xt) else np.tile(Xt, (n // len(Xt) + 1, 1))[:n]
+        geom = SquaredL2Geometry.from_samples(Xs, ys, Y, spec)
+        prob = DualProblem(spec.num_groups, spec.group_size, n, reg)
+        for dens in densities:
+            rows.append(_geometry_row(geom, prob, spec, n, dens))
+
+    for r in rows:
+        ob, tb = r["operand_bytes"], r["traffic_bytes"]
+        print(f"n={r['n']} density={r['density']} "
+              f"live={r['live_tiles']}/{r['total_tiles']} "
+              f"steps={r['grid_steps']} "
+              f"operand_bytes dense={ob['dense']} fact={ob['factorized']} "
+              f"traffic_bytes dense={tb['dense']} fact={tb['factorized']}")
+    if out:
+        try:
+            from benchmarks.bench_io import write_bench_json
+        except ImportError:          # invoked as a script from benchmarks/
+            from bench_io import write_bench_json
+
+        write_bench_json(out, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_geometry.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out or None)

@@ -19,6 +19,14 @@ exact invariants — ``launches`` (a sharded solve is ONE program) and
 ``bitwise_mismatches`` (sharded == unsharded per problem), which must
 match the baseline exactly regardless of tolerance.
 
+The geometry baseline (``BENCH_geometry.json``, from
+``benchmarks/bench_geometry.py``) is held to EXACT equality: every
+recorded counter — live/total tiles, compact grid steps, modeled operand
+and traffic bytes for the dense vs factorized cost geometries — is a pure
+function of the seeded flags and the byte models, so any drift means the
+memory-model contract (on-the-fly bytes scale with live tiles, not n)
+changed and the committed baseline must be regenerated deliberately.
+
 The serving baseline (``BENCH_serving.json``, from
 ``benchmarks/bench_serving.py``) gates the SLO counters of three seeded
 traffic scenarios (steady / overload / chaos): terminal-status totals,
@@ -104,6 +112,36 @@ def compare_sharded(baseline_rows, fresh_rows, tolerance: float):
             yield key, f, old, new, ok
 
 
+# geometry counters: ALL exact — each is a deterministic function of the
+# seeded screening flags and the shape-level byte models, so tolerance
+# would only mask a changed memory-model contract
+GEOMETRY_SCALARS = ("live_tiles", "total_tiles", "grid_steps")
+GEOMETRY_NESTED = ("operand_bytes", "traffic_bytes")
+
+
+def _geometry_key(row: dict) -> str:
+    return f"n{row.get('n')}/d{row.get('density')}"
+
+
+def compare_geometry(baseline_rows, fresh_rows):
+    """Yield (key, field, old, new, ok) — exact equality on every counter."""
+    fresh_by_key = {_geometry_key(r): r for r in fresh_rows}
+    for row in baseline_rows:
+        key = _geometry_key(row)
+        fresh = fresh_by_key.get(key)
+        if fresh is None:
+            yield key, "<row>", "present", "missing", False
+            continue
+        for f in GEOMETRY_SCALARS:
+            if f in row:
+                old, new = row[f], fresh.get(f)
+                yield key, f, old, new, new == old
+        for group in GEOMETRY_NESTED:
+            for f, old in row.get(group, {}).items():
+                new = fresh.get(group, {}).get(f)
+                yield key, f"{group}.{f}", old, new, new == old
+
+
 # serving counters that must match the baseline EXACTLY: ``unterminated``
 # counts lifecycle-invariant violations (a request that never reached a
 # terminal status), which no tolerance can excuse
@@ -137,6 +175,7 @@ def main() -> int:
     ap.add_argument("--baseline", default="BENCH_kernels.json")
     ap.add_argument("--sharded-baseline", default="BENCH_sharded.json")
     ap.add_argument("--serving-baseline", default="BENCH_serving.json")
+    ap.add_argument("--geometry-baseline", default="BENCH_geometry.json")
     ap.add_argument("--tolerance", type=float, default=0.20)
     args = ap.parse_args()
 
@@ -202,6 +241,35 @@ def main() -> int:
     ):
         status = "ok" if ok else "REGRESSION"
         print(f"  [{status}] sharded={key} {field}: {old} -> {new}")
+        if not ok:
+            failures.append((key, field, old, new))
+
+    # geometry memory-model counters (exact: deterministic byte models)
+    try:
+        geo_base, gver = read_bench_json(args.geometry_baseline)
+    except (OSError, ValueError) as e:
+        print(f"REGRESSION GATE: cannot read geometry baseline "
+              f"{args.geometry_baseline}: {e}")
+        return 1
+    if not geo_base:
+        print("REGRESSION GATE: geometry baseline has no rows")
+        return 1
+    head = geo_base[0]
+    n_sweep = tuple(dict.fromkeys(r["n"] for r in geo_base))
+    densities = tuple(dict.fromkeys(r["density"] for r in geo_base))
+    print(f"geometry baseline: {args.geometry_baseline} "
+          f"(schema_version={gver}, L={head['L']} g={head['g']} "
+          f"n_sweep={list(n_sweep)}, {len(geo_base)} rows)")
+
+    from benchmarks import bench_geometry
+
+    fresh_geo = bench_geometry.main(
+        L=head["L"], g=head["g"], n_sweep=n_sweep, densities=densities,
+        out=None,
+    )
+    for key, field, old, new, ok in compare_geometry(geo_base, fresh_geo):
+        status = "ok" if ok else "REGRESSION"
+        print(f"  [{status}] geometry={key} {field}: {old} -> {new}")
         if not ok:
             failures.append((key, field, old, new))
 

@@ -27,7 +27,7 @@ def main() -> None:
                     help="tiny shapes, no JSON artifacts (CI sanity)")
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["synthetic", "gradcount", "objective", "kernels",
-                             "sharded"])
+                             "sharded", "geometry"])
     args = ap.parse_args()
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
@@ -90,6 +90,18 @@ def main() -> None:
                 c = impl["pallas_compact_batched"]
                 print(f"kernel_gradpsi_{r['density']},{c['grid_steps']},"
                       f"live={r['live_tiles']}/{r['total_tiles']}")
+
+    if "geometry" not in args.skip:
+        from benchmarks import bench_geometry
+
+        rows = bench_geometry.main(
+            smoke=smoke, out=None if smoke else "BENCH_geometry.json"
+        )
+        for r in rows:
+            ob = r["operand_bytes"]
+            save = round(ob["dense"] / max(ob["factorized"], 1), 1)
+            print(f"geometry_n{r['n']}_d{r['density']},{r['grid_steps']},"
+                  f"operand_save={save}x")
 
     if "sharded" not in args.skip:
         from benchmarks import bench_sharded

@@ -42,7 +42,28 @@ def main():
     print(f"dense objective       : {sol_dense.value:.6f}")
     print(f"identical             : {sol.value == sol_dense.value}")
 
-    print("\n=== 3. A reusable executor: B problems, ONE fused program ===")
+    print("\n=== 3. Materialization-free geometry: no (m, n) cost in HBM ===")
+    # sample-mode problems can skip the dense cost entirely: the Pallas
+    # kernels rebuild each cost tile from the samples via
+    # |x|^2 + |y|^2 - 2<x, y>  (docs/geometry.md).  The route is bitwise-
+    # equal to the dense route run on the SAME factorized-recipe cost —
+    # problem.materialized() — for a fixed backend.
+    plan_otf = ot.ExecutionPlan(grad_impl="pallas", geometry="on_the_fly")
+    sol_otf = ot.solve(problem, plan_otf)
+    sol_mat = ot.solve(
+        problem.materialized(), ot.ExecutionPlan(grad_impl="pallas", geometry="dense")
+    )
+    assert sol_otf.value == sol_mat.value, "on-the-fly != materialized-dense ?!"
+    geom = ot.SquaredL2Geometry.from_samples(
+        Xs, ys, Xt, problem.group_spec(), normalize_cost=True
+    )
+    dense_bytes = geom.rows * geom.cols * 4
+    print(f"on-the-fly objective  : {sol_otf.value:.6f} "
+          f"(== dense route on problem.materialized(), bitwise)")
+    print(f"cost operand bytes    : dense {dense_bytes:,} -> "
+          f"factorized {geom.hbm_bytes():,}")
+
+    print("\n=== 4. A reusable executor: B problems, ONE fused program ===")
     problems = [problem] + [
         ot.Problem.from_samples(
             Xs, ys,
@@ -60,14 +81,14 @@ def main():
           "problem 0 == solo solve, bitwise")
     print(f"objectives            : {[round(s.value, 6) for s in sols]}")
 
-    print("\n=== 4. Round-step streaming (the serving engine's tick) ===")
+    print("\n=== 5. Round-step streaming (the serving engine's tick) ===")
     stream = ot.compile(problem).stream(problems)
     for info in stream:
         print(f"round {info['round']:2d}: {info['alive']} problem(s) still solving")
     assert [s.value for s in stream.solutions()] == [s.value for s in sols]
     print("stream result == fused batch, bitwise")
 
-    print("\n=== 5. Diagnostics ===")
+    print("\n=== 6. Diagnostics ===")
     print(ex.describe(sols[0]))
 
 

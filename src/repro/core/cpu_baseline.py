@@ -238,6 +238,59 @@ def _solve(C, a, b, spec, reg, screened, r, use_lower, maxiter, gtol):
     )
 
 
+def factorized_squared_l2_cost(X_S: np.ndarray, X_T: np.ndarray) -> np.ndarray:
+    """Float64 reference for the kernels' factorized squared-l2 recipe.
+
+    Computes ``|x|^2 + |y|^2 - 2 <x, y>`` (clamped at zero) with the same
+    elementwise-product-and-reduce structure as
+    :func:`repro.kernels.gradpsi.factorized_cost_tile`, but in f64 — the
+    golden fixture the differential harness (tests/test_geometry.py) pins
+    the f32 on-the-fly route against at tolerance.
+
+    Parameters
+    ----------
+    X_S : np.ndarray
+        ``(m, d)`` source samples.
+    X_T : np.ndarray
+        ``(n, d)`` target samples.
+
+    Returns
+    -------
+    np.ndarray
+        ``(m, n)`` float64 squared-Euclidean cost.
+    """
+    x = np.asarray(X_S, np.float64)
+    y = np.asarray(X_T, np.float64)
+    x_sq = np.sum(x * x, axis=-1)
+    y_sq = np.sum(y * y, axis=-1)
+    xy = np.sum(x[:, None, :] * y[None, :, :], axis=-1)
+    return np.maximum(x_sq[:, None] + y_sq[None, :] - 2.0 * xy, 0.0)
+
+
+def fast_solve_from_samples(
+    X_S, labels, X_T, reg: Regularizer, *, pad_to: int = 8,
+    normalize_cost: bool = True, r: int = 10, maxiter: int = 1000,
+    gtol: float = 1e-6,
+) -> CpuSolveResult:
+    """Paper pipeline from raw samples via the f64 factorized cost.
+
+    Builds the cost with :func:`factorized_squared_l2_cost` (max-normalized
+    when ``normalize_cost``), pads to the uniform group layout, and runs
+    :func:`fast_solve` — the f64 end-to-end reference the on-the-fly f32
+    route is differentially tested against.
+    """
+    labels = np.asarray(labels)
+    spec = G.spec_from_labels(labels, pad_to=pad_to)
+    C = factorized_squared_l2_cost(X_S, X_T)
+    if normalize_cost:
+        C = C / max(C.max(), 1e-12)
+    m, n = C.shape
+    C_pad = G.pad_cost_matrix(C.astype(np.float32), labels, spec)
+    a = G.pad_marginal(np.full((m,), 1.0 / m, np.float32), labels, spec)
+    b = np.full((n,), 1.0 / n, np.float32)
+    return fast_solve(C_pad, a, b, spec, reg, r=r, maxiter=maxiter, gtol=gtol)
+
+
 def origin_solve(C, a, b, spec: G.GroupSpec, reg: Regularizer,
                  maxiter: int = 1000, gtol: float = 1e-6) -> CpuSolveResult:
     """The original (unscreened) method of Blondel et al. 2018."""

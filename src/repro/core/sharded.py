@@ -158,8 +158,19 @@ def pad_batch_to_devices(
     padB = lambda x, v: jnp.concatenate(
         [x, jnp.full((extra,) + x.shape[1:], v, x.dtype)], axis=0
     )
+    from repro.kernels import ops as kops
+
+    if isinstance(C, kops.FactorizedCost):
+        # factorized dummy = zero samples + PAD_COST squared norms: every
+        # cost entry is >= PAD_COST, same as the dense PAD_COST fill
+        C_pad = kops.FactorizedCost(
+            x=padB(C.x, 0), x_sq=padB(C.x_sq, PAD_COST),
+            y=padB(C.y, 0), y_sq=padB(C.y_sq, PAD_COST),
+        )
+    else:
+        C_pad = padB(C, PAD_COST)
     return (
-        padB(C, PAD_COST),
+        C_pad,
         padB(a, 0),
         padB(b, 0),
         padB(row_mask, False),
@@ -235,17 +246,19 @@ def prepare_padded_sharded(C: jnp.ndarray, prob: DualProblem, mesh: Mesh):
 
     Returns
     -------
-    repro.kernels.ops.PaddedProblem
-        With ``Cp`` of shape ``(B, L_pad * g, n_pad)`` sharded over axis 0.
+    repro.kernels.ops.PaddedProblem or repro.kernels.ops.FactorizedProblem
+        Dense costs yield a PaddedProblem with ``Cp`` of shape
+        ``(B, L_pad * g, n_pad)`` sharded over axis 0; factorized costs a
+        FactorizedProblem whose four sample/norm leaves are sharded the
+        same way (every leaf carries the leading problem axis).
     """
-    import dataclasses
-
     from repro.kernels import ops as kops
 
-    pp = kops.prepare_padded_problem_batched(jnp.asarray(C), prob)
-    return dataclasses.replace(
-        pp, Cp=jax.device_put(pp.Cp, batch_sharding(mesh))
-    )
+    if isinstance(C, kops.FactorizedCost):
+        pp = kops.prepare_factorized_problem(C, prob)
+    else:
+        pp = kops.prepare_padded_problem_batched(jnp.asarray(C), prob)
+    return device_put_batch(pp, mesh)
 
 
 def init_batch_state_sharded(

@@ -228,6 +228,7 @@ def make_value_and_grad(
     m_pad = prob.m_pad
 
     if grad_impl == "dense":
+        _reject_factorized(C, grad_impl)
 
         def vag(x):
             alpha, beta = _split(x, m_pad)
@@ -238,6 +239,7 @@ def make_value_and_grad(
 
     if grad_impl == "screened":
         assert screen_state is not None
+        _reject_factorized(C, grad_impl)
 
         def vag(x):
             alpha, beta = _split(x, m_pad)
@@ -258,7 +260,16 @@ def make_value_and_grad(
 
         pp = padded
         if pp is None:
-            pp = kops.prepare_padded_problem(C, prob)
+            pp = (
+                kops.prepare_factorized_problem(C, prob)
+                if _is_factorized(C)
+                else kops.prepare_padded_problem(C, prob)
+            )
+        grad_fn = (
+            kops.dual_value_and_grad_factorized
+            if isinstance(pp, kops.FactorizedProblem)
+            else kops.dual_value_and_grad_padded
+        )
         pstate = kops.pad_screen_state(screen_state, sqrt_g, pp)
 
         def vag(x):
@@ -266,7 +277,7 @@ def make_value_and_grad(
             flags = kops.screen_tile_flags(
                 pstate, alpha, beta, pp, prob.tau_vec()
             )
-            v, ga, gb = kops.dual_value_and_grad_padded(
+            v, ga, gb = grad_fn(
                 alpha, beta, a, b, flags, pp, prob, impl=pallas_impl
             )
             return -v, -jnp.concatenate([ga, gb])
@@ -299,6 +310,7 @@ def make_value_and_grad_batched(
     m_pad = prob.m_pad
 
     if grad_impl == "dense":
+        _reject_factorized(C, grad_impl)
 
         def vag(x):
             alpha, beta = _split(x, m_pad)
@@ -309,6 +321,7 @@ def make_value_and_grad_batched(
 
     if grad_impl == "screened":
         assert screen_state is not None
+        _reject_factorized(C, grad_impl)
 
         def vag(x):
             alpha, beta = _split(x, m_pad)
@@ -330,7 +343,16 @@ def make_value_and_grad_batched(
         B = C.shape[0]
         pp = padded
         if pp is None:
-            pp = kops.prepare_padded_problem_batched(C, prob)
+            pp = (
+                kops.prepare_factorized_problem(C, prob)
+                if _is_factorized(C)
+                else kops.prepare_padded_problem_batched(C, prob)
+            )
+        grad_fn = (
+            kops.dual_value_and_grad_factorized_batched
+            if isinstance(pp, kops.FactorizedProblem)
+            else kops.dual_value_and_grad_padded_batched
+        )
         sqb = jnp.broadcast_to(sqrt_g, (B, prob.num_groups))
         pstate = kops.pad_screen_state_batched(screen_state, sqb, pp)
 
@@ -339,7 +361,7 @@ def make_value_and_grad_batched(
             flags = kops.screen_tile_flags_batched(
                 pstate, alpha, beta, pp, prob.tau_vec()
             )
-            v, ga, gb = kops.dual_value_and_grad_padded_batched(
+            v, ga, gb = grad_fn(
                 alpha, beta, a, b, flags, pp, prob, impl=pallas_impl
             )
             return -v, -jnp.concatenate([ga, gb], axis=-1)
@@ -349,16 +371,60 @@ def make_value_and_grad_batched(
     raise ValueError(f"unknown grad_impl: {grad_impl}")
 
 
+def _is_factorized(C) -> bool:
+    """True when the cost operand is a materialization-free FactorizedCost."""
+    from repro.kernels import ops as kops
+
+    return isinstance(C, kops.FactorizedCost)
+
+
+def _reject_factorized(C, grad_impl: str) -> None:
+    """Trace-time guard: only the pallas backend lowers factorized costs.
+
+    The facade's executor materializes the cost (chunked) before routing a
+    factorized geometry to the dense/screened reference backends, so this
+    is reached only by callers bypassing the executor.
+    """
+    if _is_factorized(C):
+        raise TypeError(
+            f"grad_impl='{grad_impl}' cannot consume a FactorizedCost; use "
+            "grad_impl='pallas' or materialize the geometry first "
+            "(SquaredL2Geometry.materialize)."
+        )
+
+
+def _snapshot_norms_any(alpha, beta, C, prob, row_mask, padded):
+    """Eq. 6 snapshot norms for either cost representation.
+
+    Dense costs use the closed-form ``dual.snapshot_norms``; factorized
+    costs run the materialization-free Pallas snapshot kernel against the
+    prepared :class:`~repro.kernels.ops.FactorizedProblem` (building one on
+    the fly if the caller had no pallas preparation).
+    """
+    if _is_factorized(C):
+        from repro.kernels import ops as kops
+
+        fp = padded
+        if fp is None:
+            fp = kops.prepare_factorized_problem(C, prob)
+        return kops.snapshot_norms_factorized(alpha, beta, fp, prob, row_mask)
+    return snapshot_norms(alpha, beta, C, prob, row_mask)
+
+
 def _prepare_padded(C, prob, opts):
     """One-time padded-problem preparation for the pallas backend.
 
     The padded copy of C (the largest array in the problem) is made once
     per solve / per engine round, outside the L-BFGS evaluation loop.
+    Factorized costs get a tile-padded :class:`FactorizedProblem` instead
+    — no (m, n) array is ever built.
     """
     if opts.grad_impl != "pallas":
         return None
     from repro.kernels import ops as kops
 
+    if _is_factorized(C):
+        return kops.prepare_factorized_problem(C, prob)
     return kops.prepare_padded_problem_batched(C, prob)
 
 
@@ -370,9 +436,9 @@ def _init_batch_state(C, a, b, row_mask, sqrt_g, prob, opts, padded):
 
     screen0 = screening.init_state(m_pad, n, L, C.dtype, batch_shape=(B,))
     # valid snapshots at the init point (alpha = beta = 0)
-    z0, k0, o0 = snapshot_norms(
+    z0, k0, o0 = _snapshot_norms_any(
         jnp.zeros((B, m_pad), C.dtype), jnp.zeros((B, n), C.dtype),
-        C, prob, row_mask,
+        C, prob, row_mask, padded,
     )
     screen0 = screening.take_snapshot(
         screen0, x0[..., :m_pad], x0[..., m_pad:], z0, k0, o0
@@ -418,12 +484,14 @@ def _round_body(state, C, a, b, row_mask, sqrt_g, prob, opts, padded):
             scr_new = screening.refresh_active(
                 scr, alpha, beta, sqrt_g, prob.tau_vec()
             )
-            z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
+            z, k, o = _snapshot_norms_any(alpha, beta, C, prob, row_mask,
+                                          padded)
             scr_new = screening.take_snapshot(scr_new, alpha, beta, z, k, o)
         else:
             # beyond-paper: snapshot first => Delta = 0 => lower bound
             # becomes k~ - o~ exactly (Theorem 4's fixed point), tighter N.
-            z, k, o = snapshot_norms(alpha, beta, C, prob, row_mask)
+            z, k, o = _snapshot_norms_any(alpha, beta, C, prob, row_mask,
+                                          padded)
             scr_new = screening.take_snapshot(scr, alpha, beta, z, k, o)
             scr_new = screening.refresh_active(
                 scr_new, alpha, beta, sqrt_g, prob.tau_vec()
@@ -486,8 +554,9 @@ def _solve_jit(
     and any caller wanting unbatched outputs; returns (lb, scr, rounds,
     stats) with unbatched leaves and a scalar round count.
     """
+    C1 = jax.tree_util.tree_map(lambda v: v[None], C)
     lb, scr, rounds, stats = _solve_batch_impl(
-        C[None], a[None], b[None], row_mask, sqrt_g, prob, opts
+        C1, a[None], b[None], row_mask, sqrt_g, prob, opts
     )
     one = lambda t: jax.tree_util.tree_map(lambda v: v[0], t)
     return one(lb), one(scr), rounds[0], stats[0]

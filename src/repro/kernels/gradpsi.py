@@ -618,3 +618,548 @@ def gradpsi_pallas_compact_batched(
         psi_steps[:, 0], mode="drop"
     )
     return ga.reshape(B, -1), gb.reshape(B, -1), psi, steps[0, 0]
+
+
+# -- materialization-free (factorized squared-l2) variants ---------------------
+#
+# Instead of a dense (m_pad, n) C operand, these kernels take the raw sample
+# blocks and precomputed squared norms of a SquaredL2Geometry (docs/geometry.md)
+# and rebuild each cost tile in VMEM via the factorization
+#     c[i, j] = max(|x_i|^2 + |y_j|^2 - 2 <x_i, y_j>, 0)
+# so HBM traffic per tile is O((tile_l*g + tile_n) * d) instead of
+# O(tile_l*g*tile_n).  `factorized_cost_tile` below is THE single definition of
+# the recipe: geometry.py materializes with the same function, which is what
+# makes the on-the-fly route bitwise-equal to the materialized-dense route.
+
+
+def factorized_cost_tile(x, x_sq, y, y_sq):
+    """On-the-fly squared-l2 cost tile: ``max(x2 + y2 - 2<x,y>, 0)``.
+
+    ``x`` is ``(..., R, d)`` with matching ``x_sq (..., R)``; ``y`` is
+    ``(TN, d)`` with ``y_sq (TN,)``; returns ``(..., R, TN)``.  The inner
+    product is an elementwise product reduced over ``d`` (NOT a matmul), so
+    every output element sees the identical f32 operation sequence no matter
+    how the caller tiles or chunks — the bitwise contract between the Pallas
+    kernels and :meth:`repro.ot.geometry.SquaredL2Geometry.materialize`.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    xy = jnp.sum(x2[:, None, :] * y[None, :, :], axis=-1)
+    c = jnp.maximum(
+        x_sq.reshape((-1,))[:, None] + y_sq[None, :] - 2.0 * xy, 0.0
+    )
+    return c.reshape(lead + (y.shape[0],))
+
+
+def pick_tile_l_factorized(g: int, tile_n: int, d: int,
+                           dtype_bytes: int = 4) -> int:
+    """Largest TILE_L (power of two, <=8) whose factorized tile fits VMEM.
+
+    The working set adds the ``(TILE_L, g, TILE_N, d)`` product intermediate
+    of :func:`factorized_cost_tile` to the dense kernel's F/T tiles.
+    """
+    per_l = (2 + d) * g * tile_n * dtype_bytes
+    t = max(1, VMEM_BUDGET_BYTES // max(per_l, 1))
+    for cand in (8, 4, 2, 1):
+        if cand <= t:
+            return cand
+    return 1
+
+
+def resolve_tile_l_factorized(L: int, g: int, tile_n: int, d: int,
+                              dtype_bytes: int = 4) -> int:
+    """VMEM-fitting factorized TILE_L, halved until it divides L."""
+    t = pick_tile_l_factorized(g, tile_n, d, dtype_bytes)
+    t = min(t, L)
+    while t > 1 and L % t:
+        t //= 2
+    return max(t, 1)
+
+
+def _dense_kernel_fact(flags_ref, alpha_ref, beta_ref, x_ref, xsq_ref,
+                       y_ref, ysq_ref, tau_ref,
+                       ga_ref, gb_ref, psi_ref, *, gamma: float):
+    l = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_ga_f():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+
+    @pl.when(jnp.logical_and(l == 0, j == 0))
+    def _init_psi_f():
+        psi_ref[...] = jnp.zeros_like(psi_ref)
+
+    gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    flag = flags_ref[l, j]
+
+    @pl.when(flag != 0)
+    def _compute_f():
+        alpha = alpha_ref[...].astype(jnp.float32)       # (TL, g)
+        beta = beta_ref[...].astype(jnp.float32)         # (TN,)
+        c = factorized_cost_tile(
+            x_ref[...].astype(jnp.float32),              # (TL, g, d)
+            xsq_ref[...].astype(jnp.float32),            # (TL, g)
+            y_ref[...].astype(jnp.float32),              # (TN, d)
+            ysq_ref[...].astype(jnp.float32),            # (TN,)
+        )
+        tau = tau_ref[...].astype(jnp.float32)           # (TL,)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+        psi_ref[0, 0] += psi
+        ga_ref[...] += jnp.sum(t, axis=2)                # (TL, g)
+        gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]   # (1, TN)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fact_pallas(
+    alpha: jnp.ndarray,        # (m_pad,) fp32
+    beta: jnp.ndarray,         # (n,) fp32
+    x: jnp.ndarray,            # (m_pad, d) fp32 scaled source samples
+    x_sq: jnp.ndarray,         # (m_pad,) fp32 scaled squared norms
+    y: jnp.ndarray,            # (n, d) fp32 scaled target samples
+    y_sq: jnp.ndarray,         # (n,) fp32 scaled squared norms
+    flags: jnp.ndarray,        # (L_tiles, N_tiles) int32 tile skip flags
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense-grid factorized kernel: cost tiles built in VMEM from samples.
+
+    Same outputs and skip semantics as :func:`gradpsi_pallas`; the C operand
+    is replaced by ``(x, x_sq, y, y_sq)`` blocked operands.  Skipped tiles
+    remap the column-indexed ``y``/``y_sq`` blocks to column 0 so the DMA is
+    elided exactly like the dense kernel's C tile.
+    """
+    L, g = num_groups, group_size
+    n = beta.shape[0]
+    d = x.shape[-1]
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l_factorized(g, tile_n, d,
+                                        jnp.dtype(x.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (L // tile_l, n // tile_n)
+    assert flags.shape == grid, (flags.shape, grid)
+
+    alpha_g = alpha.reshape(L, g)
+    x3 = x.reshape(L, g, d)
+    xsq_g = x_sq.reshape(L, g)
+
+    def y_index(l, j, flags_ref):
+        active = flags_ref[l, j] != 0
+        return (jnp.where(active, j, 0), 0)
+
+    def ysq_index(l, j, flags_ref):
+        active = flags_ref[l, j] != 0
+        return (jnp.where(active, j, 0),)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_l, g), lambda l, j, f: (l, 0)),
+            pl.BlockSpec((tile_n,), lambda l, j, f: (j,)),
+            pl.BlockSpec((tile_l, g, d), lambda l, j, f: (l, 0, 0)),
+            pl.BlockSpec((tile_l, g), lambda l, j, f: (l, 0)),
+            pl.BlockSpec((tile_n, d), y_index),
+            pl.BlockSpec((tile_n,), ysq_index),
+            pl.BlockSpec((tile_l,), lambda l, j, f: (l,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_l, g), lambda l, j, f: (l, 0)),
+            pl.BlockSpec((1, tile_n), lambda l, j, f: (l, j)),
+            pl.BlockSpec((1, 1), lambda l, j, f: (0, 0)),
+        ],
+    )
+
+    ga_part, gb_part, psi = pl.pallas_call(
+        functools.partial(_dense_kernel_fact, gamma=float(gamma)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((L, g), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], n), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(flags, alpha_g, beta, x3, xsq_g, y, y_sq, tau_g)
+
+    return ga_part.reshape(-1), jnp.sum(gb_part, axis=0), psi[0, 0]
+
+
+def _compact_kernel_fact(sched_ref, nact_ref, alpha_ref, beta_ref, x_ref,
+                         xsq_ref, y_ref, ysq_ref, tau_ref,
+                         ga_ref, gb_ref, psi_ref, steps_ref,
+                         *, gamma: float):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init_steps_f():
+        steps_ref[0, 0] = 0
+
+    steps_ref[0, 0] += 1
+
+    alpha = alpha_ref[...].astype(jnp.float32)           # (TL, g)
+    beta = beta_ref[...].astype(jnp.float32)             # (TN,)
+    c = factorized_cost_tile(
+        x_ref[...].astype(jnp.float32),
+        xsq_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        ysq_ref[...].astype(jnp.float32),
+    )
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+    ga_ref[...] = jnp.sum(t, axis=2)[None]               # (1, TL, g)
+    gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]       # (1, TN)
+    psi_ref[0, 0] = psi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fact_pallas_compact(
+    alpha: jnp.ndarray,        # (m_pad,) fp32
+    beta: jnp.ndarray,         # (n,) fp32
+    x: jnp.ndarray,            # (m_pad, d) fp32
+    x_sq: jnp.ndarray,         # (m_pad,) fp32
+    y: jnp.ndarray,            # (n, d) fp32
+    y_sq: jnp.ndarray,         # (n,) fp32
+    sched: jnp.ndarray,        # (2, T) int32 from build_tile_schedule
+    num_active: jnp.ndarray,   # () int32 surviving-tile count
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compacted-grid factorized kernel: steps scale with surviving tiles.
+
+    Same contract as :func:`gradpsi_pallas_compact` with the C operand
+    replaced by ``(x, x_sq, y, y_sq)`` blocked operands.
+    """
+    L, g = num_groups, group_size
+    n = beta.shape[0]
+    d = x.shape[-1]
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l_factorized(g, tile_n, d,
+                                        jnp.dtype(x.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    Lt, Nt = L // tile_l, n // tile_n
+    T = Lt * Nt
+    assert sched.shape == (2, T), (sched.shape, (2, T))
+
+    alpha_g = alpha.reshape(L, g)
+    x3 = x.reshape(L, g, d)
+    xsq_g = x_sq.reshape(L, g)
+    num_active = num_active.astype(jnp.int32)
+    nact = num_active.reshape(1)
+    num_steps = jnp.maximum(num_active, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_steps,),
+        in_specs=[
+            pl.BlockSpec((tile_l, g), lambda s, sc, na: (sc[0, s], 0)),
+            pl.BlockSpec((tile_n,), lambda s, sc, na: (sc[1, s],)),
+            pl.BlockSpec((tile_l, g, d), lambda s, sc, na: (sc[0, s], 0, 0)),
+            pl.BlockSpec((tile_l, g), lambda s, sc, na: (sc[0, s], 0)),
+            pl.BlockSpec((tile_n, d), lambda s, sc, na: (sc[1, s], 0)),
+            pl.BlockSpec((tile_n,), lambda s, sc, na: (sc[1, s],)),
+            pl.BlockSpec((tile_l,), lambda s, sc, na: (sc[0, s],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda s, sc, na: (s, 0, 0)),
+            pl.BlockSpec((1, tile_n), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (0, 0)),
+        ],
+    )
+
+    ga_steps, gb_steps, psi_steps, steps = pl.pallas_call(
+        functools.partial(_compact_kernel_fact, gamma=float(gamma)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((T, tile_l, g), jnp.float32),
+            jax.ShapeDtypeStruct((T, tile_n), jnp.float32),
+            jax.ShapeDtypeStruct((T, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sched, nact, alpha_g, beta, x3, xsq_g, y, y_sq, tau_g)
+
+    idx = jnp.arange(T, dtype=jnp.int32)
+    valid = idx < num_active
+    seg_l = jnp.where(valid, sched[0], Lt)
+    seg_n = jnp.where(valid, sched[1], Nt)
+    ga = jnp.zeros((Lt, tile_l, g), jnp.float32).at[seg_l].add(
+        ga_steps, mode="drop"
+    )
+    gb = jnp.zeros((Nt, tile_n), jnp.float32).at[seg_n].add(
+        gb_steps, mode="drop"
+    )
+    psi = jnp.sum(jnp.where(valid[:, None], psi_steps, 0.0))
+    return ga.reshape(-1), gb.reshape(-1), psi, steps[0, 0]
+
+
+def _dense_kernel_fact_batched(flags_ref, alpha_ref, beta_ref, x_ref, xsq_ref,
+                               y_ref, ysq_ref, tau_ref,
+                               ga_ref, gb_ref, psi_ref, *, gamma: float):
+    bi = pl.program_id(0)
+    l = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init_ga_fb():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+
+    @pl.when(jnp.logical_and(l == 0, j == 0))
+    def _init_psi_fb():
+        psi_ref[...] = jnp.zeros_like(psi_ref)
+
+    gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    flag = flags_ref[bi, l, j]
+
+    @pl.when(flag != 0)
+    def _compute_fb():
+        alpha = alpha_ref[0].astype(jnp.float32)         # (TL, g)
+        beta = beta_ref[0].astype(jnp.float32)           # (TN,)
+        c = factorized_cost_tile(
+            x_ref[0].astype(jnp.float32),                # (TL, g, d)
+            xsq_ref[0].astype(jnp.float32),              # (TL, g)
+            y_ref[0].astype(jnp.float32),                # (TN, d)
+            ysq_ref[0].astype(jnp.float32),              # (TN,)
+        )
+        tau = tau_ref[...].astype(jnp.float32)           # (TL,)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+        psi_ref[0, 0, 0] += psi
+        ga_ref[...] += jnp.sum(t, axis=2)[None]          # (1, TL, g)
+        gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, None, :]  # (1, 1, TN)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fact_pallas_batched(
+    alpha: jnp.ndarray,        # (B, m_pad) fp32
+    beta: jnp.ndarray,         # (B, n) fp32
+    x: jnp.ndarray,            # (B, m_pad, d) fp32
+    x_sq: jnp.ndarray,         # (B, m_pad) fp32
+    y: jnp.ndarray,            # (B, n, d) fp32
+    y_sq: jnp.ndarray,         # (B, n) fp32
+    flags: jnp.ndarray,        # (B, L_tiles, N_tiles) int32 tile skip flags
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Dense-grid factorized kernel over B problems: grid (B, Lt, Nt).
+
+    Per-problem semantics identical to :func:`gradpsi_fact_pallas`.
+    """
+    L, g = num_groups, group_size
+    B, n = beta.shape
+    d = x.shape[-1]
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l_factorized(g, tile_n, d,
+                                        jnp.dtype(x.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (B, L // tile_l, n // tile_n)
+    assert flags.shape == grid, (flags.shape, grid)
+
+    alpha_g = alpha.reshape(B, L, g)
+    x4 = x.reshape(B, L, g, d)
+    xsq_g = x_sq.reshape(B, L, g)
+
+    def y_index(b, l, j, flags_ref):
+        active = flags_ref[b, l, j] != 0
+        return (b, jnp.where(active, j, 0), 0)
+
+    def ysq_index(b, l, j, flags_ref):
+        active = flags_ref[b, l, j] != 0
+        return (b, jnp.where(active, j, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j, f: (b, l, 0)),
+            pl.BlockSpec((1, tile_n), lambda b, l, j, f: (b, j)),
+            pl.BlockSpec((1, tile_l, g, d), lambda b, l, j, f: (b, l, 0, 0)),
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j, f: (b, l, 0)),
+            pl.BlockSpec((1, tile_n, d), y_index),
+            pl.BlockSpec((1, tile_n), ysq_index),
+            pl.BlockSpec((tile_l,), lambda b, l, j, f: (l,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j, f: (b, l, 0)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, l, j, f: (b, l, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, l, j, f: (b, 0, 0)),
+        ],
+    )
+
+    ga_part, gb_part, psi = pl.pallas_call(
+        functools.partial(_dense_kernel_fact_batched, gamma=float(gamma)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid[1], n), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(flags, alpha_g, beta, x4, xsq_g, y, y_sq, tau_g)
+
+    return (
+        ga_part.reshape(B, -1),
+        jnp.sum(gb_part, axis=1),
+        psi[:, 0, 0],
+    )
+
+
+def _compact_kernel_fact_batched(sched_ref, nact_ref, alpha_ref, beta_ref,
+                                 x_ref, xsq_ref, y_ref, ysq_ref, tau_ref,
+                                 ga_ref, gb_ref, psi_ref, steps_ref,
+                                 *, gamma: float):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init_steps_fb():
+        steps_ref[0, 0] = 0
+
+    steps_ref[0, 0] += 1
+
+    alpha = alpha_ref[0].astype(jnp.float32)             # (TL, g)
+    beta = beta_ref[0].astype(jnp.float32)               # (TN,)
+    c = factorized_cost_tile(
+        x_ref[0].astype(jnp.float32),
+        xsq_ref[0].astype(jnp.float32),
+        y_ref[0].astype(jnp.float32),
+        ysq_ref[0].astype(jnp.float32),
+    )
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+    ga_ref[...] = jnp.sum(t, axis=2)[None]               # (1, TL, g)
+    gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]       # (1, TN)
+    psi_ref[0, 0] = psi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fact_pallas_compact_batched(
+    alpha: jnp.ndarray,        # (B, m_pad) fp32
+    beta: jnp.ndarray,         # (B, n) fp32
+    x: jnp.ndarray,            # (B, m_pad, d) fp32
+    x_sq: jnp.ndarray,         # (B, m_pad) fp32
+    y: jnp.ndarray,            # (B, n, d) fp32
+    y_sq: jnp.ndarray,         # (B, n) fp32
+    sched: jnp.ndarray,        # (3, B*T) int32 from build_batch_tile_schedule
+    num_active: jnp.ndarray,   # () int32 TOTAL surviving-tile count
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compacted-grid factorized kernel over B problems (one dynamic grid).
+
+    Same contract as :func:`gradpsi_pallas_compact_batched` with the C
+    operand replaced by ``(x, x_sq, y, y_sq)`` blocked operands.
+    """
+    L, g = num_groups, group_size
+    B, n = beta.shape
+    d = x.shape[-1]
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l_factorized(g, tile_n, d,
+                                        jnp.dtype(x.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    Lt, Nt = L // tile_l, n // tile_n
+    BT = B * Lt * Nt
+    assert sched.shape == (3, BT), (sched.shape, (3, BT))
+
+    alpha_g = alpha.reshape(B, L, g)
+    x4 = x.reshape(B, L, g, d)
+    xsq_g = x_sq.reshape(B, L, g)
+    num_active = num_active.astype(jnp.int32)
+    nact = num_active.reshape(1)
+    num_steps = jnp.maximum(num_active, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_steps,),
+        in_specs=[
+            pl.BlockSpec((1, tile_l, g),
+                         lambda s, sc, na: (sc[0, s], sc[1, s], 0)),
+            pl.BlockSpec((1, tile_n), lambda s, sc, na: (sc[0, s], sc[2, s])),
+            pl.BlockSpec((1, tile_l, g, d),
+                         lambda s, sc, na: (sc[0, s], sc[1, s], 0, 0)),
+            pl.BlockSpec((1, tile_l, g),
+                         lambda s, sc, na: (sc[0, s], sc[1, s], 0)),
+            pl.BlockSpec((1, tile_n, d),
+                         lambda s, sc, na: (sc[0, s], sc[2, s], 0)),
+            pl.BlockSpec((1, tile_n), lambda s, sc, na: (sc[0, s], sc[2, s])),
+            pl.BlockSpec((tile_l,), lambda s, sc, na: (sc[1, s],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda s, sc, na: (s, 0, 0)),
+            pl.BlockSpec((1, tile_n), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (s, 0)),
+            pl.BlockSpec((1, 1), lambda s, sc, na: (0, 0)),
+        ],
+    )
+
+    ga_steps, gb_steps, psi_steps, steps = pl.pallas_call(
+        functools.partial(_compact_kernel_fact_batched, gamma=float(gamma)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BT, tile_l, g), jnp.float32),
+            jax.ShapeDtypeStruct((BT, tile_n), jnp.float32),
+            jax.ShapeDtypeStruct((BT, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sched, nact, alpha_g, beta, x4, xsq_g, y, y_sq, tau_g)
+
+    idx = jnp.arange(BT, dtype=jnp.int32)
+    valid = idx < num_active
+    seg_ga = jnp.where(valid, sched[0] * Lt + sched[1], B * Lt)
+    seg_gb = jnp.where(valid, sched[0] * Nt + sched[2], B * Nt)
+    seg_psi = jnp.where(valid, sched[0], B)
+    ga = jnp.zeros((B * Lt, tile_l, g), jnp.float32).at[seg_ga].add(
+        ga_steps, mode="drop"
+    )
+    gb = jnp.zeros((B * Nt, tile_n), jnp.float32).at[seg_gb].add(
+        gb_steps, mode="drop"
+    )
+    psi = jnp.zeros((B,), jnp.float32).at[seg_psi].add(
+        psi_steps[:, 0], mode="drop"
+    )
+    return ga.reshape(B, -1), gb.reshape(B, -1), psi, steps[0, 0]

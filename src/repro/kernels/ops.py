@@ -53,6 +53,7 @@ from repro.kernels.gradpsi import (
     gradpsi_pallas_compact,
     gradpsi_pallas_compact_batched,
     resolve_tile_l,
+    resolve_tile_l_factorized,
     tau_row,
 )
 from repro.kernels.screen import screen_pallas
@@ -562,3 +563,308 @@ def screen_verdicts(
         interpret=interpret,
     )
     return v[:L, :n], flags
+
+
+# -- factorized (materialization-free) entry points ----------------------------
+#
+# The on-the-fly squared-l2 route (docs/geometry.md): the cost operand is a
+# FactorizedCost pytree of scaled sample blocks + squared norms instead of a
+# dense (m_pad, n) array.  The wrappers below mirror the padded dense ones
+# one-for-one; the kernels rebuild each cost tile in VMEM via
+# gradpsi.factorized_cost_tile, so HBM holds O((m + n) d) operand bytes
+# instead of O(m n).
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FactorizedCost:
+    """Squared-l2 cost in factorized form — a drop-in cost-matrix pytree.
+
+    Leaves are the scaled source/target samples and squared norms produced
+    by :class:`repro.ot.geometry.SquaredL2Geometry` (normalization and
+    PAD_COST sentinels are pre-folded into the stored values, so kernels
+    need no extra scale or mask operands for the gradient).  Batched callers
+    carry a leading problem axis on every leaf, which is what lets the
+    sharded path's pytree-prefix specs and ``C[None]``-style lifts treat
+    this exactly like a dense cost array.
+    """
+
+    x: jnp.ndarray      # (..., m_pad, d) fp32 scaled source samples
+    x_sq: jnp.ndarray   # (..., m_pad)    fp32 scaled |x|^2 (+PAD_COST rows)
+    y: jnp.ndarray      # (..., n, d)     fp32 scaled target samples
+    y_sq: jnp.ndarray   # (..., n)        fp32 scaled |y|^2 (+PAD_COST cols)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Shape of the equivalent dense cost array ``(..., m_pad, n)``."""
+        return self.x.shape[:-1] + (self.y.shape[-2],)
+
+    @property
+    def dtype(self):
+        """Dtype of the equivalent dense cost array."""
+        return self.x.dtype
+
+    @property
+    def d(self) -> int:
+        """Feature dimension of the sample blocks."""
+        return self.x.shape[-1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FactorizedProblem:
+    """One-time tile-padded factorized problem (the on-the-fly PaddedProblem).
+
+    Carries the same static geometry fields as :class:`PaddedProblem` (so
+    :func:`pad_tile_inputs`, :func:`pad_screen_state_batched` and
+    :func:`screen_tile_flags_batched` work unchanged) but the cost operand
+    is the tile-padded sample factorization: padded rows are zero samples
+    with ``x_sq = PAD_COST``, padded columns zero samples with
+    ``y_sq = PAD_COST`` — every padded cost entry is >= PAD_COST, so
+    f < 0 there and padded entries contribute exact zeros.
+    """
+
+    x: jnp.ndarray      # (..., L_pad*g, d)
+    x_sq: jnp.ndarray   # (..., L_pad*g)
+    y: jnp.ndarray      # (..., n_pad, d)
+    y_sq: jnp.ndarray   # (..., n_pad)
+    L: int = _meta()
+    g: int = _meta()
+    n: int = _meta()
+    d: int = _meta()
+    L_pad: int = _meta()
+    n_pad: int = _meta()
+    tile_l: int = _meta()
+    tile_n: int = _meta()
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        """``(L_tiles, N_tiles)`` — the kernel grid / flag-matrix shape."""
+        return (self.L_pad // self.tile_l, self.n_pad // self.tile_n)
+
+    @property
+    def num_tiles(self) -> int:
+        """Total tiles in the dense grid (per problem)."""
+        lt, nt = self.grid
+        return lt * nt
+
+
+def prepare_factorized_problem(
+    fc: FactorizedCost,
+    prob: DualProblem,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+) -> FactorizedProblem:
+    """Tile-pad a factorized cost ONCE per solve (batch-polymorphic).
+
+    The factorized analog of :func:`prepare_padded_problem` /
+    :func:`prepare_padded_problem_batched`: leading batch axes on the
+    ``fc`` leaves pass straight through.  TILE_L is resolved with the
+    d-aware VMEM model (the kernels hold a (TILE_L, g, TILE_N, d)
+    intermediate).
+    """
+    from repro.core.groups import PAD_COST
+
+    L, g, n = prob.num_groups, prob.group_size, prob.n
+    d = fc.d
+    if tile_l == 0:
+        tile_l = resolve_tile_l_factorized(
+            L, g, tile_n, d, jnp.dtype(fc.dtype).itemsize
+        )
+    L_pad, n_pad = prob.tile_padded_shape(tile_l, tile_n)
+    lead = fc.x.shape[:-2]
+    x = _pad_axis(
+        fc.x.reshape(lead + (L, g, d)), -3, tile_l, 0.0
+    ).reshape(lead + (L_pad * g, d))
+    x_sq = _pad_axis(
+        fc.x_sq.reshape(lead + (L, g)), -2, tile_l, PAD_COST
+    ).reshape(lead + (L_pad * g,))
+    y = _pad_axis(fc.y, -2, tile_n, 0.0)
+    y_sq = _pad_axis(fc.y_sq, -1, tile_n, PAD_COST)
+    return FactorizedProblem(
+        x=x, x_sq=x_sq, y=y, y_sq=y_sq,
+        L=L, g=g, n=n, d=d, L_pad=L_pad, n_pad=n_pad,
+        tile_l=tile_l, tile_n=tile_n,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("prob", "impl", "interpret")
+)
+def dual_value_and_grad_factorized(
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    flags: jnp.ndarray,             # (L_tiles, N_tiles) int32 skip flags
+    fp: FactorizedProblem,
+    prob: DualProblem,
+    impl: str = "auto",
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Screened materialization-free evaluation (solo).
+
+    Drop-in for :func:`dual_value_and_grad_padded` with the prepared dense
+    cost replaced by a :class:`FactorizedProblem`; bitwise-equal to the
+    dense path on a cost materialized with the same factorized recipe.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.kernels.gradpsi import (
+        gradpsi_fact_pallas,
+        gradpsi_fact_pallas_compact,
+    )
+
+    L, g = fp.L, fp.g
+    assert flags.shape == fp.grid, (flags.shape, fp.grid)
+
+    alphap, betap = pad_tile_inputs(alpha, beta, fp)
+    kw = dict(
+        num_groups=fp.L_pad, group_size=g,
+        tau=_pad_tau(prob.tau_vec(), fp.L, fp.tile_l), gamma=prob.reg.gamma,
+        tile_l=fp.tile_l, tile_n=fp.tile_n, interpret=interpret,
+    )
+
+    def run_grid(flags):
+        rowsum, colsum, psi = gradpsi_fact_pallas(
+            alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, flags, **kw
+        )
+        return rowsum, colsum, psi, jnp.int32(fp.num_tiles)
+
+    def run_compact(flags):
+        sched, nact = build_tile_schedule(flags)
+        return gradpsi_fact_pallas_compact(
+            alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, sched, nact, **kw
+        )
+
+    if impl == "grid":
+        rowsum, colsum, psi, _ = run_grid(flags)
+    elif impl == "compact":
+        rowsum, colsum, psi, _ = run_compact(flags)
+    elif impl == "auto":
+        live = jnp.sum(flags != 0)
+        use_compact = live <= COMPACT_DENSITY_THRESHOLD * fp.num_tiles
+        rowsum, colsum, psi, _ = jax.lax.cond(
+            use_compact, run_compact, run_grid, flags
+        )
+    else:
+        raise ValueError(f"unknown pallas impl: {impl}")
+
+    rowsum = rowsum.reshape(fp.L_pad, g)[:L].reshape(-1)
+    colsum = colsum[: fp.n]
+    value = alpha @ a + beta @ b - psi
+    return value, a - rowsum, b - colsum
+
+
+@functools.partial(
+    jax.jit, static_argnames=("prob", "impl", "interpret")
+)
+def dual_value_and_grad_factorized_batched(
+    alpha: jnp.ndarray,                # (B, m_pad)
+    beta: jnp.ndarray,                 # (B, n)
+    a: jnp.ndarray,                    # (B, m_pad)
+    b: jnp.ndarray,                    # (B, n)
+    flags: jnp.ndarray,                # (B, L_tiles, N_tiles) int32
+    fp: FactorizedProblem,
+    prob: DualProblem,
+    impl: str = "auto",
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Screened materialization-free evaluation of B problems.
+
+    Drop-in for :func:`dual_value_and_grad_padded_batched`; per problem
+    bitwise-equal to the solo factorized path.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.kernels.gradpsi import (
+        gradpsi_fact_pallas_batched,
+        gradpsi_fact_pallas_compact_batched,
+    )
+
+    B = alpha.shape[0]
+    L, g = fp.L, fp.g
+    assert flags.shape == (B,) + fp.grid, (flags.shape, (B,) + fp.grid)
+
+    alphap, betap = pad_tile_inputs(alpha, beta, fp)
+    kw = dict(
+        num_groups=fp.L_pad, group_size=g,
+        tau=_pad_tau(prob.tau_vec(), fp.L, fp.tile_l), gamma=prob.reg.gamma,
+        tile_l=fp.tile_l, tile_n=fp.tile_n, interpret=interpret,
+    )
+
+    def run_grid(flags):
+        return gradpsi_fact_pallas_batched(
+            alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, flags, **kw
+        )
+
+    def run_compact(flags):
+        sched, nact = build_batch_tile_schedule(flags)
+        rowsum, colsum, psi, _ = gradpsi_fact_pallas_compact_batched(
+            alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, sched, nact, **kw
+        )
+        return rowsum, colsum, psi
+
+    if impl == "grid":
+        rowsum, colsum, psi = run_grid(flags)
+    elif impl == "compact":
+        rowsum, colsum, psi = run_compact(flags)
+    elif impl == "auto":
+        live = jnp.sum(flags != 0)
+        use_compact = live <= COMPACT_DENSITY_THRESHOLD * B * fp.num_tiles
+        rowsum, colsum, psi = jax.lax.cond(
+            use_compact, run_compact, run_grid, flags
+        )
+    else:
+        raise ValueError(f"unknown pallas impl: {impl}")
+
+    rowsum = rowsum.reshape(B, fp.L_pad, g)[:, :L].reshape(B, -1)
+    colsum = colsum[:, : fp.n]
+    value = (
+        jnp.sum(alpha * a, axis=-1) + jnp.sum(beta * b, axis=-1) - psi
+    )
+    return value, a - rowsum, b - colsum
+
+
+def snapshot_norms_factorized(
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    fp: FactorizedProblem,
+    prob: DualProblem,
+    row_mask: jnp.ndarray,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Materialization-free Eq. 6 snapshot norms (z~, k~, o~ each (..., L, n)).
+
+    Drop-in for :func:`repro.core.dual.snapshot_norms` on the on-the-fly
+    route: one Pallas pass rebuilds cost tiles from the sample blocks and
+    reduces the three per-group norms in VMEM.  Batch-polymorphic — batched
+    callers vmap the solo kernel (the existing screen-kernel idiom), and a
+    shared ``(m_pad,)`` row mask broadcasts across the batch.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.kernels.screen import snapshot_norms_fact_pallas
+
+    L, g, n = fp.L, fp.g, fp.n
+    alphap, betap = pad_tile_inputs(alpha, beta, fp)
+    mask = row_mask.reshape(row_mask.shape[:-1] + (L, g)).astype(jnp.int8)
+    maskp = _pad_axis(mask, -2, fp.tile_l, 0)
+    maskp = maskp.reshape(maskp.shape[:-2] + (-1,))
+
+    def one(al, be, xv, xs, yv, ys, mk):
+        z, k, o = snapshot_norms_fact_pallas(
+            al, be, xv, xs, yv, ys, mk,
+            num_groups=fp.L_pad, group_size=g,
+            tile_l=fp.tile_l, tile_n=fp.tile_n, interpret=interpret,
+        )
+        return z[:L, :n], k[:L, :n], o[:L, :n]
+
+    if alpha.ndim == 1:
+        return one(alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, maskp)
+
+    B = alphap.shape[0]
+    maskb = jnp.broadcast_to(maskp, (B,) + maskp.shape[-1:])
+    return jax.vmap(one)(
+        alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, maskb
+    )

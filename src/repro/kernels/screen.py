@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.screening import ZERO, CHECK, ACTIVE
-from repro.kernels.gradpsi import tau_row
+from repro.kernels.gradpsi import factorized_cost_tile, tau_row
 
 
 def _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
@@ -135,3 +135,96 @@ def screen_pallas(
     if emit_verdict:
         return outs[0], outs[1]
     return None, outs[0]
+
+
+# -- factorized snapshot-norms kernel (materialization-free route) -------------
+#
+# The dense solver snapshots the Eq. 6 bound matrices via dual.snapshot_norms,
+# which reads the full (m_pad, n) C.  On the on-the-fly route there is no C:
+# this kernel rebuilds each cost tile from sample blocks (the same
+# factorized_cost_tile recipe as the gradient kernels) and reduces the three
+# per-group norms in VMEM, so the only (L, n)-sized HBM traffic is the three
+# bound matrices themselves — exactly what the dense route also writes.
+
+
+def _snapshot_kernel_fact(alpha_ref, beta_ref, x_ref, xsq_ref, y_ref, ysq_ref,
+                          mask_ref, z_ref, k_ref, o_ref):
+    c = factorized_cost_tile(
+        x_ref[...].astype(jnp.float32),                  # (TL, g, d)
+        xsq_ref[...].astype(jnp.float32),                # (TL, g)
+        y_ref[...].astype(jnp.float32),                  # (TN, d)
+        ysq_ref[...].astype(jnp.float32),                # (TN,)
+    )
+    f = (alpha_ref[...].astype(jnp.float32)[:, :, None]
+         + beta_ref[...].astype(jnp.float32)[None, None, :]
+         - c)                                            # (TL, g, TN)
+    fm = jnp.where(mask_ref[...][:, :, None] != 0, f, 0.0)
+    z_ref[...] = jnp.sqrt(jnp.sum(jnp.square(jnp.maximum(fm, 0.0)), axis=1))
+    k_ref[...] = jnp.sqrt(jnp.sum(jnp.square(fm), axis=1))
+    o_ref[...] = jnp.sqrt(jnp.sum(jnp.square(jnp.minimum(fm, 0.0)), axis=1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size",
+                     "tile_l", "tile_n", "interpret"),
+)
+def snapshot_norms_fact_pallas(
+    alpha: jnp.ndarray,        # (L_pad*g,) fp32 tile-padded duals
+    beta: jnp.ndarray,         # (n_pad,) fp32
+    x: jnp.ndarray,            # (L_pad*g, d) fp32 scaled source samples
+    x_sq: jnp.ndarray,         # (L_pad*g,) fp32
+    y: jnp.ndarray,            # (n_pad, d) fp32 scaled target samples
+    y_sq: jnp.ndarray,         # (n_pad,) fp32
+    mask: jnp.ndarray,         # (L_pad*g,) int8 real-row mask
+    *,
+    num_groups: int,           # L_pad (tile-padded group count)
+    group_size: int,
+    tile_l: int = 8,
+    tile_n: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Factorized snapshot norms: returns (z, k, o) each (L_pad, n_pad).
+
+    Per-element math replicates :func:`repro.core.dual.snapshot_norms` on a
+    cost materialized with :func:`factorized_cost_tile` — F is masked to zero
+    on padded group members BEFORE the three reductions, so k~/o~ never see
+    the PAD_COST sentinel rows.  Callers slice ``[:L, :n]``.
+    """
+    L, g = num_groups, group_size
+    d = x.shape[-1]
+    n_pad = beta.shape[0]
+    assert L % tile_l == 0 and n_pad % tile_n == 0, (L, tile_l, n_pad, tile_n)
+    grid = (L // tile_l, n_pad // tile_n)
+
+    alpha_g = alpha.reshape(L, g)
+    x3 = x.reshape(L, g, d)
+    xsq_g = x_sq.reshape(L, g)
+    mask_g = mask.reshape(L, g).astype(jnp.int8)
+
+    row_g = pl.BlockSpec((tile_l, g), lambda l, j: (l, 0))
+    col = pl.BlockSpec((tile_n,), lambda l, j: (j,))
+    mat = pl.BlockSpec((tile_l, tile_n), lambda l, j: (l, j))
+
+    z, k, o = pl.pallas_call(
+        _snapshot_kernel_fact,
+        grid=grid,
+        in_specs=[
+            row_g,                                           # alpha
+            col,                                             # beta
+            pl.BlockSpec((tile_l, g, d), lambda l, j: (l, 0, 0)),  # x
+            row_g,                                           # x_sq
+            pl.BlockSpec((tile_n, d), lambda l, j: (j, 0)),  # y
+            col,                                             # y_sq
+            row_g,                                           # mask
+        ],
+        out_specs=[mat, mat, mat],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((L, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((L, n_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alpha_g, beta, x3, xsq_g, y, y_sq, mask_g)
+
+    return z, k, o

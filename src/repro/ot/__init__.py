@@ -24,6 +24,7 @@ package).
 ``tools/check_api_surface.py`` gates ``__all__`` against docs/api.md.
 """
 from repro.ot.executor import Executor, Stream, compile, solve
+from repro.ot.geometry import CostGeometry, DenseCost, SquaredL2Geometry
 from repro.ot.plan import ExecutionPlan
 from repro.ot.problem import Problem, SubmitOptions
 from repro.ot.solution import Solution
@@ -35,6 +36,9 @@ __all__ = [
     "Executor",
     "Stream",
     "Solution",
+    "CostGeometry",
+    "DenseCost",
+    "SquaredL2Geometry",
     "compile",
     "solve",
 ]

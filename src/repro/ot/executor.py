@@ -42,14 +42,21 @@ from repro.serving.policy import TERMINAL_STATUSES
 
 
 class _Prepared(NamedTuple):
-    """One problem lowered to the executor's template geometry."""
+    """One problem lowered to the executor's template geometry.
 
-    C: np.ndarray          # (m_pad, n_tpl) float32, columns padded if needed
+    Exactly one of ``C`` / ``geom`` is set: dense-routed problems carry the
+    materialized ``(m_pad, n_tpl)`` cost, on-the-fly-routed problems carry
+    the factorized :class:`~repro.ot.geometry.SquaredL2Geometry` instead
+    (the dense cost is only ever rebuilt chunk-wise at solution assembly).
+    """
+
+    C: Optional[np.ndarray]  # (m_pad, n_tpl) float32, columns padded if needed
     a: np.ndarray          # (m_pad,)
     b: np.ndarray          # (n_tpl,)
     spec: G.GroupSpec      # the problem's own layout (sizes may differ)
     perm: np.ndarray       # (m_pad,) padded-row -> original-row
     n: int                 # the problem's true column count
+    geom: Optional[object] = None   # SquaredL2Geometry on the on-the-fly route
 
 
 def compile(
@@ -200,6 +207,10 @@ class Executor:
         if isinstance(result, Solution):
             result = result.result
         base = slv.describe(self._spec, self._n, self._reg, self._opts, result)
+        geom = f"geometry: plan={self._plan.geometry}"
+        if self._template is not None:
+            geom += f" -> route={self._route(self._template)} (template)"
+        base = f"{base}\n{geom}"
         st = self._counters["status"]
         return (
             f"{base}\n"
@@ -227,6 +238,78 @@ class Executor:
         self._counters["status"]["DONE"] += n - nf
 
     # -- problem lowering -----------------------------------------------------
+    def _route(self, problem: Problem) -> str:
+        """Resolve the plan's geometry policy for ONE problem.
+
+        Returns ``'dense'`` (legacy materialized cost), ``'factorized'``
+        (keep samples factorized, lower in the Pallas kernels) or
+        ``'materialize'`` (build the factorized geometry, then materialize
+        it chunk-wise — the fallback that gives the dense/screened
+        reference backends the exact same cost bits as the kernels see).
+        See docs/geometry.md for the decision table.
+        """
+        from repro.ot import geometry as geo
+
+        sel = self._plan.geometry
+        if sel == "dense":
+            return "dense"
+        samples = problem.mode == "samples"
+        pallas = self._plan.grad_impl == "pallas"
+        if sel == "on_the_fly":
+            if not samples:
+                return "dense"          # generic costs: nothing to factorize
+            return "factorized" if pallas else "materialize"
+        # 'auto': on-the-fly only where it pays — sample-mode problems on
+        # the pallas backend whose dense cost would be HBM-significant;
+        # everything else keeps the legacy dense numerics bit-for-bit.
+        if samples and pallas:
+            if self._spec.m_pad * self._n * 4 > geo.AUTO_ONTHEFLY_BYTES:
+                return "factorized"
+        return "dense"
+
+    def _prepare_factorized(self, problem: Problem, route: str) -> _Prepared:
+        """Sample-mode lowering that never builds the (m, n) cost.
+
+        Marginals, permutation and layout checks replicate
+        ``Problem.padded`` exactly; only the cost pipeline is swapped for
+        :class:`~repro.ot.geometry.SquaredL2Geometry`.  ``route=
+        'materialize'`` chunk-materializes the geometry at the end (for
+        the non-pallas backends) so every backend sees identical bits.
+        """
+        from repro.ot.geometry import SquaredL2Geometry
+
+        spec = problem.group_spec()
+        L, g = spec.num_groups, spec.group_size
+        if (L, g) != (self._spec.num_groups, self._spec.group_size):
+            raise ValueError(
+                f"problem layout (L={L}, g_pad={g}) does not match the "
+                f"executor template (L={self._spec.num_groups}, "
+                f"g_pad={self._spec.group_size})"
+            )
+        m, n = problem.num_source, problem.num_target
+        if n > self._n:
+            raise ValueError(
+                f"problem has {n} target columns but the executor compiled "
+                f"for {self._n}; re-compile with the wider template"
+            )
+        geom = SquaredL2Geometry.from_samples(
+            problem.X_S, problem.labels, problem.X_T, spec,
+            normalize_cost=problem.normalize_cost,
+        )
+        b = problem.b if problem.b is not None else np.full((n,), 1.0 / n, np.float32)
+        b = np.asarray(b, np.float32)
+        if n < self._n:                      # auto-pad columns up to template
+            geom = geom.pad_columns(self._n)
+            bf = np.zeros((self._n,), np.float32)
+            bf[:n] = b
+            b = bf
+        a = problem.a if problem.a is not None else np.full((m,), 1.0 / m, np.float32)
+        a_pad = G.pad_marginal(np.asarray(a, np.float32), problem.labels, spec)
+        perm = G.padded_perm(problem.labels, spec)
+        if route == "materialize":
+            return _Prepared(geom.materialize(), a_pad, b, spec, perm, n)
+        return _Prepared(None, a_pad, b, spec, perm, n, geom=geom)
+
     def _prepare(self, problem: Problem) -> _Prepared:
         """Validate compatibility and lower to the template geometry."""
         if problem.reg != self._reg:
@@ -234,6 +317,9 @@ class Executor:
                 f"problem regularizer {problem.reg!r} does not match the "
                 f"executor's {self._reg!r} (programs specialize on it)"
             )
+        route = self._route(problem)
+        if route != "dense":
+            return self._prepare_factorized(problem, route)
         pa = problem.padded()
         L, g = pa.spec.num_groups, pa.spec.group_size
         if (L, g) != (self._spec.num_groups, self._spec.group_size):
@@ -259,10 +345,43 @@ class Executor:
 
     def _stack(self, problems: Sequence[Problem]):
         """Lower + stack a batch; the host cost stack is returned too (it
-        is the largest allocation of a solve — build it exactly once)."""
+        is the largest allocation of a solve — build it exactly once).
+
+        A batch where EVERY problem took the factorized route stacks the
+        four sample/norm leaves into one batched
+        :class:`~repro.kernels.ops.FactorizedCost` and returns
+        ``C_host=None`` (no dense stack exists).  A mixed batch
+        materializes its factorized members chunk-wise first — bitwise
+        harmless, since materialization and the kernels share one cost
+        recipe (docs/geometry.md)."""
         preps = [self._prepare(p) for p in problems]
-        C_host = np.stack([p.C for p in preps])
-        C = jnp.asarray(C_host)
+        if any(p.geom is not None for p in preps) and not all(
+            p.geom is not None for p in preps
+        ):
+            preps = [
+                p._replace(C=p.geom.materialize(), geom=None)
+                if p.geom is not None else p
+                for p in preps
+            ]
+        if preps and all(p.geom is not None for p in preps):
+            dims = {p.geom.dim for p in preps}
+            if len(dims) > 1:
+                raise ValueError(
+                    f"cannot batch factorized problems with different "
+                    f"feature dims {sorted(dims)}; materialize or split"
+                )
+            from repro.kernels import ops as kops
+
+            C_host = None
+            C = kops.FactorizedCost(
+                x=jnp.asarray(np.stack([p.geom.x for p in preps])),
+                x_sq=jnp.asarray(np.stack([p.geom.x_sq for p in preps])),
+                y=jnp.asarray(np.stack([p.geom.y for p in preps])),
+                y_sq=jnp.asarray(np.stack([p.geom.y_sq for p in preps])),
+            )
+        else:
+            C_host = np.stack([p.C for p in preps])
+            C = jnp.asarray(C_host)
         a = jnp.asarray(np.stack([p.a for p in preps]))
         b = jnp.asarray(np.stack([p.b for p in preps]))
         shared = all(p.spec == self._spec for p in preps)
@@ -316,7 +435,8 @@ class Executor:
             row_mask = jnp.broadcast_to(row_mask, (B, self._prob.m_pad))
             sqrt_g = jnp.broadcast_to(sqrt_g, (B, self._prob.num_groups))
         C, a, b, row_mask, sqrt_g, B = shd.pad_batch_to_devices(
-            jnp.asarray(C), jnp.asarray(a), jnp.asarray(b), row_mask, sqrt_g,
+            jax.tree_util.tree_map(jnp.asarray, C),   # dense array OR
+            jnp.asarray(a), jnp.asarray(b), row_mask, sqrt_g,   # FactorizedCost
             self._mesh.size,
         )
         args = shd.device_put_batch((C, a, b, row_mask, sqrt_g), self._mesh)
@@ -339,9 +459,26 @@ class Executor:
         launch over the leading axis) instead of one small program + gather
         per problem — the dual ops are batch-polymorphic, so the per-problem
         slices are bitwise those of a solo recovery.
+
+        On the factorized route (``C_host is None``) the dense cost exists
+        nowhere until here: each problem's cost is chunk-materialized one
+        at a time for plan recovery + solution assembly, bounding peak
+        host memory at one ``(m_pad, n)`` block.  Per-problem recovery is
+        bitwise the batched recovery's slice (same batch-polymorphic ops).
         """
         from repro.core.dual import plan_from_duals
 
+        if C_host is None:
+            out = []
+            for i, p in enumerate(preps):
+                C_i = p.geom.materialize()
+                T_i = np.asarray(plan_from_duals(
+                    batch.alpha[i], batch.beta[i], jnp.asarray(C_i), self._prob
+                ))
+                out.append(build_solution(
+                    batch[i], self._reg, C_i, p.spec, p.perm, p.n, T_pad=T_i
+                ))
+            return out
         T_all = np.asarray(plan_from_duals(
             batch.alpha, batch.beta, jnp.asarray(C_host), self._prob
         ))
@@ -371,6 +508,21 @@ class Executor:
         if problem is None:
             raise ValueError("no problem given and the executor has no template")
         p = self._prepare(problem)
+        if p.geom is not None:
+            from repro.kernels import ops as kops
+
+            fc = kops.FactorizedCost(
+                *(jnp.asarray(v) for v in p.geom.operands())
+            )
+            result = slv._solve_solo(
+                fc, jnp.asarray(p.a), jnp.asarray(p.b),
+                p.spec, self._reg, self._opts, self._launch,
+            )
+            self._record(result.rounds, failed=result.lbfgs_state.failed)
+            # the dense cost exists only here, chunk-built for assembly
+            return build_solution(
+                result, self._reg, p.geom.materialize(), p.spec, p.perm, p.n
+            )
         result = slv._solve_solo(
             jnp.asarray(p.C), jnp.asarray(p.a), jnp.asarray(p.b),
             p.spec, self._reg, self._opts, self._launch,

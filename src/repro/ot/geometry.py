@@ -1,0 +1,272 @@
+"""Cost geometries: how the (m, n) ground cost is represented and lowered.
+
+The facade historically had exactly one answer — materialize a dense
+``(m_pad, n)`` float32 cost matrix on the host and ship it to the device —
+which makes HBM the hard ceiling on problem size.  This module makes the
+cost representation a first-class choice (docs/geometry.md):
+
+:class:`DenseCost`
+    Today's path, unchanged numerics: a dense host-side cost array.
+
+:class:`SquaredL2Geometry`
+    The materialization-free route.  Carries the raw source/target sample
+    blocks plus precomputed squared norms and lowers the cost inside the
+    Pallas kernels via the factorization ``|x|^2 + |y|^2 - 2 x^T y``
+    (clamped at zero), so device memory holds ``O((m + n) d)`` operand
+    bytes instead of ``O(m n)``.  Cost normalization (``1 / max C``) and
+    the PAD_COST sentinels of the uniform group layout are folded into the
+    stored samples/norms at construction, so the kernels need no extra
+    scale or mask operands.
+
+Numerics policy (stated in docs/geometry.md and asserted by
+tests/test_geometry.py): :meth:`SquaredL2Geometry.materialize` uses the
+same f32 recipe (:func:`repro.kernels.gradpsi.factorized_cost_tile`) as
+the kernels — an elementwise product reduced over the feature axis, NOT a
+matmul — so the on-the-fly route is BITWISE-equal to the dense route run
+on the materialized cost, for any tiling or chunking.  Against the legacy
+float64 NumPy pipeline (``core.ot.squared_euclidean_cost`` then cast)
+agreement is tolerance-level only, because the legacy path squares in f64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groups as G
+from repro.kernels.gradpsi import factorized_cost_tile
+
+#: Row-chunk size for chunked/streamed materialization (the generic-cost
+#: fallback): peak host memory per chunk is ``DEFAULT_CHUNK_ROWS * n * 4``
+#: bytes instead of the full ``m_pad * n * 4``.
+DEFAULT_CHUNK_ROWS = 2048
+
+#: ``geometry='auto'`` switches a samples-mode problem to the on-the-fly
+#: route once the dense cost would exceed this many bytes (64 MiB).  Below
+#: it the dense route wins: one HBM-resident C beats re-computing tiles,
+#: and existing small-problem callers keep their exact legacy numerics.
+AUTO_ONTHEFLY_BYTES = 64 * 1024 * 1024
+
+
+_cost_block = jax.jit(factorized_cost_tile)
+
+
+class CostGeometry:
+    """Base class for cost representations the executor can lower.
+
+    Concrete geometries expose the equivalent dense cost through
+    :meth:`row_block` / :meth:`materialize` and report their device-operand
+    footprint through :meth:`hbm_bytes`; :class:`SquaredL2Geometry`
+    additionally lowers directly into the factorized Pallas kernels.
+    """
+
+    @property
+    def rows(self) -> int:
+        """Number of rows of the equivalent dense cost."""
+        raise NotImplementedError
+
+    @property
+    def cols(self) -> int:
+        """Number of columns of the equivalent dense cost."""
+        raise NotImplementedError
+
+    def row_block(self, lo: int, hi: int) -> np.ndarray:
+        """The dense cost rows ``[lo, hi)`` as an f32 array."""
+        raise NotImplementedError
+
+    def materialize(self, chunk_rows: Optional[int] = None) -> np.ndarray:
+        """The full dense cost, built in row chunks of ``chunk_rows``.
+
+        Chunking bounds peak working memory without changing a single bit
+        of the result (asserted by tests/test_geometry.py): every element
+        sees the identical f32 operation sequence regardless of chunk size.
+        """
+        if chunk_rows is None:
+            chunk_rows = DEFAULT_CHUNK_ROWS
+        m = self.rows
+        blocks = [
+            self.row_block(lo, min(lo + chunk_rows, m))
+            for lo in range(0, m, max(chunk_rows, 1))
+        ]
+        return np.concatenate(blocks, axis=0) if len(blocks) > 1 else blocks[0]
+
+    def hbm_bytes(self) -> int:
+        """Device bytes the solve-time cost operand occupies."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCost(CostGeometry):
+    """A dense host-side cost matrix — the legacy geometry, unchanged.
+
+    Parameters
+    ----------
+    C : np.ndarray
+        The ``(rows, cols)`` float32 cost array (typically the padded cost
+        from ``Problem.padded()``).
+    """
+
+    C: np.ndarray
+
+    @property
+    def rows(self) -> int:
+        """Number of rows of ``C``."""
+        return int(self.C.shape[0])
+
+    @property
+    def cols(self) -> int:
+        """Number of columns of ``C``."""
+        return int(self.C.shape[1])
+
+    def row_block(self, lo: int, hi: int) -> np.ndarray:
+        """Slice rows ``[lo, hi)`` of the stored array."""
+        return np.asarray(self.C[lo:hi], np.float32)
+
+    def hbm_bytes(self) -> int:
+        """The full dense array rides in HBM: ``rows * cols * 4``."""
+        return int(self.C.shape[0]) * int(self.C.shape[1]) * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SquaredL2Geometry(CostGeometry):
+    """Factorized squared-l2 cost: samples + squared norms, no (m, n) array.
+
+    Stored values are pre-scaled: normalization and PAD_COST sentinels are
+    folded in at construction (see :meth:`from_samples`), so
+    ``cost[i, j] = max(x_sq[i] + y_sq[j] - 2 <x[i], y[j]>, 0)`` — evaluated
+    by :func:`repro.kernels.gradpsi.factorized_cost_tile` both on-device
+    (kernel tiles) and here (:meth:`materialize`) — IS the normalized padded
+    cost, bit for bit.
+
+    Parameters
+    ----------
+    x : np.ndarray
+        ``(m_pad, d)`` f32 scaled source samples in padded group order
+        (zero rows on group padding).
+    x_sq : np.ndarray
+        ``(m_pad,)`` f32 scaled squared norms; PAD_COST on padded rows.
+    y : np.ndarray
+        ``(n, d)`` f32 scaled target samples.
+    y_sq : np.ndarray
+        ``(n,)`` f32 scaled squared norms; PAD_COST on padded columns
+        (column padding is applied by :meth:`pad_columns`).
+    n_real : int
+        True (unpadded) target count — ``cols`` may exceed it after
+        :meth:`pad_columns`.
+    """
+
+    x: np.ndarray
+    x_sq: np.ndarray
+    y: np.ndarray
+    y_sq: np.ndarray
+    n_real: int
+
+    @classmethod
+    def from_samples(
+        cls,
+        X_S: np.ndarray,
+        labels: np.ndarray,
+        X_T: np.ndarray,
+        spec: G.GroupSpec,
+        normalize_cost: bool = True,
+        chunk_rows: Optional[int] = None,
+    ) -> "SquaredL2Geometry":
+        """Build the factorized geometry from raw samples.
+
+        Rows are stable-sorted by label and padded to the uniform group
+        layout exactly like the dense pipeline (``groups.pad_sources``).
+        With ``normalize_cost`` the scale ``1 / max(C)`` is found by a
+        chunked max pass over the real rows (never materializing C), then
+        folded into the stored samples as ``sqrt(scale)`` and into the
+        squared norms as ``scale``.
+        """
+        if chunk_rows is None:
+            chunk_rows = DEFAULT_CHUNK_ROWS
+        Xs = np.ascontiguousarray(np.asarray(X_S), dtype=np.float32)
+        Y = np.ascontiguousarray(np.asarray(X_T), dtype=np.float32)
+        Xp, _, row_mask = G.pad_sources(Xs, np.asarray(labels), spec)
+        Xp = np.asarray(Xp, np.float32)
+        x_sq0 = np.sum(Xp * Xp, axis=1, dtype=np.float32)
+        y_sq0 = np.sum(Y * Y, axis=1, dtype=np.float32)
+
+        scale = np.float32(1.0)
+        if normalize_cost:
+            real = np.flatnonzero(row_mask)
+            cmax = np.float32(0.0)
+            yj = jnp.asarray(Y)
+            ysqj = jnp.asarray(y_sq0)
+            for lo in range(0, real.size, max(chunk_rows, 1)):
+                rows = real[lo:lo + chunk_rows]
+                block = _cost_block(
+                    jnp.asarray(Xp[rows]), jnp.asarray(x_sq0[rows]), yj, ysqj
+                )
+                cmax = np.maximum(cmax, np.float32(jnp.max(block)))
+            scale = np.float32(1.0) / np.maximum(cmax, np.float32(1e-12))
+
+        root = np.sqrt(scale).astype(np.float32)
+        x = (Xp * root).astype(np.float32)
+        y = (Y * root).astype(np.float32)
+        x_sq = (x_sq0 * scale).astype(np.float32)
+        y_sq = (y_sq0 * scale).astype(np.float32)
+        x_sq = np.where(row_mask, x_sq, np.float32(G.PAD_COST))
+        # padded rows carry zero samples so their cost is PAD_COST + y_sq
+        x = np.where(row_mask[:, None], x, np.float32(0.0))
+        return cls(x=x, x_sq=x_sq, y=y, y_sq=y_sq, n_real=int(Y.shape[0]))
+
+    @property
+    def rows(self) -> int:
+        """Padded source count ``m_pad``."""
+        return int(self.x.shape[0])
+
+    @property
+    def cols(self) -> int:
+        """Target count (including any column padding)."""
+        return int(self.y.shape[0])
+
+    @property
+    def dim(self) -> int:
+        """Feature dimension ``d`` of the sample blocks."""
+        return int(self.x.shape[1])
+
+    def row_block(self, lo: int, hi: int) -> np.ndarray:
+        """Cost rows ``[lo, hi)`` rebuilt with the kernel recipe."""
+        return np.asarray(
+            _cost_block(
+                jnp.asarray(self.x[lo:hi]), jnp.asarray(self.x_sq[lo:hi]),
+                jnp.asarray(self.y), jnp.asarray(self.y_sq),
+            )
+        )
+
+    def pad_columns(self, n_target: int) -> "SquaredL2Geometry":
+        """Pad the target side to ``n_target`` columns with PAD_COST.
+
+        Padded columns carry zero samples and ``y_sq = PAD_COST`` — their
+        cost is >= PAD_COST everywhere, matching the executor's dense
+        column-padding recipe for narrower problems in a wider template.
+        """
+        n = self.cols
+        if n_target == n:
+            return self
+        if n_target < n:
+            raise ValueError(f"cannot shrink columns: {n} -> {n_target}")
+        extra = n_target - n
+        y = np.concatenate(
+            [self.y, np.zeros((extra, self.dim), np.float32)], axis=0
+        )
+        y_sq = np.concatenate(
+            [self.y_sq, np.full((extra,), G.PAD_COST, np.float32)], axis=0
+        )
+        return dataclasses.replace(self, y=y, y_sq=y_sq)
+
+    def operands(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """The ``(x, x_sq, y, y_sq)`` leaves for a kernel FactorizedCost."""
+        return (self.x, self.x_sq, self.y, self.y_sq)
+
+    def hbm_bytes(self) -> int:
+        """Device operand bytes: ``(m_pad + n)(d + 1) * 4`` — no (m, n) term."""
+        return 4 * (
+            self.x.size + self.x_sq.size + self.y.size + self.y_sq.size
+        )

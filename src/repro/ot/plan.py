@@ -23,6 +23,7 @@ from repro.core.solver import SolveOptions
 GRAD_IMPLS = ("dense", "screened", "pallas")
 PALLAS_IMPLS = ("grid", "compact", "auto")
 BATCHING = ("auto", "solo", "batched")
+GEOMETRIES = ("auto", "dense", "on_the_fly")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,14 @@ class ExecutionPlan:
         Device policy: ``'single'`` stays on one device; ``'all'`` (or an
         int device count) runs batched solves under ``shard_map`` with the
         problem axis over a 1-D mesh (:mod:`repro.core.sharded`).
+    geometry : {'auto', 'dense', 'on_the_fly'}
+        Cost representation (docs/geometry.md).  ``'dense'`` materializes
+        the (m_pad, n) cost; ``'on_the_fly'`` keeps squared-l2 sample-mode
+        problems factorized and rebuilds cost tiles inside the Pallas
+        kernels (other problem/backend combinations fall back to a
+        chunked materialization); ``'auto'`` picks on-the-fly exactly when
+        the problem is sample-mode, the backend is pallas, and the dense
+        cost would exceed ``repro.ot.geometry.AUTO_ONTHEFLY_BYTES``.
     history, max_iters, gtol, ftol, c1, c2, max_linesearch, init_step :
         Inner L-BFGS configuration, field-for-field
         :class:`repro.core.lbfgs.LbfgsOptions`.
@@ -61,6 +70,7 @@ class ExecutionPlan:
     tight_active_refresh: bool = False
     batching: str = "auto"
     devices: Union[str, int] = "single"
+    geometry: str = "auto"
     # inner optimizer (absorbs LbfgsOptions field-for-field)
     history: int = 10
     max_iters: int = 500
@@ -83,6 +93,10 @@ class ExecutionPlan:
         if self.batching not in BATCHING:
             raise ValueError(
                 f"batching must be one of {BATCHING}, got {self.batching!r}"
+            )
+        if self.geometry not in GEOMETRIES:
+            raise ValueError(
+                f"geometry must be one of {GEOMETRIES}, got {self.geometry!r}"
             )
         if isinstance(self.devices, str):
             if self.devices not in ("single", "all"):

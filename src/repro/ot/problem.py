@@ -339,6 +339,46 @@ class Problem:
             G.padded_perm(self.labels, spec),
         )
 
+    def materialized(self, chunk_rows: Optional[int] = None) -> "Problem":
+        """Samples-mode -> cost-mode Problem with the FACTORIZED-recipe cost.
+
+        The returned problem carries the dense cost the materialization-
+        free route would see — built chunk-wise with
+        :meth:`repro.ot.geometry.SquaredL2Geometry.materialize` and
+        un-permuted back to this problem's row order — so solving it on
+        the dense geometry is bitwise-comparable to solving ``self`` on
+        the on-the-fly geometry (the assertion examples/quickstart.py
+        makes).  NOTE this is the kernels' f32 recipe, not the legacy f64
+        ``core.ot.squared_euclidean_cost`` pipeline; the two agree only to
+        f32 tolerance (docs/geometry.md).  Non-samples problems are
+        returned unchanged.
+
+        Parameters
+        ----------
+        chunk_rows : int, optional
+            Row-chunk size for the streamed materialization (bounds peak
+            memory; any value yields identical bits).
+        """
+        if self.mode != "samples":
+            return self
+        from repro.ot.geometry import SquaredL2Geometry
+
+        spec = self.group_spec()
+        geom = SquaredL2Geometry.from_samples(
+            self.X_S, self.labels, self.X_T, spec,
+            normalize_cost=self.normalize_cost, chunk_rows=chunk_rows,
+        )
+        C_pad = geom.materialize(chunk_rows)
+        perm = G.padded_perm(self.labels, spec)
+        real = perm >= 0
+        C = np.empty((self.num_source, self.num_target), np.float32)
+        C[perm[real]] = C_pad[real]
+        return Problem(
+            reg=self.reg, C=C, labels=self.labels, a=self.a, b=self.b,
+            normalize_cost=self.normalize_cost, pad_to=self.pad_to,
+            submit=self.submit,
+        )
+
     # -- (de)serialization + equality -----------------------------------------
     def config(self) -> dict:
         """JSON-able description; :meth:`from_config` inverts it exactly."""

@@ -1,0 +1,294 @@
+"""Cost geometries: the materialization-free squared-l2 route (docs/geometry.md).
+
+The load-bearing contract is bitwise *per backend*: a sample-mode problem
+solved on ``geometry='on_the_fly'`` equals — bit for bit — the SAME
+backend solving ``problem.materialized()`` on ``geometry='dense'``, because
+materialization and the kernels share one f32 cost recipe
+(``repro.kernels.gradpsi.factorized_cost_tile``).  Cross-backend equality
+stays at the repo's existing tolerance contract (tests/test_core_ot.py).
+
+Also gated here: chunked materialization is bitwise chunk-size-invariant,
+the f64 factorized reference pins a committed golden fixture, solo ==
+batched == sharded on the on-the-fly route, the ``auto`` HBM-bytes
+threshold, the chunked dense fallback for non-pallas backends, plan
+``geometry`` validation/round-trip, and the sample-preserving
+``Problem.config`` round-trip (ISSUE 7 satellite fix).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conftest import FIXTURE_DIR
+
+import repro.ot as ot
+from repro.core import groups as G
+from repro.core.cpu_baseline import factorized_squared_l2_cost
+from repro.core.regularizers import GroupSparseReg
+from repro.ot.geometry import DenseCost, SquaredL2Geometry
+
+IMPLS = ("dense", "screened", "pallas")
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def sample_coords(seed=0, L=4, g=6, n=40, d=3):
+    """Deterministic raw-sample problem (ragged groups exercise padding)."""
+    rng = np.random.default_rng(seed)
+    m = L * g + 3
+    labels = np.concatenate([np.arange(L), rng.integers(0, L, m - L)])
+    X_S = rng.normal(size=(m, d)) + labels[:, None]
+    X_T = rng.normal(size=(n, d)) + rng.integers(0, L, n)[:, None]
+    return X_S, labels, X_T
+
+
+def sample_problem(seed=0, **kw):
+    X_S, labels, X_T = sample_coords(seed)
+    reg = kw.pop("reg", GroupSparseReg.from_rho(1.0, 0.6))
+    return ot.Problem.from_samples(X_S, labels, X_T, reg, pad_to=4, **kw)
+
+
+def make_plan(impl, geometry):
+    return ot.ExecutionPlan(grad_impl=impl, geometry=geometry, max_iters=150)
+
+
+def assert_solutions_bitwise(s1, s2):
+    assert s1.value == s2.value
+    assert np.array_equal(np.asarray(s1.alpha), np.asarray(s2.alpha))
+    assert np.array_equal(np.asarray(s1.beta), np.asarray(s2.beta))
+    assert np.array_equal(np.asarray(s1.plan), np.asarray(s2.plan))
+
+
+# ------------------------------------------------------------- golden fixture
+def test_factorized_f64_golden_fixture():
+    """The f64 reference recipe pins committed values; f32 tracks it."""
+    with open(os.path.join(FIXTURE_DIR, "golden_geometry.json")) as f:
+        gold = json.load(f)
+    c = gold["coords"]
+    X_S, labels, X_T = sample_coords(c["seed"], c["L"], c["g"], c["n"], c["d"])
+    C64 = factorized_squared_l2_cost(X_S, X_T)
+    assert C64.sum() == pytest.approx(gold["sum"], rel=1e-12)
+    assert C64.max() == pytest.approx(gold["max"], rel=1e-12)
+    for i, j, v in gold["probes"]:
+        assert C64[i, j] == pytest.approx(v, rel=1e-12, abs=1e-12)
+    # the f32 on-the-fly recipe agrees with the f64 reference at f32 tol
+    prob = ot.Problem.from_samples(
+        X_S, labels, X_T, GroupSparseReg.from_rho(1.0, 0.6),
+        pad_to=4, normalize_cost=False,
+    )
+    C32 = np.asarray(prob.materialized().C)
+    np.testing.assert_allclose(C32, C64, rtol=2e-5, atol=2e-4)
+
+
+def test_materialize_is_chunk_invariant_bitwise():
+    prob = sample_problem(0)
+    spec = prob.group_spec()
+    geom = SquaredL2Geometry.from_samples(prob.X_S, prob.labels, prob.X_T, spec)
+    full = geom.materialize()
+    assert np.array_equal(geom.materialize(chunk_rows=7), full)
+    assert np.array_equal(geom.materialize(chunk_rows=10**6), full)
+    assert np.array_equal(geom.row_block(3, 9), full[3:9])
+    # column padding appends PAD_COST columns without touching real ones
+    wide = geom.pad_columns(geom.cols + 8)
+    Cw = wide.materialize()
+    assert np.array_equal(Cw[:, : geom.cols], full)
+    assert np.all(Cw[:, geom.cols:] >= G.PAD_COST)
+    with pytest.raises(ValueError, match="shrink"):
+        geom.pad_columns(geom.cols - 1)
+
+
+# ----------------------------------------------- per-backend bitwise parity
+@pytest.mark.parametrize("impl", IMPLS)
+def test_onthefly_matches_materialized_dense_bitwise(impl):
+    """geometry='on_the_fly' == same backend on problem.materialized()."""
+    prob = sample_problem(1)
+    sf = ot.solve(prob, make_plan(impl, "on_the_fly"))
+    sd = ot.solve(prob.materialized(), make_plan(impl, "dense"))
+    assert_solutions_bitwise(sf, sd)
+
+
+def test_solo_batched_parity_on_the_fly():
+    prob = sample_problem(2)
+    prob2 = ot.Problem.from_samples(
+        prob.X_S, prob.labels, np.asarray(prob.X_T) * 1.1, prob.reg, pad_to=4
+    )
+    plan = make_plan("pallas", "on_the_fly")
+    ex = ot.compile(prob, plan)
+    solo = [ex.solve(prob), ex.solve(prob2)]
+    batched = ex.solve_many([prob, prob2])
+    for s, b in zip(solo, batched):
+        assert_solutions_bitwise(s, b)
+    streamed = ex.stream([prob, prob2]).solutions()
+    for s, st in zip(batched, streamed):
+        assert_solutions_bitwise(s, st)
+
+
+def test_sharded_parity_on_the_fly():
+    """4 forced host devices: sharded on-the-fly == unsharded, bitwise.
+
+    Ragged B=3 over 4 devices also exercises the factorized dummy-problem
+    padding (zero samples + PAD_COST norms).
+    """
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        assert jax.device_count() == 4, jax.device_count()
+        import repro.ot as ot
+        from repro.core.regularizers import GroupSparseReg
+
+        rng = np.random.default_rng(2)
+        L, g, n, d = 4, 6, 40, 3
+        m = L * g + 3
+        labels = np.concatenate([np.arange(L), rng.integers(0, L, m - L)])
+        X_S = rng.normal(size=(m, d)) + labels[:, None]
+        X_T = rng.normal(size=(n, d)) + rng.integers(0, L, n)[:, None]
+        reg = GroupSparseReg.from_rho(1.0, 0.6)
+        probs = [
+            ot.Problem.from_samples(X_S, labels, X_T * s, reg, pad_to=4)
+            for s in (1.0, 1.1, 0.9)
+        ]
+        plan = ot.ExecutionPlan(grad_impl="pallas", geometry="on_the_fly",
+                                max_iters=150)
+        flat = ot.compile(probs[0], plan).solve_many(probs)
+        shp = ot.ExecutionPlan(grad_impl="pallas", geometry="on_the_fly",
+                               max_iters=150, devices="all")
+        sh = ot.compile(probs[0], shp).solve_many(probs)
+        for a, b in zip(flat, sh):
+            assert a.value == b.value, (a.value, b.value)
+            assert np.array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+            assert np.array_equal(np.asarray(a.plan), np.asarray(b.plan))
+        print("SHARDED-OK")
+    """)
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=4",
+        PYTHONPATH=SRC,
+        JAX_PLATFORMS="cpu",
+    )
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARDED-OK" in r.stdout
+
+
+# --------------------------------------------------- routing + fallback paths
+def test_auto_threshold_routes(monkeypatch):
+    import repro.ot.geometry as geo
+
+    prob = sample_problem(4)
+    # small problem: auto stays dense (legacy numerics untouched)
+    ex = ot.compile(prob, ot.ExecutionPlan(grad_impl="pallas"))
+    assert ex._route(prob) == "dense"
+    # above the byte threshold: auto flips to factorized — and the result
+    # is the explicit on-the-fly route's, bit for bit
+    monkeypatch.setattr(geo, "AUTO_ONTHEFLY_BYTES", 0)
+    ex2 = ot.compile(prob, ot.ExecutionPlan(grad_impl="pallas", max_iters=150))
+    assert ex2._route(prob) == "factorized"
+    assert_solutions_bitwise(
+        ex2.solve(), ot.solve(prob, make_plan("pallas", "on_the_fly"))
+    )
+    # non-pallas backends never factorize under auto
+    assert ot.compile(
+        prob, ot.ExecutionPlan(grad_impl="screened")
+    )._route(prob) == "dense"
+    # cost-mode problems have nothing to factorize even when asked
+    assert ot.compile(
+        prob.materialized(), ot.ExecutionPlan(grad_impl="pallas",
+                                              geometry="on_the_fly")
+    )._route(prob.materialized()) == "dense"
+
+
+def test_chunked_fallback_smoke(monkeypatch):
+    """Non-pallas backend + on_the_fly -> chunked dense materialization.
+
+    This is the too-large-for-dense escape hatch driven at a tiny chunk
+    size: the streamed build must be bitwise chunk-invariant end to end.
+    """
+    import repro.ot.geometry as geo
+
+    prob = sample_problem(5)
+    plan = make_plan("screened", "on_the_fly")
+    s1 = ot.solve(prob, plan)
+    monkeypatch.setattr(geo, "DEFAULT_CHUNK_ROWS", 5)
+    s2 = ot.solve(prob, plan)
+    assert_solutions_bitwise(s1, s2)
+    # and the screened fallback equals the pallas kernel route at the
+    # repo's cross-backend tolerance (same cost bits, different backend)
+    sp = ot.solve(prob, make_plan("pallas", "on_the_fly"))
+    np.testing.assert_allclose(sp.value, s1.value, rtol=2e-5, atol=2e-5)
+
+
+def test_mixed_batch_materializes_factorized_members():
+    prob = sample_problem(6)
+    plan = make_plan("pallas", "on_the_fly")
+    ex = ot.compile(prob, plan)
+    mixed = ex.solve_many([prob, prob.materialized()])
+    solo = ex.solve(prob)
+    # the factorized member got materialized for stacking — same bits
+    assert_solutions_bitwise(mixed[0], solo)
+
+
+def test_solver_rejects_factorized_on_reference_backends():
+    from repro.core.solver import SolveOptions, solve_dual
+    from repro.kernels import ops as kops
+    import jax.numpy as jnp
+
+    prob = sample_problem(7)
+    spec = prob.group_spec()
+    geom = SquaredL2Geometry.from_samples(prob.X_S, prob.labels, prob.X_T, spec)
+    fc = kops.FactorizedCost(*(jnp.asarray(v) for v in geom.operands()))
+    assert fc.shape == (geom.rows, geom.cols)
+    assert fc.d == geom.dim
+    m = prob.num_source
+    a = jnp.asarray(G.pad_marginal(
+        np.full((m,), 1.0 / m, np.float32), prob.labels, spec))
+    b = jnp.full((geom.cols,), np.float32(1.0 / geom.cols))
+    for impl in ("dense", "screened"):
+        with pytest.raises(TypeError, match="pallas"):
+            solve_dual(fc, a, b, spec, prob.reg,
+                       SolveOptions(grad_impl=impl))
+    # DenseCost wraps the legacy representation faithfully
+    C = geom.materialize()
+    dc = DenseCost(C)
+    assert (dc.rows, dc.cols) == C.shape
+    assert dc.hbm_bytes() == C.size * 4
+    assert np.array_equal(dc.materialize(chunk_rows=9), C)
+    assert geom.hbm_bytes() < dc.hbm_bytes()
+
+
+# ------------------------------------------------- config round-trips + plan
+def test_plan_geometry_field_and_roundtrip():
+    with pytest.raises(ValueError, match="geometry"):
+        ot.ExecutionPlan(geometry="bogus")
+    plan = ot.ExecutionPlan(geometry="on_the_fly")
+    assert ot.ExecutionPlan.from_config(
+        json.loads(json.dumps(plan.config()))
+    ) == plan
+    # geometry stays out of the legacy SolveOptions bijection
+    opts = plan.solve_options()
+    assert not hasattr(opts, "geometry")
+    assert ot.ExecutionPlan.from_solve_options(opts).geometry == "auto"
+
+
+def test_problem_config_roundtrip_preserves_samples():
+    """ISSUE 7 satellite fix: serialized sample-mode problems re-resolve
+    to the same geometry (raw samples + dtypes survive the round-trip)."""
+    prob = sample_problem(8)
+    cfg = json.loads(json.dumps(prob.config()))
+    rebuilt = ot.Problem.from_config(cfg)
+    assert rebuilt.mode == "samples"
+    for name in ("X_S", "X_T", "labels"):
+        v0, v1 = getattr(prob, name), getattr(rebuilt, name)
+        assert v1.dtype == v0.dtype
+        assert np.array_equal(v1, v0)
+    assert rebuilt == prob
+    # identical factorized geometry -> identical materialized bits
+    assert np.array_equal(
+        np.asarray(rebuilt.materialized().C), np.asarray(prob.materialized().C)
+    )
+    # and an identical on-the-fly solve
+    plan = make_plan("pallas", "on_the_fly")
+    assert_solutions_bitwise(ot.solve(rebuilt, plan), ot.solve(prob, plan))

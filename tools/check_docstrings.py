@@ -26,6 +26,7 @@ DEFAULT_FILES = [
     "src/repro/ot/__init__.py",
     "src/repro/ot/problem.py",
     "src/repro/ot/plan.py",
+    "src/repro/ot/geometry.py",
     "src/repro/ot/solution.py",
     "src/repro/ot/executor.py",
     "src/repro/core/regularizers.py",
