@@ -28,9 +28,10 @@ same problem in an unsharded ``solve_batch`` (and hence to its solo
 ``solve_dual``).  Per-problem math reduces only over trailing axes, and
 the two Pallas grid modes produce bitwise-equal outputs, so even the
 ``impl='auto'`` density switch — which sees shard-local live counts
-instead of batch-global ones — cannot break parity.  Asserted for all
-three ``grad_impl`` backends by tests/test_sharded.py on 4 forced host
-devices.
+instead of batch-global ones — cannot break parity.  The same holds for
+the fused backend's runtime switch (both of its branches are bitwise
+equal too).  Asserted for all ``grad_impl`` backends by
+tests/test_sharded.py on 4 forced host devices.
 
 Mesh construction is wired through :func:`repro.core.distributed.make_batch_mesh`
 (the 1-D :data:`~repro.core.distributed.BATCH_AXIS` mesh) and
@@ -228,12 +229,13 @@ def _sharded_programs(mesh: Mesh, prob: DualProblem, opts: slv.SolveOptions):
     return solve, init, rnd
 
 
-def prepare_padded_sharded(C: jnp.ndarray, prob: DualProblem, mesh: Mesh):
+def prepare_padded_sharded(C: jnp.ndarray, prob: DualProblem, mesh: Mesh,
+                           precision: str = "f32"):
     """Build the batched PaddedProblem with its cost matrix mesh-sharded.
 
-    The pallas backend's tile-padded cost copy is the largest array in a
-    solve; long-lived callers (engine buckets) build it once and keep its
-    ``Cp`` committed shard-wise so a tick never re-pads or re-uploads.
+    The pallas/fused backends' tile-padded cost copy is the largest array
+    in a solve; long-lived callers (engine buckets) build it once and keep
+    its ``Cp`` committed shard-wise so a tick never re-pads or re-uploads.
 
     Parameters
     ----------
@@ -243,6 +245,10 @@ def prepare_padded_sharded(C: jnp.ndarray, prob: DualProblem, mesh: Mesh):
         Static problem geometry.
     mesh : jax.sharding.Mesh
         The 1-D batch mesh.
+    precision : {'f32', 'bf16'}
+        Cost-operand storage; 'bf16' downcasts the prepared cost leaves
+        exactly as :func:`repro.core.solver._prepare_padded` does, so a
+        sharded bf16 solve sees the same rounded cost as an unsharded one.
 
     Returns
     -------
@@ -252,12 +258,24 @@ def prepare_padded_sharded(C: jnp.ndarray, prob: DualProblem, mesh: Mesh):
         FactorizedProblem whose four sample/norm leaves are sharded the
         same way (every leaf carries the leading problem axis).
     """
+    import dataclasses
+
     from repro.kernels import ops as kops
 
     if isinstance(C, kops.FactorizedCost):
         pp = kops.prepare_factorized_problem(C, prob)
+        if precision == "bf16":
+            pp = dataclasses.replace(
+                pp,
+                x=pp.x.astype(jnp.bfloat16),
+                x_sq=pp.x_sq.astype(jnp.bfloat16),
+                y=pp.y.astype(jnp.bfloat16),
+                y_sq=pp.y_sq.astype(jnp.bfloat16),
+            )
     else:
         pp = kops.prepare_padded_problem_batched(jnp.asarray(C), prob)
+        if precision == "bf16":
+            pp = dataclasses.replace(pp, Cp=pp.Cp.astype(jnp.bfloat16))
     return device_put_batch(pp, mesh)
 
 
@@ -291,8 +309,9 @@ def init_batch_state_sharded(
     repro.core.solver.BatchSolveState
         Sharded initial state (valid snapshots + first oracle evaluation).
     """
-    if padded is None and opts.grad_impl == "pallas":
-        padded = prepare_padded_sharded(C, prob, mesh)
+    if padded is None and opts.grad_impl in ("pallas", "fused"):
+        padded = prepare_padded_sharded(C, prob, mesh,
+                                        precision=opts.precision)
     _, init, _ = _sharded_programs(mesh, prob, opts)
     return init(C, a, b, row_mask, sqrt_g, padded)
 
@@ -317,8 +336,9 @@ def batch_round_sharded(
     repro.core.solver.BatchSolveState
         The advanced sharded state.
     """
-    if padded is None and opts.grad_impl == "pallas":
-        padded = prepare_padded_sharded(C, prob, mesh)
+    if padded is None and opts.grad_impl in ("pallas", "fused"):
+        padded = prepare_padded_sharded(C, prob, mesh,
+                                        precision=opts.precision)
     _, _, rnd = _sharded_programs(mesh, prob, opts)
     return rnd(state, C, a, b, row_mask, sqrt_g, padded)
 
@@ -354,7 +374,8 @@ def solve_batch_sharded(
     reg : Regularizer
         Regularizer parameters.
     opts : SolveOptions, optional
-        Any ``grad_impl`` backend ('dense' | 'screened' | 'pallas').
+        Any ``grad_impl`` backend
+        ('dense' | 'screened' | 'pallas' | 'fused').
     mesh : jax.sharding.Mesh, optional
         1-D batch mesh; defaults to
         :func:`~repro.core.distributed.make_batch_mesh` over every local

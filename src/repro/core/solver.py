@@ -13,9 +13,12 @@ The gradient oracle inside a round evaluates, per Algorithm 2:
 ``grad_impl`` selects the execution backend:
   'dense'     original (unscreened) method — the paper's "origin",
   'screened'  screening with masked XLA ops (accounting-exact reference),
-  'pallas'    the block-masked Pallas kernel from repro.kernels.
+  'pallas'    the block-masked Pallas kernels from repro.kernels
+              (two launches per evaluation: screen, then gradient),
+  'fused'     the single-launch mega-kernel — verdicts computed
+              in-register inside the gradient grid step (DESIGN.md §10).
 
-By Theorem 2 all three return identical objective values and iterates
+By Theorem 2 all backends return identical objective values and iterates
 (screening only ever zeroes provably-zero entries); tests assert this.
 
 Batching: the dual is separable over problems, so B same-shape problems
@@ -67,26 +70,41 @@ class SolveOptions:
         ``r`` in Algorithm 1 — L-BFGS iterations per screening round.
     max_rounds : int
         Cap on the number of rounds (``s_r``).
-    grad_impl : {'dense', 'screened', 'pallas'}
+    grad_impl : {'dense', 'screened', 'pallas', 'fused'}
         Gradient oracle backend: the paper's unscreened origin, the
-        masked-XLA screened reference, or the Pallas kernel pipeline.
+        masked-XLA screened reference, the two-launch Pallas pipeline
+        (screen kernel -> gradient kernel), or the fused single-launch
+        mega-kernel (verdicts computed in-register, DESIGN.md §10).
     pallas_impl : {'grid', 'compact', 'auto'}
         Kernel grid mode for ``grad_impl='pallas'`` (see kernels/ops.py).
+        For ``grad_impl='fused'``: 'grid' is the fused dense grid,
+        'compact' the two-launch reference, 'auto' a runtime switch on the
+        snapshot-point live-tile density.
     tight_active_refresh : bool
         Beyond-paper tighter active-set refresh (off for paper fidelity).
+    precision : {'f32', 'bf16'}
+        Cost-operand storage precision for the pallas/fused backends:
+        'bf16' stores the prepared cost (or factorized sample blocks) in
+        bfloat16 while every kernel still upcasts on load and accumulates
+        T/psi in f32.  Screening snapshots are taken against the SAME
+        bf16-rounded cost, so the Eq. 6 bounds stay exactly safe w.r.t.
+        the cost the gradient actually sees (docs/geometry.md numerics
+        policy).  Rejected for the dense/screened reference backends.
     lbfgs : LbfgsOptions
         Inner optimizer configuration.
     """
 
     snapshot_every: int = 10          # r in Algorithm 1
     max_rounds: int = 200             # cap on s_r
-    grad_impl: str = "screened"       # 'dense' | 'screened' | 'pallas'
+    grad_impl: str = "screened"       # 'dense' | 'screened' | 'pallas' | 'fused'
     pallas_impl: str = "auto"         # 'grid' | 'compact' | 'auto': kernel
-    #   grid mode for grad_impl='pallas' (see kernels/ops.py docstring)
+    #   grid mode for grad_impl='pallas'/'fused' (see kernels/ops.py docstring)
     tight_active_refresh: bool = False  # beyond-paper: refresh N *after* the
     #   snapshot update (Delta = 0 => lower bound k~ - o~, strictly tighter
     #   than Eq. 7 evaluated pre-update; N stays a performance hint so
     #   exactness is unaffected).  Off by default for paper fidelity.
+    precision: str = "f32"            # 'f32' | 'bf16' cost-operand storage
+    #   (pallas/fused only; accumulation is always f32)
     lbfgs: LbfgsOptions = dataclasses.field(default_factory=LbfgsOptions)
 
 
@@ -254,7 +272,7 @@ def make_value_and_grad(
 
         return vag
 
-    if grad_impl == "pallas":
+    if grad_impl in ("pallas", "fused"):
         assert screen_state is not None
         from repro.kernels import ops as kops
 
@@ -265,12 +283,25 @@ def make_value_and_grad(
                 if _is_factorized(C)
                 else kops.prepare_padded_problem(C, prob)
             )
+        pstate = kops.pad_screen_state(screen_state, sqrt_g, pp)
+
+        if grad_impl == "fused":
+            # single-launch oracle: verdicts computed in-register inside the
+            # gradient grid step (DESIGN.md §10); no standalone screen pass.
+            def vag(x):
+                alpha, beta = _split(x, m_pad)
+                v, ga, gb = kops.dual_value_and_grad_fused(
+                    alpha, beta, a, b, pstate, pp, prob, impl=pallas_impl
+                )
+                return -v, -jnp.concatenate([ga, gb])
+
+            return vag
+
         grad_fn = (
             kops.dual_value_and_grad_factorized
             if isinstance(pp, kops.FactorizedProblem)
             else kops.dual_value_and_grad_padded
         )
-        pstate = kops.pad_screen_state(screen_state, sqrt_g, pp)
 
         def vag(x):
             alpha, beta = _split(x, m_pad)
@@ -336,7 +367,7 @@ def make_value_and_grad_batched(
 
         return vag
 
-    if grad_impl == "pallas":
+    if grad_impl in ("pallas", "fused"):
         assert screen_state is not None
         from repro.kernels import ops as kops
 
@@ -348,13 +379,24 @@ def make_value_and_grad_batched(
                 if _is_factorized(C)
                 else kops.prepare_padded_problem_batched(C, prob)
             )
+        sqb = jnp.broadcast_to(sqrt_g, (B, prob.num_groups))
+        pstate = kops.pad_screen_state_batched(screen_state, sqb, pp)
+
+        if grad_impl == "fused":
+            def vag(x):
+                alpha, beta = _split(x, m_pad)
+                v, ga, gb = kops.dual_value_and_grad_fused_batched(
+                    alpha, beta, a, b, pstate, pp, prob, impl=pallas_impl
+                )
+                return -v, -jnp.concatenate([ga, gb], axis=-1)
+
+            return vag
+
         grad_fn = (
             kops.dual_value_and_grad_factorized_batched
             if isinstance(pp, kops.FactorizedProblem)
             else kops.dual_value_and_grad_padded_batched
         )
-        sqb = jnp.broadcast_to(sqrt_g, (B, prob.num_groups))
-        pstate = kops.pad_screen_state_batched(screen_state, sqb, pp)
 
         def vag(x):
             alpha, beta = _split(x, m_pad)
@@ -393,13 +435,21 @@ def _reject_factorized(C, grad_impl: str) -> None:
         )
 
 
-def _snapshot_norms_any(alpha, beta, C, prob, row_mask, padded):
+def _snapshot_norms_any(alpha, beta, C, prob, row_mask, padded,
+                        precision="f32"):
     """Eq. 6 snapshot norms for either cost representation.
 
     Dense costs use the closed-form ``dual.snapshot_norms``; factorized
     costs run the materialization-free Pallas snapshot kernel against the
     prepared :class:`~repro.kernels.ops.FactorizedProblem` (building one on
     the fly if the caller had no pallas preparation).
+
+    ``precision='bf16'`` rounds the dense cost through bfloat16 first so
+    the snapshot bounds describe EXACTLY the cost the kernels integrate
+    (``_prepare_padded`` stored ``Cp`` in bf16) — screening correctness is
+    then exact with respect to the rounded problem, not approximate with
+    respect to the f32 one.  The factorized route is consistent for free:
+    the snapshot kernel reads the same (possibly bf16) prepared leaves.
     """
     if _is_factorized(C):
         from repro.kernels import ops as kops
@@ -408,24 +458,50 @@ def _snapshot_norms_any(alpha, beta, C, prob, row_mask, padded):
         if fp is None:
             fp = kops.prepare_factorized_problem(C, prob)
         return kops.snapshot_norms_factorized(alpha, beta, fp, prob, row_mask)
+    if precision == "bf16":
+        C = C.astype(jnp.bfloat16).astype(C.dtype)
     return snapshot_norms(alpha, beta, C, prob, row_mask)
 
 
 def _prepare_padded(C, prob, opts):
-    """One-time padded-problem preparation for the pallas backend.
+    """One-time padded-problem preparation for the pallas/fused backends.
 
     The padded copy of C (the largest array in the problem) is made once
     per solve / per engine round, outside the L-BFGS evaluation loop.
     Factorized costs get a tile-padded :class:`FactorizedProblem` instead
     — no (m, n) array is ever built.
+
+    ``opts.precision == 'bf16'`` downcasts the prepared cost operands
+    (``Cp`` or the factorized ``x/x_sq/y/y_sq`` blocks) to bfloat16 HERE,
+    once, so every downstream consumer — snapshot norms, screening bounds,
+    and the gradient kernels — sees the SAME rounded cost.  Kernels upcast
+    on load and accumulate T/psi in f32 (docs/api.md "precision").
     """
-    if opts.grad_impl != "pallas":
+    if opts.grad_impl not in ("pallas", "fused"):
+        if opts.precision != "f32":
+            raise ValueError(
+                "precision='bf16' requires grad_impl='pallas' or 'fused' "
+                f"(got grad_impl={opts.grad_impl!r}); the dense/screened "
+                "reference backends are f32-only."
+            )
         return None
     from repro.kernels import ops as kops
 
     if _is_factorized(C):
-        return kops.prepare_factorized_problem(C, prob)
-    return kops.prepare_padded_problem_batched(C, prob)
+        fp = kops.prepare_factorized_problem(C, prob)
+        if opts.precision == "bf16":
+            fp = dataclasses.replace(
+                fp,
+                x=fp.x.astype(jnp.bfloat16),
+                x_sq=fp.x_sq.astype(jnp.bfloat16),
+                y=fp.y.astype(jnp.bfloat16),
+                y_sq=fp.y_sq.astype(jnp.bfloat16),
+            )
+        return fp
+    pp = kops.prepare_padded_problem_batched(C, prob)
+    if opts.precision == "bf16":
+        pp = dataclasses.replace(pp, Cp=pp.Cp.astype(jnp.bfloat16))
+    return pp
 
 
 def _init_batch_state(C, a, b, row_mask, sqrt_g, prob, opts, padded):
@@ -438,7 +514,7 @@ def _init_batch_state(C, a, b, row_mask, sqrt_g, prob, opts, padded):
     # valid snapshots at the init point (alpha = beta = 0)
     z0, k0, o0 = _snapshot_norms_any(
         jnp.zeros((B, m_pad), C.dtype), jnp.zeros((B, n), C.dtype),
-        C, prob, row_mask, padded,
+        C, prob, row_mask, padded, opts.precision,
     )
     screen0 = screening.take_snapshot(
         screen0, x0[..., :m_pad], x0[..., m_pad:], z0, k0, o0
@@ -485,13 +561,13 @@ def _round_body(state, C, a, b, row_mask, sqrt_g, prob, opts, padded):
                 scr, alpha, beta, sqrt_g, prob.tau_vec()
             )
             z, k, o = _snapshot_norms_any(alpha, beta, C, prob, row_mask,
-                                          padded)
+                                          padded, opts.precision)
             scr_new = screening.take_snapshot(scr_new, alpha, beta, z, k, o)
         else:
             # beyond-paper: snapshot first => Delta = 0 => lower bound
             # becomes k~ - o~ exactly (Theorem 4's fixed point), tighter N.
             z, k, o = _snapshot_norms_any(alpha, beta, C, prob, row_mask,
-                                          padded)
+                                          padded, opts.precision)
             scr_new = screening.take_snapshot(scr, alpha, beta, z, k, o)
             scr_new = screening.refresh_active(
                 scr_new, alpha, beta, sqrt_g, prob.tau_vec()
@@ -779,7 +855,7 @@ def describe(
         f"{lt} x {nt} = {lt * nt} tiles "
         f"(L padded {prob.num_groups}->{L_pad}, n padded {prob.n}->{n_pad})",
         f"backend:  grad_impl={opts.grad_impl} pallas_impl={opts.pallas_impl} "
-        f"snapshot_every={opts.snapshot_every}",
+        f"precision={opts.precision} snapshot_every={opts.snapshot_every}",
     ]
     if result is not None:
         if isinstance(result.stats, dict):

@@ -47,6 +47,22 @@ modes with a leading problem axis B over same-shape problems:
   (b, l, j) coordinates, so total grid steps equal the batch's total
   surviving tiles.  A heavily-screened problem contributes almost no steps
   instead of padding the batch to its worst member.
+
+Fused screen+gradient mega-kernels (``gradpsi_fused_*``, DESIGN.md §10)
+collapse the steady-state oracle's two launches into one: the per-tile
+screening verdict (paper Eq. 6/7 — the same :func:`_verdict_tile` math the
+standalone screen kernel runs) is computed IN-REGISTER at the top of every
+grid step from the snapshot-bound tiles, a tile whose bound test fails
+writes zeros without its F/T working set ever leaving VMEM, and the
+verdict's per-tile OR lands in a flag output that replaces the standalone
+screen launch.  All four operand layouts are covered
+(``gradpsi_fused_pallas[_batched]`` dense, ``gradpsi_fused_fact_pallas
+[_batched]`` factorized).  The tradeoff: BlockSpec index maps cannot see
+in-kernel verdicts, so the fused dense grid cannot remap a skipped tile's
+cost (or sample-block) DMA onto a resident block the way the two-launch
+grid does — skipped tiles still pay their cost-tile HBM read.  Fused wins
+when live density is high or launch overhead dominates; the two-launch
+compact path wins under heavy screening.
 """
 from __future__ import annotations
 
@@ -58,8 +74,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.screening import ZERO, CHECK, ACTIVE
+
 DEFAULT_TILE_N = 128
-VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # C tile + T tile + slack
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # one grid step's full working set
+
+# Mosaic's automatic pipelining keeps the NEXT step's blocks in flight while
+# the current step computes; granting the compact kernels two working sets of
+# VMEM is what lets that double-buffering actually happen for their dynamic
+# (scalar-prefetched) schedules instead of serializing DMA behind compute.
+COMPACT_PIPELINE_BUFFERS = 2
 
 # Above this fraction of live tiles the dense grid wins: compaction pays an
 # O(T) schedule build plus per-step partial-output traffic, while the dense
@@ -67,13 +91,69 @@ VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # C tile + T tile + slack
 # See DESIGN.md §3 for the model behind the 0.5 crossover.
 COMPACT_DENSITY_THRESHOLD = 0.5
 
+# -- trace-time launch accounting ----------------------------------------------
+# Each jitted wrapper below bumps its counter ONCE PER FRESH TRACE, so after
+# ``jax.clear_caches()`` one solver evaluation records exactly the set of
+# pallas_call launches its oracle issues per eval (2 for the two-launch
+# screen+grad path, 1 for the fused path).  bench_kernels.py gates on this.
+
+_LAUNCHES: dict = {}
+
+
+def _record_launch(name: str) -> None:
+    """Bump the trace-time launch counter for one Pallas kernel wrapper."""
+    _LAUNCHES[name] = _LAUNCHES.get(name, 0) + 1
+
+
+def launch_counts() -> dict:
+    """Snapshot of {kernel wrapper name: traces since last reset}."""
+    return dict(_LAUNCHES)
+
+
+def reset_launch_counts() -> None:
+    """Zero the trace-time launch counters (pair with ``jax.clear_caches()``)."""
+    _LAUNCHES.clear()
+
+
+def tile_working_set_bytes(tile_l: int, g: int, tile_n: int, d=None,
+                           dtype_bytes: int = 4) -> int:
+    """Explicit per-route VMEM bytes held by ONE grid step at TILE_L=tile_l.
+
+    The single byte model shared by :func:`pick_tile_l` (dense route,
+    ``d=None``) and :func:`pick_tile_l_factorized` (on-the-fly route,
+    ``d`` = sample dimension), pinned by a unit test so the accounting
+    cannot silently drift from the kernels:
+
+    - F and T intermediates of :func:`_gradpsi_tile`, always f32;
+    - the cost operand: a dense ``(TILE_L, g, TILE_N)`` tile in the cost
+      dtype, or — factorized — the f32 product intermediate of
+      :func:`factorized_cost_tile` plus the ``(x, x_sq, y, y_sq)`` blocks
+      in the sample dtype;
+    - dual rows/cols and the tau row;
+    - the ga/gb/psi output blocks;
+    - the fused route's screening operands (z/k/o f32 tiles, int8 active
+      tile, three delta-norm rows + sqrt_g row, db column, flag cell) —
+      budgeted unconditionally so fused and two-launch kernels agree on
+      tiling and screening flag grids stay interchangeable.
+    """
+    ft = 2 * tile_l * g * tile_n * 4
+    if d is None:
+        cost = tile_l * g * tile_n * dtype_bytes
+    else:
+        cost = (tile_l * g * tile_n * d * 4
+                + (tile_l * g + tile_n) * (d + 1) * dtype_bytes)
+    duals = (tile_l * g + tile_n + tile_l) * 4
+    outputs = (tile_l * g + tile_n + 1) * 4
+    screen = (3 * tile_l * tile_n * 4 + tile_l * tile_n
+              + (4 * tile_l + tile_n) * 4 + 4)
+    return ft + cost + duals + outputs + screen
+
 
 def pick_tile_l(g: int, tile_n: int, dtype_bytes: int = 4) -> int:
     """Largest TILE_L (power of two, <=8) whose working set fits VMEM."""
-    per_l = 2 * g * tile_n * dtype_bytes  # F/T tiles dominate
-    t = max(1, VMEM_BUDGET_BYTES // max(per_l, 1))
     for cand in (8, 4, 2, 1):
-        if cand <= t:
+        if tile_working_set_bytes(cand, g, tile_n,
+                                  dtype_bytes=dtype_bytes) <= VMEM_BUDGET_BYTES:
             return cand
     return 1
 
@@ -122,6 +202,41 @@ def tau_row(tau, L: int) -> jnp.ndarray:
     kernels and the oracles the parity tests compare against.
     """
     return jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (L,))
+
+
+def _verdict_tile(z, k, o, act, da_plus, da_full, da_neg, db, sqrt_g, tau):
+    """Per-tile screening verdicts (paper Eq. 6/7) from loaded VMEM arrays.
+
+    THE single definition of the verdict math: the standalone screen kernel
+    (screen.py) and the fused ``gradpsi_fused_*`` kernels both call it on
+    identically-blocked operands, which is what makes the fused route's tile
+    flags bitwise-equal to the two-launch route's.  ``z``/``k``/``o`` are
+    (TL, TN) f32 bound tiles, ``act`` an int8 (TL, TN) persistent-set tile,
+    ``da_plus``/``da_full``/``da_neg``/``sqrt_g``/``tau`` (TL,) rows and
+    ``db`` a (TN,) column; returns (TL, TN) int32 verdicts.
+    """
+    dap = da_plus[:, None]                            # (TL, 1)
+    daf = da_full[:, None]
+    dan = da_neg[:, None]
+    sg = sqrt_g[:, None]
+    tau_c = tau[:, None]                              # (TL, 1) per-group
+    db_r = db[None, :]                                # (1, TN)
+
+    zbar = z + dap + sg * jnp.maximum(db_r, 0.0)
+    zlow = (
+        k
+        - daf
+        - sg * jnp.abs(db_r)
+        - o
+        - dan
+        - sg * jnp.maximum(-db_r, 0.0)
+    )
+    active = act != 0
+    v = jnp.where(zbar <= tau_c, ZERO, CHECK)
+    v = jnp.where(active, ACTIVE, v)
+    # lower bound can also certify non-zero outside N within this eval
+    v = jnp.where(jnp.logical_and(v == CHECK, zlow > tau_c), ACTIVE, v)
+    return v.astype(jnp.int32)
 
 
 def _dense_kernel(flags_ref, alpha_ref, beta_ref, c_ref, tau_ref,
@@ -179,6 +294,7 @@ def gradpsi_pallas(
     regularizer subsystem's per-group screening thresholds); it is a
     kernel *operand*, loaded one (tile_l,) row per tile.
     """
+    _record_launch("gradpsi_pallas")
     L, g = num_groups, group_size
     n = beta.shape[0]
     tau_g = tau_row(tau, L)
@@ -300,6 +416,7 @@ def gradpsi_pallas_compact(
     and its outputs are masked to exact zeros.  ``tau`` is a scalar or a
     per-group ``(L,)`` threshold vector, gathered per scheduled tile.
     """
+    _record_launch("gradpsi_pallas_compact")
     L, g = num_groups, group_size
     n = beta.shape[0]
     tau_g = tau_row(tau, L)
@@ -343,6 +460,9 @@ def gradpsi_pallas_compact(
             jax.ShapeDtypeStruct((T, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=COMPACT_PIPELINE_BUFFERS * VMEM_BUDGET_BYTES,
+        ),
         interpret=interpret,
     )(sched, nact, alpha_g, beta, C3, tau_g)
 
@@ -420,6 +540,7 @@ def gradpsi_pallas_batched(
     or per-group ``(L,)``) is shared by the whole batch — a bucket packs
     problems with one regularizer, so thresholds are batch-static.
     """
+    _record_launch("gradpsi_pallas_batched")
     L, g = num_groups, group_size
     B, n = beta.shape
     tau_g = tau_row(tau, L)
@@ -552,6 +673,7 @@ def gradpsi_pallas_compact_batched(
     empty) and its outputs are masked to exact zeros.  ``tau`` (scalar or
     per-group ``(L,)``) is shared batch-wide, gathered per scheduled tile.
     """
+    _record_launch("gradpsi_pallas_compact_batched")
     L, g = num_groups, group_size
     B, n = beta.shape
     tau_g = tau_row(tau, L)
@@ -596,6 +718,9 @@ def gradpsi_pallas_compact_batched(
             jax.ShapeDtypeStruct((BT, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=COMPACT_PIPELINE_BUFFERS * VMEM_BUDGET_BYTES,
+        ),
         interpret=interpret,
     )(sched, nact, alpha_g, beta, C4, tau_g)
 
@@ -655,13 +780,14 @@ def pick_tile_l_factorized(g: int, tile_n: int, d: int,
                            dtype_bytes: int = 4) -> int:
     """Largest TILE_L (power of two, <=8) whose factorized tile fits VMEM.
 
-    The working set adds the ``(TILE_L, g, TILE_N, d)`` product intermediate
-    of :func:`factorized_cost_tile` to the dense kernel's F/T tiles.
+    Same explicit byte model as :func:`pick_tile_l`
+    (:func:`tile_working_set_bytes` with ``d`` set): the working set swaps
+    the dense cost tile for the ``(TILE_L, g, TILE_N, d)`` product
+    intermediate of :func:`factorized_cost_tile` plus its sample blocks.
     """
-    per_l = (2 + d) * g * tile_n * dtype_bytes
-    t = max(1, VMEM_BUDGET_BYTES // max(per_l, 1))
     for cand in (8, 4, 2, 1):
-        if cand <= t:
+        if tile_working_set_bytes(cand, g, tile_n, d=d,
+                                  dtype_bytes=dtype_bytes) <= VMEM_BUDGET_BYTES:
             return cand
     return 1
 
@@ -740,6 +866,7 @@ def gradpsi_fact_pallas(
     remap the column-indexed ``y``/``y_sq`` blocks to column 0 so the DMA is
     elided exactly like the dense kernel's C tile.
     """
+    _record_launch("gradpsi_fact_pallas")
     L, g = num_groups, group_size
     n = beta.shape[0]
     d = x.shape[-1]
@@ -851,6 +978,7 @@ def gradpsi_fact_pallas_compact(
     Same contract as :func:`gradpsi_pallas_compact` with the C operand
     replaced by ``(x, x_sq, y, y_sq)`` blocked operands.
     """
+    _record_launch("gradpsi_fact_pallas_compact")
     L, g = num_groups, group_size
     n = beta.shape[0]
     d = x.shape[-1]
@@ -899,6 +1027,9 @@ def gradpsi_fact_pallas_compact(
             jax.ShapeDtypeStruct((T, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=COMPACT_PIPELINE_BUFFERS * VMEM_BUDGET_BYTES,
+        ),
         interpret=interpret,
     )(sched, nact, alpha_g, beta, x3, xsq_g, y, y_sq, tau_g)
 
@@ -978,6 +1109,7 @@ def gradpsi_fact_pallas_batched(
 
     Per-problem semantics identical to :func:`gradpsi_fact_pallas`.
     """
+    _record_launch("gradpsi_fact_pallas_batched")
     L, g = num_groups, group_size
     B, n = beta.shape
     d = x.shape[-1]
@@ -1093,6 +1225,7 @@ def gradpsi_fact_pallas_compact_batched(
     Same contract as :func:`gradpsi_pallas_compact_batched` with the C
     operand replaced by ``(x, x_sq, y, y_sq)`` blocked operands.
     """
+    _record_launch("gradpsi_fact_pallas_compact_batched")
     L, g = num_groups, group_size
     B, n = beta.shape
     d = x.shape[-1]
@@ -1145,6 +1278,9 @@ def gradpsi_fact_pallas_compact_batched(
             jax.ShapeDtypeStruct((BT, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
+        compiler_params=pltpu.TPUCompilerParams(
+            vmem_limit_bytes=COMPACT_PIPELINE_BUFFERS * VMEM_BUDGET_BYTES,
+        ),
         interpret=interpret,
     )(sched, nact, alpha_g, beta, x4, xsq_g, y, y_sq, tau_g)
 
@@ -1163,3 +1299,542 @@ def gradpsi_fact_pallas_compact_batched(
         psi_steps[:, 0], mode="drop"
     )
     return ga.reshape(B, -1), gb.reshape(B, -1), psi, steps[0, 0]
+
+
+# -- fused screen+gradient mega-kernels (DESIGN.md §10) ------------------------
+#
+# One launch per oracle evaluation: the screening verdict is computed
+# IN-REGISTER at the top of every grid step (the same _verdict_tile math the
+# standalone screen kernel runs on identically-blocked operands), the tile's
+# gradient work is gated on the verdict's per-tile OR, and that OR lands in a
+# (L_tiles, N_tiles) flag output replacing the standalone screen launch.  The
+# screen operands are the padded snapshot tiles (z/k/o/act/sqrt_g, fixed
+# within a round) plus the O(L + n) per-eval delta norms; a tile whose bound
+# test fails writes zeros without its F/T working set ever leaving VMEM.
+# There is deliberately NO fused compact mode: a compact schedule must be
+# built from flags that exist before launch, which is exactly the standalone
+# screen pass the fused route removes (and a stale snapshot-point schedule
+# would be unsafe — snapshot-ZERO tiles can go live as the deltas grow).
+
+
+def _fused_dense_kernel(alpha_ref, beta_ref, c_ref, tau_ref, z_ref, k_ref,
+                        o_ref, act_ref, dap_ref, daf_ref, dan_ref, db_ref,
+                        sg_ref, ga_ref, gb_ref, psi_ref, flag_ref,
+                        *, gamma: float):
+    l = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_ga_fu():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+
+    @pl.when(jnp.logical_and(l == 0, j == 0))
+    def _init_psi_fu():
+        psi_ref[...] = jnp.zeros_like(psi_ref)
+
+    gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    v = _verdict_tile(
+        z_ref[...], k_ref[...], o_ref[...], act_ref[...],
+        dap_ref[...], daf_ref[...], dan_ref[...],
+        db_ref[...], sg_ref[...], tau,
+    )
+    flag = jnp.any(v != ZERO).astype(jnp.int32)
+    flag_ref[0, 0] = flag
+
+    @pl.when(flag != 0)
+    def _compute_fu():
+        alpha = alpha_ref[...].astype(jnp.float32)       # (TL, g)
+        beta = beta_ref[...].astype(jnp.float32)         # (TN,)
+        c = c_ref[...].astype(jnp.float32)               # (TL, g, TN)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+        psi_ref[0, 0] += psi
+        ga_ref[...] += jnp.sum(t, axis=2)                # (TL, g)
+        gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]   # (1, TN)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fused_pallas(
+    alpha: jnp.ndarray,        # (m_pad,) fp32
+    beta: jnp.ndarray,         # (n,) fp32
+    C: jnp.ndarray,            # (m_pad, n) fp32 or bf16
+    z: jnp.ndarray,            # (L, n) fp32 snapshot upper-bound matrix
+    k: jnp.ndarray,            # (L, n) fp32 snapshot full-norm matrix
+    o: jnp.ndarray,            # (L, n) fp32 snapshot negative-norm matrix
+    active: jnp.ndarray,       # (L, n) int8/bool persistent set N
+    da_plus: jnp.ndarray,      # (L,)  ||[d_alpha_[l]]_+||
+    da_full: jnp.ndarray,      # (L,)  ||d_alpha_[l]||
+    da_neg: jnp.ndarray,       # (L,)  ||[d_alpha_[l]]_-||
+    db: jnp.ndarray,           # (n,)  d_beta
+    sqrt_g: jnp.ndarray,       # (L,)
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused dense-grid kernel: verdicts + gradient in ONE launch.
+
+    Returns (T_rowsum (m_pad,), T_colsum (n,), psi, flags (Lt, Nt) int32)
+    where ``flags`` is bitwise-identical to the standalone screen kernel's
+    tile-flag output on the same operands and the gradient triple is
+    bitwise-identical to :func:`gradpsi_pallas` fed those flags.  All
+    operands must be tile-padded (ops.py handles padding); screen operands
+    follow :func:`repro.kernels.screen.screen_pallas`.
+    """
+    _record_launch("gradpsi_fused_pallas")
+    L, g = num_groups, group_size
+    n = beta.shape[0]
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (L // tile_l, n // tile_n)
+    assert z.shape == (L, n), (z.shape, (L, n))
+
+    alpha_g = alpha.reshape(L, g)
+    C3 = C.reshape(L, g, n)
+
+    row = pl.BlockSpec((tile_l,), lambda l, j: (l,))
+    col = pl.BlockSpec((tile_n,), lambda l, j: (j,))
+    mat = pl.BlockSpec((tile_l, tile_n), lambda l, j: (l, j))
+
+    ga_part, gb_part, psi, flags = pl.pallas_call(
+        functools.partial(_fused_dense_kernel, gamma=float(gamma)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_l, g), lambda l, j: (l, 0)),        # alpha
+            col,                                                   # beta
+            pl.BlockSpec((tile_l, g, tile_n), lambda l, j: (l, 0, j)),  # C
+            row,                                                   # tau
+            mat, mat, mat, mat,                                    # z k o act
+            row, row, row,                                         # da norms
+            col,                                                   # db
+            row,                                                   # sqrt_g
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_l, g), lambda l, j: (l, 0)),
+            pl.BlockSpec((1, tile_n), lambda l, j: (l, j)),
+            pl.BlockSpec((1, 1), lambda l, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda l, j: (l, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, g), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], n), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(alpha_g, beta, C3, tau_g, z, k, o, active.astype(jnp.int8),
+      da_plus, da_full, da_neg, db, sqrt_g)
+
+    return ga_part.reshape(-1), jnp.sum(gb_part, axis=0), psi[0, 0], flags
+
+
+def _fused_dense_kernel_batched(alpha_ref, beta_ref, c_ref, tau_ref, z_ref,
+                                k_ref, o_ref, act_ref, dap_ref, daf_ref,
+                                dan_ref, db_ref, sg_ref,
+                                ga_ref, gb_ref, psi_ref, flag_ref,
+                                *, gamma: float):
+    j = pl.program_id(2)
+    lj0 = jnp.logical_and(pl.program_id(1) == 0, j == 0)
+
+    @pl.when(j == 0)
+    def _init_ga_fub():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+
+    @pl.when(lj0)
+    def _init_psi_fub():
+        psi_ref[...] = jnp.zeros_like(psi_ref)
+
+    gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    v = _verdict_tile(
+        z_ref[0], k_ref[0], o_ref[0], act_ref[0],
+        dap_ref[0], daf_ref[0], dan_ref[0],
+        db_ref[0], sg_ref[0], tau,
+    )
+    flag = jnp.any(v != ZERO).astype(jnp.int32)
+    flag_ref[0, 0, 0] = flag
+
+    @pl.when(flag != 0)
+    def _compute_fub():
+        alpha = alpha_ref[0].astype(jnp.float32)         # (TL, g)
+        beta = beta_ref[0].astype(jnp.float32)           # (TN,)
+        c = c_ref[0].astype(jnp.float32)                 # (TL, g, TN)
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+        psi_ref[0, 0, 0] += psi
+        ga_ref[...] += jnp.sum(t, axis=2)[None]          # (1, TL, g)
+        gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, None, :]  # (1, 1, TN)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fused_pallas_batched(
+    alpha: jnp.ndarray,        # (B, m_pad) fp32
+    beta: jnp.ndarray,         # (B, n) fp32
+    C: jnp.ndarray,            # (B, m_pad, n) fp32 or bf16
+    z: jnp.ndarray,            # (B, L, n) fp32
+    k: jnp.ndarray,            # (B, L, n) fp32
+    o: jnp.ndarray,            # (B, L, n) fp32
+    active: jnp.ndarray,       # (B, L, n) int8/bool
+    da_plus: jnp.ndarray,      # (B, L)
+    da_full: jnp.ndarray,      # (B, L)
+    da_neg: jnp.ndarray,       # (B, L)
+    db: jnp.ndarray,           # (B, n)
+    sqrt_g: jnp.ndarray,       # (B, L)
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused dense-grid kernel over B problems: grid (B, Lt, Nt), ONE launch.
+
+    Returns (T_rowsum (B, m_pad), T_colsum (B, n), psi (B,), flags
+    (B, Lt, Nt) int32).  Per-problem semantics identical to
+    :func:`gradpsi_fused_pallas`; ``tau`` is shared batch-wide.
+    """
+    _record_launch("gradpsi_fused_pallas_batched")
+    L, g = num_groups, group_size
+    B, n = beta.shape
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l(g, tile_n, jnp.dtype(C.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (B, L // tile_l, n // tile_n)
+    assert z.shape == (B, L, n), (z.shape, (B, L, n))
+
+    alpha_g = alpha.reshape(B, L, g)
+    C4 = C.reshape(B, L, g, n)
+
+    brow = pl.BlockSpec((1, tile_l), lambda b, l, j: (b, l))
+    bcol = pl.BlockSpec((1, tile_n), lambda b, l, j: (b, j))
+    bmat = pl.BlockSpec((1, tile_l, tile_n), lambda b, l, j: (b, l, j))
+
+    ga_part, gb_part, psi, flags = pl.pallas_call(
+        functools.partial(_fused_dense_kernel_batched, gamma=float(gamma)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j: (b, l, 0)),  # alpha
+            bcol,                                                     # beta
+            pl.BlockSpec((1, tile_l, g, tile_n),
+                         lambda b, l, j: (b, l, 0, j)),               # C
+            pl.BlockSpec((tile_l,), lambda b, l, j: (l,)),            # tau
+            bmat, bmat, bmat, bmat,                                   # z k o act
+            brow, brow, brow,                                         # da norms
+            bcol,                                                     # db
+            brow,                                                     # sqrt_g
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j: (b, l, 0)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, l, j: (b, l, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, l, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, l, j: (b, l, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid[1], n), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(alpha_g, beta, C4, tau_g, z, k, o, active.astype(jnp.int8),
+      da_plus, da_full, da_neg, db, sqrt_g)
+
+    return (
+        ga_part.reshape(B, -1),
+        jnp.sum(gb_part, axis=1),
+        psi[:, 0, 0],
+        flags,
+    )
+
+
+def _fused_fact_kernel(alpha_ref, beta_ref, x_ref, xsq_ref, y_ref, ysq_ref,
+                       tau_ref, z_ref, k_ref, o_ref, act_ref, dap_ref,
+                       daf_ref, dan_ref, db_ref, sg_ref,
+                       ga_ref, gb_ref, psi_ref, flag_ref, *, gamma: float):
+    l = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_ga_ff():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+
+    @pl.when(jnp.logical_and(l == 0, j == 0))
+    def _init_psi_ff():
+        psi_ref[...] = jnp.zeros_like(psi_ref)
+
+    gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    v = _verdict_tile(
+        z_ref[...], k_ref[...], o_ref[...], act_ref[...],
+        dap_ref[...], daf_ref[...], dan_ref[...],
+        db_ref[...], sg_ref[...], tau,
+    )
+    flag = jnp.any(v != ZERO).astype(jnp.int32)
+    flag_ref[0, 0] = flag
+
+    @pl.when(flag != 0)
+    def _compute_ff():
+        alpha = alpha_ref[...].astype(jnp.float32)       # (TL, g)
+        beta = beta_ref[...].astype(jnp.float32)         # (TN,)
+        c = factorized_cost_tile(
+            x_ref[...].astype(jnp.float32),              # (TL, g, d)
+            xsq_ref[...].astype(jnp.float32),            # (TL, g)
+            y_ref[...].astype(jnp.float32),              # (TN, d)
+            ysq_ref[...].astype(jnp.float32),            # (TN,)
+        )
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+        psi_ref[0, 0] += psi
+        ga_ref[...] += jnp.sum(t, axis=2)                # (TL, g)
+        gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, :]   # (1, TN)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fused_fact_pallas(
+    alpha: jnp.ndarray,        # (m_pad,) fp32
+    beta: jnp.ndarray,         # (n,) fp32
+    x: jnp.ndarray,            # (m_pad, d) fp32/bf16 scaled source samples
+    x_sq: jnp.ndarray,         # (m_pad,) fp32/bf16 scaled squared norms
+    y: jnp.ndarray,            # (n, d) fp32/bf16 scaled target samples
+    y_sq: jnp.ndarray,         # (n,) fp32/bf16 scaled squared norms
+    z: jnp.ndarray,            # (L, n) fp32
+    k: jnp.ndarray,            # (L, n) fp32
+    o: jnp.ndarray,            # (L, n) fp32
+    active: jnp.ndarray,       # (L, n) int8/bool
+    da_plus: jnp.ndarray,      # (L,)
+    da_full: jnp.ndarray,      # (L,)
+    da_neg: jnp.ndarray,       # (L,)
+    db: jnp.ndarray,           # (n,)
+    sqrt_g: jnp.ndarray,       # (L,)
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused dense-grid factorized kernel: ONE launch, cost tiles in VMEM.
+
+    Same contract as :func:`gradpsi_fused_pallas` with the C operand
+    replaced by ``(x, x_sq, y, y_sq)`` blocked operands (the
+    :func:`factorized_cost_tile` recipe).
+    """
+    _record_launch("gradpsi_fused_fact_pallas")
+    L, g = num_groups, group_size
+    n = beta.shape[0]
+    d = x.shape[-1]
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l_factorized(g, tile_n, d,
+                                        jnp.dtype(x.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (L // tile_l, n // tile_n)
+    assert z.shape == (L, n), (z.shape, (L, n))
+
+    alpha_g = alpha.reshape(L, g)
+    x3 = x.reshape(L, g, d)
+    xsq_g = x_sq.reshape(L, g)
+
+    row = pl.BlockSpec((tile_l,), lambda l, j: (l,))
+    row_g = pl.BlockSpec((tile_l, g), lambda l, j: (l, 0))
+    col = pl.BlockSpec((tile_n,), lambda l, j: (j,))
+    mat = pl.BlockSpec((tile_l, tile_n), lambda l, j: (l, j))
+
+    ga_part, gb_part, psi, flags = pl.pallas_call(
+        functools.partial(_fused_fact_kernel, gamma=float(gamma)),
+        grid=grid,
+        in_specs=[
+            row_g,                                                 # alpha
+            col,                                                   # beta
+            pl.BlockSpec((tile_l, g, d), lambda l, j: (l, 0, 0)),  # x
+            row_g,                                                 # x_sq
+            pl.BlockSpec((tile_n, d), lambda l, j: (j, 0)),        # y
+            col,                                                   # y_sq
+            row,                                                   # tau
+            mat, mat, mat, mat,                                    # z k o act
+            row, row, row,                                         # da norms
+            col,                                                   # db
+            row,                                                   # sqrt_g
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_l, g), lambda l, j: (l, 0)),
+            pl.BlockSpec((1, tile_n), lambda l, j: (l, j)),
+            pl.BlockSpec((1, 1), lambda l, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda l, j: (l, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, g), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0], n), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(alpha_g, beta, x3, xsq_g, y, y_sq, tau_g,
+      z, k, o, active.astype(jnp.int8),
+      da_plus, da_full, da_neg, db, sqrt_g)
+
+    return ga_part.reshape(-1), jnp.sum(gb_part, axis=0), psi[0, 0], flags
+
+
+def _fused_fact_kernel_batched(alpha_ref, beta_ref, x_ref, xsq_ref, y_ref,
+                               ysq_ref, tau_ref, z_ref, k_ref, o_ref,
+                               act_ref, dap_ref, daf_ref, dan_ref, db_ref,
+                               sg_ref, ga_ref, gb_ref, psi_ref, flag_ref,
+                               *, gamma: float):
+    j = pl.program_id(2)
+    lj0 = jnp.logical_and(pl.program_id(1) == 0, j == 0)
+
+    @pl.when(j == 0)
+    def _init_ga_ffb():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+
+    @pl.when(lj0)
+    def _init_psi_ffb():
+        psi_ref[...] = jnp.zeros_like(psi_ref)
+
+    gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    tau = tau_ref[...].astype(jnp.float32)               # (TL,)
+    v = _verdict_tile(
+        z_ref[0], k_ref[0], o_ref[0], act_ref[0],
+        dap_ref[0], daf_ref[0], dan_ref[0],
+        db_ref[0], sg_ref[0], tau,
+    )
+    flag = jnp.any(v != ZERO).astype(jnp.int32)
+    flag_ref[0, 0, 0] = flag
+
+    @pl.when(flag != 0)
+    def _compute_ffb():
+        alpha = alpha_ref[0].astype(jnp.float32)         # (TL, g)
+        beta = beta_ref[0].astype(jnp.float32)           # (TN,)
+        c = factorized_cost_tile(
+            x_ref[0].astype(jnp.float32),                # (TL, g, d)
+            xsq_ref[0].astype(jnp.float32),              # (TL, g)
+            y_ref[0].astype(jnp.float32),                # (TN, d)
+            ysq_ref[0].astype(jnp.float32),              # (TN,)
+        )
+        t, psi = _gradpsi_tile(alpha, beta, c, tau, gamma=gamma)
+        psi_ref[0, 0, 0] += psi
+        ga_ref[...] += jnp.sum(t, axis=2)[None]          # (1, TL, g)
+        gb_ref[...] = jnp.sum(t, axis=(0, 1))[None, None, :]  # (1, 1, TN)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "group_size", "gamma",
+                     "tile_l", "tile_n", "interpret"),
+)
+def gradpsi_fused_fact_pallas_batched(
+    alpha: jnp.ndarray,        # (B, m_pad) fp32
+    beta: jnp.ndarray,         # (B, n) fp32
+    x: jnp.ndarray,            # (B, m_pad, d) fp32/bf16
+    x_sq: jnp.ndarray,         # (B, m_pad) fp32/bf16
+    y: jnp.ndarray,            # (B, n, d) fp32/bf16
+    y_sq: jnp.ndarray,         # (B, n) fp32/bf16
+    z: jnp.ndarray,            # (B, L, n) fp32
+    k: jnp.ndarray,            # (B, L, n) fp32
+    o: jnp.ndarray,            # (B, L, n) fp32
+    active: jnp.ndarray,       # (B, L, n) int8/bool
+    da_plus: jnp.ndarray,      # (B, L)
+    da_full: jnp.ndarray,      # (B, L)
+    da_neg: jnp.ndarray,       # (B, L)
+    db: jnp.ndarray,           # (B, n)
+    sqrt_g: jnp.ndarray,       # (B, L)
+    *,
+    num_groups: int,
+    group_size: int,
+    tau,
+    gamma: float,
+    tile_l: int = 0,
+    tile_n: int = DEFAULT_TILE_N,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused dense-grid factorized kernel over B problems, ONE launch.
+
+    Per-problem semantics identical to :func:`gradpsi_fused_fact_pallas`.
+    """
+    _record_launch("gradpsi_fused_fact_pallas_batched")
+    L, g = num_groups, group_size
+    B, n = beta.shape
+    d = x.shape[-1]
+    tau_g = tau_row(tau, L)
+    if tile_l == 0:
+        tile_l = pick_tile_l_factorized(g, tile_n, d,
+                                        jnp.dtype(x.dtype).itemsize)
+    assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
+    grid = (B, L // tile_l, n // tile_n)
+    assert z.shape == (B, L, n), (z.shape, (B, L, n))
+
+    alpha_g = alpha.reshape(B, L, g)
+    x4 = x.reshape(B, L, g, d)
+    xsq_g = x_sq.reshape(B, L, g)
+
+    brow = pl.BlockSpec((1, tile_l), lambda b, l, j: (b, l))
+    brow_g = pl.BlockSpec((1, tile_l, g), lambda b, l, j: (b, l, 0))
+    bcol = pl.BlockSpec((1, tile_n), lambda b, l, j: (b, j))
+    bmat = pl.BlockSpec((1, tile_l, tile_n), lambda b, l, j: (b, l, j))
+
+    ga_part, gb_part, psi, flags = pl.pallas_call(
+        functools.partial(_fused_fact_kernel_batched, gamma=float(gamma)),
+        grid=grid,
+        in_specs=[
+            brow_g,                                                # alpha
+            bcol,                                                  # beta
+            pl.BlockSpec((1, tile_l, g, d),
+                         lambda b, l, j: (b, l, 0, 0)),            # x
+            brow_g,                                                # x_sq
+            pl.BlockSpec((1, tile_n, d), lambda b, l, j: (b, j, 0)),  # y
+            bcol,                                                  # y_sq
+            pl.BlockSpec((tile_l,), lambda b, l, j: (l,)),         # tau
+            bmat, bmat, bmat, bmat,                                # z k o act
+            brow, brow, brow,                                      # da norms
+            bcol,                                                  # db
+            brow,                                                  # sqrt_g
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_l, g), lambda b, l, j: (b, l, 0)),
+            pl.BlockSpec((1, 1, tile_n), lambda b, l, j: (b, l, j)),
+            pl.BlockSpec((1, 1, 1), lambda b, l, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, l, j: (b, l, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid[1], n), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ],
+        interpret=interpret,
+    )(alpha_g, beta, x4, xsq_g, y, y_sq, tau_g,
+      z, k, o, active.astype(jnp.int8),
+      da_plus, da_full, da_neg, db, sqrt_g)
+
+    return (
+        ga_part.reshape(B, -1),
+        jnp.sum(gb_part, axis=1),
+        psi[:, 0, 0],
+        flags,
+    )

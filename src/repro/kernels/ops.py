@@ -868,3 +868,252 @@ def snapshot_norms_factorized(
     return jax.vmap(one)(
         alphap, betap, fp.x, fp.x_sq, fp.y, fp.y_sq, maskb
     )
+
+
+# -- fused screen+gradient entry points (DESIGN.md §10) -------------------------
+#
+# The steady-state oracle of grad_impl='fused': ONE Pallas launch per L-BFGS
+# evaluation computes the screening verdict in-register and the screened
+# gradient in the same grid step.  The wrappers below mirror the two-launch
+# padded/factorized entry points one-for-one and dispatch on the prepared
+# problem's cost representation, so the solver needs a single fused branch.
+
+
+def snapshot_live_tiles(pstate: PaddedScreenState, pp, tau) -> jnp.ndarray:
+    """Live-tile count at the snapshot point (deltas = 0) — no kernel launch.
+
+    At the snapshot point the Eq. 6 upper bound is exactly z~, so a tile is
+    live iff any entry is ACTIVE or has ``z~ > tau``.  This is the fused
+    route's 'auto' heuristic input: computed once per round from the padded
+    snapshots with plain XLA ops, it amortizes to nothing over the round's
+    evaluations, unlike the per-eval screen launch it replaces.  Counts the
+    TOTAL over a leading batch axis when ``pstate`` is batched.
+    """
+    tau_p = _pad_tau(tau, pp.L, pp.tile_l)
+    nz = jnp.logical_or(pstate.act != 0, pstate.z > tau_p[:, None])
+    lt, nt = pp.grid
+    lead = nz.shape[:-2]
+    tiles = nz.reshape(lead + (lt, pp.tile_l, nt, pp.tile_n))
+    return jnp.sum(jnp.any(tiles, axis=(-3, -1)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("prob", "impl", "interpret")
+)
+def dual_value_and_grad_fused(
+    alpha: jnp.ndarray,
+    beta: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    pstate: PaddedScreenState,
+    pp,
+    prob: DualProblem,
+    impl: str = "auto",
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused screened evaluation: verdicts + gradient in ONE Pallas launch.
+
+    The ``grad_impl='fused'`` oracle (solo).  Consumes the padded screening
+    snapshots directly instead of a precomputed flag matrix; the kernel
+    computes the per-tile verdicts in-register (DESIGN.md §10).  ``pp`` may
+    be a :class:`PaddedProblem` (dense cost) or :class:`FactorizedProblem`
+    (on-the-fly cost) — the fused kernel layout is chosen accordingly.
+
+    ``impl`` maps to fused execution modes:
+
+    - ``'grid'``: the fused dense grid — one launch, every tile steps.
+    - ``'compact'``: the two-launch reference (standalone screen pass +
+      compacted gradient grid).  There is no fused compact mode — a compact
+      schedule needs flags before launch, which is exactly the screen pass
+      fused mode removes.
+    - ``'auto'``: runtime :func:`jax.lax.cond` between the two on the
+      snapshot-point live-tile density (:func:`snapshot_live_tiles`) —
+      fused when dense, two-launch compact under heavy screening.  Both
+      branches are bitwise-equal, so the switch never changes iterates.
+
+    Returns ``(value, grad_alpha (m_pad,), grad_beta (n,))`` for the
+    MAXIMIZATION dual — bitwise-identical to the two-launch
+    :func:`dual_value_and_grad_padded` / :func:`dual_value_and_grad_factorized`
+    oracle on the same inputs.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.kernels.gradpsi import (
+        gradpsi_fact_pallas_compact,
+        gradpsi_fused_fact_pallas,
+        gradpsi_fused_pallas,
+        gradpsi_pallas_compact,
+    )
+
+    L, g = pp.L, pp.g
+    factorized = isinstance(pp, FactorizedProblem)
+    cost_ops = (pp.x, pp.x_sq, pp.y, pp.y_sq) if factorized else (pp.Cp,)
+    fused_fn = gradpsi_fused_fact_pallas if factorized else gradpsi_fused_pallas
+    compact_fn = (
+        gradpsi_fact_pallas_compact if factorized else gradpsi_pallas_compact
+    )
+
+    alphap, betap = pad_tile_inputs(alpha, beta, pp)
+    tau_p = _pad_tau(prob.tau_vec(), L, pp.tile_l)
+    kw = dict(
+        num_groups=pp.L_pad, group_size=g, tau=tau_p, gamma=prob.reg.gamma,
+        tile_l=pp.tile_l, tile_n=pp.tile_n, interpret=interpret,
+    )
+
+    da_plus, da_full, da_neg = screening.grouped_norms(
+        alpha - pstate.alpha_snap, L
+    )
+    db = beta - pstate.beta_snap
+    padL = lambda v: _pad_axis(v, 0, pp.tile_l, 0.0)
+    padN = lambda v: _pad_axis(v, 0, pp.tile_n, 0.0)
+    dap, daf, dan, dbp = padL(da_plus), padL(da_full), padL(da_neg), padN(db)
+
+    def run_fused(_):
+        rowsum, colsum, psi, _flags = fused_fn(
+            alphap, betap, *cost_ops,
+            pstate.z, pstate.k, pstate.o, pstate.act,
+            dap, daf, dan, dbp, pstate.sqrt_g, **kw,
+        )
+        return rowsum, colsum, psi
+
+    def run_two_launch(_):
+        _, flags = screen_pallas(
+            pstate.z, pstate.k, pstate.o, pstate.act,
+            dap, daf, dan, dbp, pstate.sqrt_g,
+            tau=tau_p, tile_l=pp.tile_l, tile_n=pp.tile_n,
+            interpret=interpret, emit_verdict=False,
+        )
+        sched, nact = build_tile_schedule(flags)
+        rowsum, colsum, psi, _ = compact_fn(
+            alphap, betap, *cost_ops, sched, nact, **kw
+        )
+        return rowsum, colsum, psi
+
+    if impl == "grid":
+        rowsum, colsum, psi = run_fused(None)
+    elif impl == "compact":
+        rowsum, colsum, psi = run_two_launch(None)
+    elif impl == "auto":
+        live0 = snapshot_live_tiles(pstate, pp, prob.tau_vec())
+        use_compact = live0 <= COMPACT_DENSITY_THRESHOLD * pp.num_tiles
+        rowsum, colsum, psi = jax.lax.cond(
+            use_compact, run_two_launch, run_fused, 0
+        )
+    else:
+        raise ValueError(f"unknown pallas impl: {impl}")
+
+    rowsum = rowsum.reshape(pp.L_pad, g)[:L].reshape(-1)
+    colsum = colsum[: pp.n]
+    value = alpha @ a + beta @ b - psi
+    return value, a - rowsum, b - colsum
+
+
+@functools.partial(
+    jax.jit, static_argnames=("prob", "impl", "interpret")
+)
+def dual_value_and_grad_fused_batched(
+    alpha: jnp.ndarray,                # (B, m_pad)
+    beta: jnp.ndarray,                 # (B, n)
+    a: jnp.ndarray,                    # (B, m_pad)
+    b: jnp.ndarray,                    # (B, n)
+    pstate: PaddedScreenState,         # batched leaves
+    pp,
+    prob: DualProblem,
+    impl: str = "auto",
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused screened evaluation of B problems: ONE launch per eval.
+
+    Batched :func:`dual_value_and_grad_fused` — the fused kernel runs a
+    (B, Lt, Nt) grid; the ``'compact'``/low-density-``'auto'`` reference
+    branch vmaps the standalone screen kernel and runs one dynamic grid
+    over the batch's concatenated surviving tiles, exactly like the
+    two-launch batched oracle.  Per problem bitwise-identical to the solo
+    fused path.  Returns ``(value (B,), grad_alpha (B, m_pad), grad_beta
+    (B, n))``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.kernels.gradpsi import (
+        gradpsi_fact_pallas_compact_batched,
+        gradpsi_fused_fact_pallas_batched,
+        gradpsi_fused_pallas_batched,
+        gradpsi_pallas_compact_batched,
+    )
+
+    B = alpha.shape[0]
+    L, g = pp.L, pp.g
+    factorized = isinstance(pp, FactorizedProblem)
+    cost_ops = (pp.x, pp.x_sq, pp.y, pp.y_sq) if factorized else (pp.Cp,)
+    fused_fn = (
+        gradpsi_fused_fact_pallas_batched
+        if factorized
+        else gradpsi_fused_pallas_batched
+    )
+    compact_fn = (
+        gradpsi_fact_pallas_compact_batched
+        if factorized
+        else gradpsi_pallas_compact_batched
+    )
+
+    alphap, betap = pad_tile_inputs(alpha, beta, pp)
+    tau_p = _pad_tau(prob.tau_vec(), L, pp.tile_l)
+    kw = dict(
+        num_groups=pp.L_pad, group_size=g, tau=tau_p, gamma=prob.reg.gamma,
+        tile_l=pp.tile_l, tile_n=pp.tile_n, interpret=interpret,
+    )
+
+    da_plus, da_full, da_neg = screening.grouped_norms(
+        alpha - pstate.alpha_snap, L
+    )
+    db = beta - pstate.beta_snap
+    padL = lambda v: _pad_axis(v, -1, pp.tile_l, 0.0)
+    padN = lambda v: _pad_axis(v, -1, pp.tile_n, 0.0)
+    dap, daf, dan, dbp = padL(da_plus), padL(da_full), padL(da_neg), padN(db)
+
+    def run_fused(_):
+        rowsum, colsum, psi, _flags = fused_fn(
+            alphap, betap, *cost_ops,
+            pstate.z, pstate.k, pstate.o, pstate.act,
+            dap, daf, dan, dbp, pstate.sqrt_g, **kw,
+        )
+        return rowsum, colsum, psi
+
+    def run_two_launch(_):
+        def one(z, k, o, act, dp, df, dn, dbv, sg):
+            _, fl = screen_pallas(
+                z, k, o, act, dp, df, dn, dbv, sg,
+                tau=tau_p, tile_l=pp.tile_l, tile_n=pp.tile_n,
+                interpret=interpret, emit_verdict=False,
+            )
+            return fl
+
+        flags = jax.vmap(one)(
+            pstate.z, pstate.k, pstate.o, pstate.act,
+            dap, daf, dan, dbp, pstate.sqrt_g,
+        )
+        sched, nact = build_batch_tile_schedule(flags)
+        rowsum, colsum, psi, _ = compact_fn(
+            alphap, betap, *cost_ops, sched, nact, **kw
+        )
+        return rowsum, colsum, psi
+
+    if impl == "grid":
+        rowsum, colsum, psi = run_fused(None)
+    elif impl == "compact":
+        rowsum, colsum, psi = run_two_launch(None)
+    elif impl == "auto":
+        live0 = snapshot_live_tiles(pstate, pp, prob.tau_vec())
+        use_compact = live0 <= COMPACT_DENSITY_THRESHOLD * B * pp.num_tiles
+        rowsum, colsum, psi = jax.lax.cond(
+            use_compact, run_two_launch, run_fused, 0
+        )
+    else:
+        raise ValueError(f"unknown pallas impl: {impl}")
+
+    rowsum = rowsum.reshape(B, pp.L_pad, g)[:, :L].reshape(B, -1)
+    colsum = colsum[:, : pp.n]
+    value = (
+        jnp.sum(alpha * a, axis=-1) + jnp.sum(beta * b, axis=-1) - psi
+    )
+    return value, a - rowsum, b - colsum

@@ -27,48 +27,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.screening import ZERO, CHECK, ACTIVE
-from repro.kernels.gradpsi import factorized_cost_tile, tau_row
-
-
-def _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
-                  db_ref, sg_ref, tau_ref):
-    dap = dap_ref[...][:, None]                       # (TL, 1)
-    daf = daf_ref[...][:, None]
-    dan = dan_ref[...][:, None]
-    sg = sg_ref[...][:, None]
-    tau = tau_ref[...][:, None]                       # (TL, 1) per-group
-    db = db_ref[...][None, :]                         # (1, TN)
-
-    zbar = z_ref[...] + dap + sg * jnp.maximum(db, 0.0)
-    zlow = (
-        k_ref[...]
-        - daf
-        - sg * jnp.abs(db)
-        - o_ref[...]
-        - dan
-        - sg * jnp.maximum(-db, 0.0)
-    )
-    active = act_ref[...] != 0
-    v = jnp.where(zbar <= tau, ZERO, CHECK)
-    v = jnp.where(active, ACTIVE, v)
-    # lower bound can also certify non-zero outside N within this eval
-    v = jnp.where(jnp.logical_and(v == CHECK, zlow > tau), ACTIVE, v)
-    return v.astype(jnp.int32)
+from repro.core.screening import ZERO
+from repro.kernels.gradpsi import (
+    _record_launch,
+    _verdict_tile,
+    factorized_cost_tile,
+    tau_row,
+)
 
 
 def _kernel_full(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
                  db_ref, sg_ref, tau_ref, verdict_ref, flag_ref):
-    v = _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref,
-                      dan_ref, db_ref, sg_ref, tau_ref)
+    # gradpsi._verdict_tile is THE verdict math — the fused kernels call the
+    # same function on identically-blocked operands, which is what keeps the
+    # standalone and fused flag outputs bitwise-interchangeable.
+    v = _verdict_tile(z_ref[...], k_ref[...], o_ref[...], act_ref[...],
+                      dap_ref[...], daf_ref[...], dan_ref[...],
+                      db_ref[...], sg_ref[...], tau_ref[...])
     verdict_ref[...] = v
     flag_ref[0, 0] = jnp.any(v != ZERO).astype(jnp.int32)
 
 
 def _kernel_flags(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref, dan_ref,
                   db_ref, sg_ref, tau_ref, flag_ref):
-    v = _verdict_tile(z_ref, k_ref, o_ref, act_ref, dap_ref, daf_ref,
-                      dan_ref, db_ref, sg_ref, tau_ref)
+    v = _verdict_tile(z_ref[...], k_ref[...], o_ref[...], act_ref[...],
+                      dap_ref[...], daf_ref[...], dan_ref[...],
+                      db_ref[...], sg_ref[...], tau_ref[...])
     flag_ref[0, 0] = jnp.any(v != ZERO).astype(jnp.int32)
 
 
@@ -100,6 +84,7 @@ def screen_pallas(
     ``sqrt_g``.  ``emit_verdict=False`` skips the (L, n) HBM write-back
     entirely; only the tile-flag reduction leaves the chip.
     """
+    _record_launch("screen_pallas")
     L, n = z_snap.shape
     assert L % tile_l == 0 and n % tile_n == 0, (L, tile_l, n, tile_n)
     grid = (L // tile_l, n // tile_n)
@@ -191,6 +176,7 @@ def snapshot_norms_fact_pallas(
     on padded group members BEFORE the three reductions, so k~/o~ never see
     the PAD_COST sentinel rows.  Callers slice ``[:L, :n]``.
     """
+    _record_launch("snapshot_norms_fact_pallas")
     L, g = num_groups, group_size
     d = x.shape[-1]
     n_pad = beta.shape[0]

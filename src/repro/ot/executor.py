@@ -254,7 +254,7 @@ class Executor:
         if sel == "dense":
             return "dense"
         samples = problem.mode == "samples"
-        pallas = self._plan.grad_impl == "pallas"
+        pallas = self._plan.grad_impl in ("pallas", "fused")
         if sel == "on_the_fly":
             if not samples:
                 return "dense"          # generic costs: nothing to factorize
@@ -625,8 +625,9 @@ class Stream:
                 (C, a, b, row_mask, sqrt_g), mesh
             )
             self._padded = (
-                shd.prepare_padded_sharded(C, prob, mesh)
-                if opts.grad_impl == "pallas" else None
+                shd.prepare_padded_sharded(C, prob, mesh,
+                                           precision=opts.precision)
+                if opts.grad_impl in ("pallas", "fused") else None
             )
             self._state = executor._launch(
                 shd.init_batch_state_sharded, C, a, b, row_mask, sqrt_g,

@@ -20,10 +20,11 @@ from typing import Union
 from repro.core.lbfgs import LbfgsOptions
 from repro.core.solver import SolveOptions
 
-GRAD_IMPLS = ("dense", "screened", "pallas")
+GRAD_IMPLS = ("dense", "screened", "pallas", "fused")
 PALLAS_IMPLS = ("grid", "compact", "auto")
 BATCHING = ("auto", "solo", "batched")
 GEOMETRIES = ("auto", "dense", "on_the_fly")
+PRECISIONS = ("f32", "bf16")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,10 +33,20 @@ class ExecutionPlan:
 
     Parameters
     ----------
-    grad_impl : {'dense', 'screened', 'pallas'}
+    grad_impl : {'dense', 'screened', 'pallas', 'fused'}
         Gradient oracle backend (see :mod:`repro.core.solver`).
+        ``'fused'`` runs the single-launch screen+gradient mega-kernel
+        (verdicts computed in-register, DESIGN.md §10).
     pallas_impl : {'grid', 'compact', 'auto'}
-        Kernel grid mode for ``grad_impl='pallas'``.
+        Kernel grid mode for ``grad_impl='pallas'``; for
+        ``grad_impl='fused'`` it selects between the fused dense grid
+        ('grid'), the two-launch reference ('compact') and the runtime
+        live-tile-density switch ('auto').
+    precision : {'f32', 'bf16'}
+        Cost-operand storage for the pallas/fused backends — 'bf16'
+        stores the prepared cost (or sample blocks) in bfloat16 while
+        kernels upcast on load and accumulate T/psi in f32
+        (docs/api.md "precision"; rejected for dense/screened).
     snapshot_every : int
         ``r`` in Algorithm 1 — L-BFGS iterations per screening round.
     max_rounds : int
@@ -65,6 +76,7 @@ class ExecutionPlan:
 
     grad_impl: str = "screened"
     pallas_impl: str = "auto"
+    precision: str = "f32"
     snapshot_every: int = 10
     max_rounds: int = 200
     tight_active_refresh: bool = False
@@ -89,6 +101,15 @@ class ExecutionPlan:
         if self.pallas_impl not in PALLAS_IMPLS:
             raise ValueError(
                 f"pallas_impl must be one of {PALLAS_IMPLS}, got {self.pallas_impl!r}"
+            )
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got {self.precision!r}"
+            )
+        if self.precision == "bf16" and self.grad_impl not in ("pallas", "fused"):
+            raise ValueError(
+                "precision='bf16' requires grad_impl='pallas' or 'fused' "
+                f"(got grad_impl={self.grad_impl!r})"
             )
         if self.batching not in BATCHING:
             raise ValueError(
@@ -127,6 +148,7 @@ class ExecutionPlan:
             grad_impl=self.grad_impl,
             pallas_impl=self.pallas_impl,
             tight_active_refresh=self.tight_active_refresh,
+            precision=self.precision,
             lbfgs=self.lbfgs_options(),
         )
 
@@ -143,6 +165,7 @@ class ExecutionPlan:
         return ExecutionPlan(
             grad_impl=opts.grad_impl,
             pallas_impl=opts.pallas_impl,
+            precision=opts.precision,
             snapshot_every=opts.snapshot_every,
             max_rounds=opts.max_rounds,
             tight_active_refresh=opts.tight_active_refresh,

@@ -284,18 +284,17 @@ class _Bucket:
                 arrs = shd.device_put_batch(arrs, self.mesh)
             self._device = arrs
             self._padded = None
-            if self.opts.grad_impl == "pallas":
+            if self.opts.grad_impl in ("pallas", "fused"):
                 if self.mesh is not None:
                     from repro.core import sharded as shd
 
                     self._padded = shd.prepare_padded_sharded(
-                        self._device[0], self.prob, self.mesh
+                        self._device[0], self.prob, self.mesh,
+                        precision=self.opts.precision,
                     )
                 else:
-                    from repro.kernels import ops as kops
-
-                    self._padded = kops.prepare_padded_problem_batched(
-                        self._device[0], self.prob
+                    self._padded = slv._prepare_padded(
+                        self._device[0], self.prob, self.opts
                     )
         return self._device
 
@@ -511,7 +510,7 @@ class OTServingEngine:
         (compiled programs specialize on it per bucket).
     opts : SolveOptions, optional
         Solver options, including the ``grad_impl`` backend
-        ('dense' | 'screened' | 'pallas').
+        ('dense' | 'screened' | 'pallas' | 'fused').
     max_batch : int, optional
         Slots **per device** in each bucket; a bucket's total slot count
         is ``max_batch * mesh.size`` (or just ``max_batch`` without a

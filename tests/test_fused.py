@@ -1,0 +1,408 @@
+"""grad_impl='fused': the single-launch screen+gradient mega-kernel.
+
+Contracts under test (DESIGN.md §10, docs/geometry.md numerics policy):
+
+  * oracle level: ``dual_value_and_grad_fused`` is bitwise-identical
+    across its 'grid' / 'compact' / 'auto' modes AND to the two-launch
+    screen->gradient oracle, for dense/factorized × solo/batched,
+  * solve level: a fused solve is bitwise-identical to the two-launch
+    pallas solve and matches the screened/dense references at the
+    documented cross-backend tolerance,
+  * sharded: fused over 4 forced host devices == unsharded, bitwise
+    (subprocess, same pattern as test_sharded.py),
+  * launches: the steady-state oracle drops from 2 Pallas launches per
+    L-BFGS evaluation to 1 (trace-time dispatch registry),
+  * precision='bf16': within documented tolerance of the f64 cpu_baseline
+    and the committed golden fixture; rejected off the kernel backends,
+  * ``tile_working_set_bytes``: bytes-per-TILE_L formula pinned term by
+    term so VMEM accounting cannot silently drift from the kernels.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import FIXTURE_DIR, make_ot_problem
+from repro.core.lbfgs import LbfgsOptions
+from repro.core.regularizers import GroupSparseReg
+from repro.core.solver import SolveOptions, solve_batch, solve_dual
+from repro.kernels import ops as kops
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# solve_batch is the deprecated shim, but it is the direct (facade-free)
+# window onto the batched fused oracle this module pins down
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:solve_batch:DeprecationWarning"
+)
+
+L, GSZ, N = 5, 8, 40
+REG = GroupSparseReg.from_rho(1.0, 0.6)
+OPTS = dict(snapshot_every=5, lbfgs=LbfgsOptions(max_iters=60))
+
+
+def _problem(seed=0):
+    C, a, b, spec, _ = make_ot_problem(seed, L, GSZ, N, pad_to=4)
+    return jnp.asarray(C), jnp.asarray(a), jnp.asarray(b), spec
+
+
+def _mid_iterate(C, a, b, spec):
+    """A real mid-optimization (screen state, duals) pair for oracle tests."""
+    res = solve_dual(
+        C, a, b, spec, REG,
+        SolveOptions(grad_impl="screened", snapshot_every=5,
+                     lbfgs=LbfgsOptions(max_iters=12, gtol=0.0)),
+    )
+    return res.screen_state, res.alpha, res.beta
+
+
+# -- oracle-level parity -------------------------------------------------------
+def test_fused_oracle_bitwise_dense_solo():
+    """Fused grid == two-launch compact == auto, and == the legacy oracle."""
+    C, a, b, spec = _problem()
+    from repro.core.dual import DualProblem
+
+    prob = DualProblem(spec.num_groups, spec.group_size, N, REG)
+    st, alpha, beta = _mid_iterate(C, a, b, spec)
+    pp = kops.prepare_padded_problem(C, prob)
+    sqrt_g = jnp.asarray(spec.sqrt_sizes())
+    pstate = kops.pad_screen_state(st, sqrt_g, pp)
+
+    outs = {
+        impl: kops.dual_value_and_grad_fused(
+            alpha, beta, a, b, pstate, pp, prob, impl=impl
+        )
+        for impl in ("grid", "compact", "auto")
+    }
+    # legacy two-launch oracle: standalone screen pass + flagged gradient
+    flags = kops.screen_tile_flags(pstate, alpha, beta, pp, REG.tau)
+    outs["legacy"] = kops.dual_value_and_grad_padded(
+        alpha, beta, a, b, flags, pp, prob
+    )
+    v0, ga0, gb0 = outs["grid"]
+    assert float(v0) == float(v0)  # finite
+    for name, (v, ga, gb) in outs.items():
+        assert float(v) == float(v0), name
+        assert np.array_equal(np.asarray(ga), np.asarray(ga0)), name
+        assert np.array_equal(np.asarray(gb), np.asarray(gb0)), name
+
+
+def test_fused_oracle_bitwise_batched():
+    """Batched fused == vmapped-screen two-launch, per problem, bitwise."""
+    C1, a1, b1, spec = _problem(0)
+    C2, a2, b2, _ = _problem(1)
+    from repro.core.dual import DualProblem
+
+    prob = DualProblem(spec.num_groups, spec.group_size, N, REG)
+    C = jnp.stack([C1, C2])
+    a = jnp.stack([a1, a2])
+    b = jnp.stack([b1, b2])
+    res = solve_batch(
+        C, a, b, spec, REG,
+        SolveOptions(grad_impl="screened", snapshot_every=5,
+                     lbfgs=LbfgsOptions(max_iters=12, gtol=0.0)),
+    )
+    pp = kops.prepare_padded_problem_batched(C, prob)
+    sqb = jnp.broadcast_to(jnp.asarray(spec.sqrt_sizes()), (2, L))
+    pstate = kops.pad_screen_state_batched(res.screen_state, sqb, pp)
+    alpha, beta = res.alpha, res.beta
+
+    outs = {
+        impl: kops.dual_value_and_grad_fused_batched(
+            alpha, beta, a, b, pstate, pp, prob, impl=impl
+        )
+        for impl in ("grid", "compact", "auto")
+    }
+    v0, ga0, gb0 = outs["grid"]
+    for name, (v, ga, gb) in outs.items():
+        assert np.array_equal(np.asarray(v), np.asarray(v0)), name
+        assert np.array_equal(np.asarray(ga), np.asarray(ga0)), name
+        assert np.array_equal(np.asarray(gb), np.asarray(gb0)), name
+
+
+# -- solve-level parity --------------------------------------------------------
+@pytest.mark.parametrize("pallas_impl", ["grid", "compact", "auto"])
+def test_fused_solve_bitwise_vs_pallas(pallas_impl):
+    """solve_dual(fused) == solve_dual(pallas) bitwise in every grid mode."""
+    C, a, b, spec = _problem()
+    rp = solve_dual(C, a, b, spec, REG,
+                    SolveOptions(grad_impl="pallas",
+                                 pallas_impl=pallas_impl, **OPTS))
+    rf = solve_dual(C, a, b, spec, REG,
+                    SolveOptions(grad_impl="fused",
+                                 pallas_impl=pallas_impl, **OPTS))
+    assert float(rf.value) == float(rp.value)
+    assert np.array_equal(np.asarray(rf.alpha), np.asarray(rp.alpha))
+    assert np.array_equal(np.asarray(rf.beta), np.asarray(rp.beta))
+    assert rf.rounds == rp.rounds
+
+
+def test_fused_solve_matches_reference_backends():
+    """Fused vs the dense/screened references: documented tolerance."""
+    C, a, b, spec = _problem()
+    rf = solve_dual(C, a, b, spec, REG, SolveOptions(grad_impl="fused", **OPTS))
+    for ref_impl in ("dense", "screened"):
+        rr = solve_dual(C, a, b, spec, REG,
+                        SolveOptions(grad_impl=ref_impl, **OPTS))
+        # objective at the documented cross-backend tolerance; duals looser
+        # (f32 trajectories diverge slightly across op orders, the argmax
+        # set does not)
+        np.testing.assert_allclose(float(rf.value), float(rr.value),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(rf.alpha), np.asarray(rr.alpha),
+                                   atol=5e-4)
+        np.testing.assert_allclose(np.asarray(rf.beta), np.asarray(rr.beta),
+                                   atol=5e-4)
+
+
+def test_fused_solve_batched_bitwise():
+    """Batched fused solve == batched pallas solve == stacked solo fused."""
+    probs = [_problem(s) for s in (0, 1, 2)]
+    spec = probs[0][3]
+    C = jnp.stack([p[0] for p in probs])
+    a = jnp.stack([p[1] for p in probs])
+    b = jnp.stack([p[2] for p in probs])
+    rf = solve_batch(C, a, b, spec, REG,
+                     SolveOptions(grad_impl="fused", **OPTS))
+    rp = solve_batch(C, a, b, spec, REG,
+                     SolveOptions(grad_impl="pallas", **OPTS))
+    assert np.array_equal(np.asarray(rf.alpha), np.asarray(rp.alpha))
+    assert np.array_equal(np.asarray(rf.beta), np.asarray(rp.beta))
+    for i, (Ci, ai, bi, _) in enumerate(probs):
+        solo = solve_dual(Ci, ai, bi, spec, REG,
+                          SolveOptions(grad_impl="fused", **OPTS))
+        assert np.array_equal(np.asarray(rf.alpha[i]), np.asarray(solo.alpha))
+        assert np.array_equal(np.asarray(rf.beta[i]), np.asarray(solo.beta))
+
+
+def test_fused_facade_factorized_bitwise():
+    """Facade on-the-fly geometry: fused == pallas bitwise, solo + many."""
+    from repro import ot
+
+    rng = np.random.default_rng(3)
+    labels = np.repeat(np.arange(L), GSZ)
+    Xs = rng.normal(size=(L * GSZ, 2)) + labels[:, None] * 3.0
+    Xt = rng.normal(size=(N, 2)) + rng.integers(0, L, N)[:, None] * 3.0
+    prob = ot.Problem.from_samples(Xs, labels, Xt, REG, pad_to=4)
+    sols = {}
+    for gi in ("pallas", "fused"):
+        plan = ot.ExecutionPlan(grad_impl=gi, geometry="on_the_fly",
+                                snapshot_every=5)
+        sols[gi] = ot.compile(prob, plan).solve(prob)
+    assert sols["fused"].value == sols["pallas"].value
+    assert np.array_equal(np.asarray(sols["fused"].alpha),
+                          np.asarray(sols["pallas"].alpha))
+    assert np.array_equal(np.asarray(sols["fused"].beta),
+                          np.asarray(sols["pallas"].beta))
+
+
+# -- sharded parity (4 forced host devices, subprocess) ------------------------
+def test_fused_sharded_bitwise():
+    """solve_batch_sharded(fused) == unsharded fused == unsharded pallas."""
+    code = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import groups as G
+    from repro.core.lbfgs import LbfgsOptions
+    from repro.core.ot import squared_euclidean_cost
+    from repro.core.regularizers import GroupSparseReg
+    from repro.core.sharded import solve_batch_sharded
+    from repro.core.solver import SolveOptions, solve_batch
+
+    assert jax.device_count() == 4, jax.device_count()
+    rng = np.random.default_rng(3)
+    L, g, n = 5, 8, 40
+    m = L * g
+    labels = np.repeat(np.arange(L), g)
+    spec = G.spec_from_labels(labels, pad_to=4)
+    Cs, As, Bs = [], [], []
+    for _ in range(8):
+        Xs = rng.normal(size=(m, 2)) + labels[:, None] * 3.0
+        Xt = rng.normal(size=(n, 2)) + rng.integers(0, L, n)[:, None] * 3.0
+        C = squared_euclidean_cost(Xs, Xt).astype(np.float32)
+        C /= C.max()
+        Cs.append(G.pad_cost_matrix(C, labels, spec))
+        As.append(G.pad_marginal(np.full(m, 1/m, np.float32), labels, spec))
+        Bs.append(np.full(n, 1/n, np.float32))
+    C = jnp.asarray(np.stack(Cs)); a = jnp.asarray(np.stack(As))
+    b = jnp.asarray(np.stack(Bs))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    opts = SolveOptions(grad_impl="fused", snapshot_every=5,
+                        lbfgs=LbfgsOptions(max_iters=60))
+    rs = solve_batch_sharded(C, a, b, spec, reg, opts)
+    ru = solve_batch(C, a, b, spec, reg, opts)
+    rp = solve_batch(C, a, b, spec, reg,
+                     SolveOptions(grad_impl="pallas", snapshot_every=5,
+                                  lbfgs=LbfgsOptions(max_iters=60)))
+    assert np.array_equal(np.asarray(rs.alpha), np.asarray(ru.alpha))
+    assert np.array_equal(np.asarray(rs.beta), np.asarray(ru.beta))
+    assert np.array_equal(np.asarray(rs.rounds), np.asarray(ru.rounds))
+    assert np.array_equal(np.asarray(ru.alpha), np.asarray(rp.alpha))
+    assert np.array_equal(np.asarray(ru.beta), np.asarray(rp.beta))
+    print("FUSED-SHARDED-OK")
+    """
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=4",
+        PYTHONPATH=SRC,
+        JAX_PLATFORMS="cpu",
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "FUSED-SHARDED-OK" in r.stdout
+
+
+# -- launch accounting: the 2 -> 1 claim ---------------------------------------
+def test_fused_single_launch_per_eval():
+    """Steady-state oracle: two-launch schedule traces 2 Pallas calls,
+    the fused schedule exactly 1 (and it is the fused mega-kernel)."""
+    from repro.kernels import gradpsi as gk
+
+    C, a, b, spec = _problem()
+    from repro.core.dual import DualProblem
+
+    prob = DualProblem(spec.num_groups, spec.group_size, N, REG)
+    st, alpha, beta = _mid_iterate(C, a, b, spec)
+    pp = kops.prepare_padded_problem(C, prob)
+    pstate = kops.pad_screen_state(st, jnp.asarray(spec.sqrt_sizes()), pp)
+
+    counts = {}
+    for impl in ("grid", "compact"):
+        jax.clear_caches()
+        gk.reset_launch_counts()
+        jax.block_until_ready(kops.dual_value_and_grad_fused(
+            alpha, beta, a, b, pstate, pp, prob, impl=impl
+        ))
+        counts[impl] = dict(gk.launch_counts())
+    assert sum(counts["grid"].values()) == 1, counts["grid"]
+    assert list(counts["grid"]) == ["gradpsi_fused_pallas"], counts["grid"]
+    assert sum(counts["compact"].values()) == 2, counts["compact"]
+    assert counts["compact"].get("screen_pallas") == 1, counts["compact"]
+
+
+# -- bf16 mode -----------------------------------------------------------------
+def test_bf16_requires_kernel_backend():
+    from repro import ot
+
+    with pytest.raises(ValueError, match="bf16"):
+        ot.ExecutionPlan(grad_impl="screened", precision="bf16")
+    with pytest.raises(ValueError):
+        solve_dual(*_problem()[:3], _problem()[3], REG,
+                   SolveOptions(grad_impl="dense", precision="bf16"))
+
+
+@pytest.mark.parametrize("grad_impl", ["pallas", "fused"])
+def test_bf16_tolerance_vs_f64_baseline(grad_impl):
+    """bf16 cost storage: objective within the documented tolerance of the
+    f64 cpu_baseline AND of the committed golden fixture (level 3 of the
+    docs/geometry.md numerics scheme)."""
+    from repro.core.cpu_baseline import fast_solve
+
+    with open(os.path.join(FIXTURE_DIR, "golden_fused_bf16.json")) as f:
+        gold = json.load(f)
+    assert gold["schema_version"] == 1
+    co = gold["coords"]
+    C, a, b, spec, _ = make_ot_problem(
+        co["seed"], co["L"], co["g"], co["n"], pad_to=co["pad_to"]
+    )
+    reg = GroupSparseReg.from_rho(co["gamma"], co["rho"])
+
+    ref = fast_solve(np.asarray(C, np.float64), np.asarray(a, np.float64),
+                     np.asarray(b, np.float64), spec, reg)
+    # the f64 reference itself is pinned tight — drift here means the
+    # baseline (not the bf16 path) changed
+    np.testing.assert_allclose(ref.value, gold["f64_value"], rtol=1e-9)
+
+    r16 = solve_dual(jnp.asarray(C), jnp.asarray(a), jnp.asarray(b), spec,
+                     reg, SolveOptions(grad_impl=grad_impl,
+                                       precision="bf16", **OPTS))
+    # documented bf16 tolerance vs the f64 baseline (docs/api.md)
+    np.testing.assert_allclose(float(r16.value), ref.value,
+                               rtol=1e-3, atol=1e-3)
+    # golden pin, cross-backend tolerant (bf16 rounding is deterministic
+    # per backend but the accumulation order may differ on real TPUs)
+    np.testing.assert_allclose(float(r16.value), gold["bf16_value"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_prepared_operands_are_bf16():
+    """_prepare_padded stores the cost (dense Cp / factorized leaves) in
+    bf16 exactly once; f32 mode leaves everything f32."""
+    from repro.core.dual import DualProblem
+    from repro.core.solver import _prepare_padded
+
+    C, a, b, spec = _problem()
+    prob = DualProblem(spec.num_groups, spec.group_size, N, REG)
+    o16 = SolveOptions(grad_impl="fused", precision="bf16")
+    o32 = SolveOptions(grad_impl="fused", precision="f32")
+    assert _prepare_padded(C[None], prob, o16).Cp.dtype == jnp.bfloat16
+    assert _prepare_padded(C[None], prob, o32).Cp.dtype == jnp.float32
+
+    from repro.ot.geometry import SquaredL2Geometry
+
+    rng = np.random.default_rng(0)
+    labels = np.repeat(np.arange(L), GSZ)
+    geom = SquaredL2Geometry.from_samples(
+        rng.normal(size=(L * GSZ, 3)), labels, rng.normal(size=(N, 3)), spec
+    )
+    fc = kops.FactorizedCost(
+        x=jnp.asarray(geom.x), x_sq=jnp.asarray(geom.x_sq),
+        y=jnp.asarray(geom.y), y_sq=jnp.asarray(geom.y_sq),
+    )
+    fp16 = _prepare_padded(fc, prob, o16)
+    assert fp16.x.dtype == jnp.bfloat16 and fp16.y_sq.dtype == jnp.bfloat16
+
+
+# -- VMEM byte-model pin (satellite: explicit per-route accounting) ------------
+def test_tile_working_set_bytes_formula():
+    """Pin the bytes-per-TILE_L formula term by term, both routes."""
+    from repro.kernels.gradpsi import (
+        pick_tile_l,
+        pick_tile_l_factorized,
+        tile_working_set_bytes,
+    )
+
+    def expected(tl, g, tn, d, db):
+        ft = 2 * tl * g * tn * 4                       # F + T, f32
+        if d is None:
+            cost = tl * g * tn * db                    # dense cost tile
+        else:                                          # factorized rebuild
+            cost = tl * g * tn * d * 4 + (tl * g + tn) * (d + 1) * db
+        duals = (tl * g + tn + tl) * 4                 # alpha, beta, tau
+        outputs = (tl * g + tn + 1) * 4                # ga, gb, psi
+        screen = (3 * tl * tn * 4                      # z/k/o tiles
+                  + tl * tn                            # active, int8
+                  + (4 * tl + tn) * 4                  # 3 da rows+sqrt_g, db
+                  + 4)                                 # flag cell
+        return ft + cost + duals + outputs + screen
+
+    for tl in (1, 2, 4, 8):
+        for g in (8, 16, 128):
+            for tn in (128, 256):
+                for d, db in ((None, 4), (None, 2), (3, 4), (16, 2)):
+                    got = tile_working_set_bytes(tl, g, tn, d=d, dtype_bytes=db)
+                    assert got == expected(tl, g, tn, d, db), (tl, g, tn, d, db)
+
+    # the pickers consume this model: monotone in TILE_L, and the picked
+    # tile must itself fit while 2x it (if <8) must not have been skipped
+    from repro.kernels.gradpsi import VMEM_BUDGET_BYTES
+
+    for g in (8, 64, 512):
+        t = pick_tile_l(g, 128)
+        assert tile_working_set_bytes(t, g, 128) <= VMEM_BUDGET_BYTES or t == 1
+        if t < 8:
+            assert tile_working_set_bytes(2 * t, g, 128) > VMEM_BUDGET_BYTES
+    for g, d in ((8, 3), (64, 16)):
+        t = pick_tile_l_factorized(g, 128, d)
+        assert (tile_working_set_bytes(t, g, 128, d=d) <= VMEM_BUDGET_BYTES
+                or t == 1)
