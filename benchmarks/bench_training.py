@@ -1,0 +1,148 @@
+"""Training benchmark: the differentiable OT layer inside a train loop.
+
+Two seeded scenarios, each emitting deterministic counters plus
+informational wall-clock (docs/training.md):
+
+* ``danskin_grad`` — ``jax.value_and_grad`` of :func:`repro.ot.ot_loss`
+  on the golden dense problem.  The layer's contract is O(1) solver
+  launches per training step: the forward pass runs ONE dual solve and
+  the Danskin backward pass is closed-form plan recovery, so
+  ``solves_per_step`` (from ``repro.ot.diff.solve_count``) is gated at
+  EXACTLY 1 — any unrolling or re-solve regression shows up as an
+  integer jump.  The value/gradient magnitudes are tolerance-gated.
+* ``train_smoke`` — a tiny LM ``Trainer`` run with ``ot_align=True``
+  (the full stack: features -> OTLayer.from_samples -> AdamW).
+  ``loss_decreased`` (mean of the last half of per-step losses below
+  the mean of the first half — per-batch CE is noisy at this scale, the
+  half-means are not) is a single bit gated EXACTLY; the loss means are
+  tolerance-gated; per-step wall time is reported, never gated.
+
+``benchmarks/check_regression.py`` re-runs this at the committed
+``BENCH_training.json``'s scale and compares.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FULL = dict(grad_steps=3, train_steps=10)
+SMOKE = dict(grad_steps=2, train_steps=4)
+
+
+def danskin_grad_scenario(grad_steps: int) -> dict:
+    """value_and_grad steps on the golden dense problem; count solves."""
+    import repro.ot as ot
+    from repro.core.regularizers import GroupSparseReg
+    from repro.ot import diff
+
+    L, g, n = 3, 8, 20
+    rng = np.random.default_rng(0)
+    C = jnp.asarray(rng.random((L * g, n), dtype=np.float32))
+    reg = GroupSparseReg.from_rho(1.0, 0.6)
+    layer = diff.OTLayer(L, g, n, reg, plan=ot.ExecutionPlan(
+        grad_impl="screened", gtol=1e-7, max_iters=2000, ftol=1e-12))
+    vg = jax.value_and_grad(layer)
+
+    value, grad = vg(C)           # warm the jitted solver program
+    jax.block_until_ready(grad)
+    diff.reset_solve_count()
+    t0 = time.perf_counter()
+    for _ in range(grad_steps):
+        value, grad = vg(C)
+        jax.block_until_ready(grad)
+    wall_us = (time.perf_counter() - t0) / grad_steps * 1e6
+    solves = diff.solve_count()
+
+    return {
+        "scenario": "danskin_grad",
+        "L": L, "g": g, "n": n, "steps": grad_steps,
+        "counters": {
+            "solves_per_step": solves // grad_steps,
+            "value_milli": round(float(value) * 1e3, 3),
+            "grad_inf_milli": round(float(jnp.abs(grad).max()) * 1e3, 3),
+        },
+        "wall": {"step_us": round(wall_us, 1)},
+    }
+
+
+def train_smoke_scenario(train_steps: int) -> dict:
+    """Tiny Trainer run with the OT alignment loss; gate the loss bit."""
+    from repro.configs import get_config
+    from repro.configs.base import OptimizerConfig, TrainConfig
+    from repro.data.pipeline import SyntheticLM, SyntheticLMConfig
+
+    from repro.training.trainer import Trainer
+
+    cfg = get_config("smollm-135m").reduced(
+        num_layers=2, d_model=64, d_ff=128, vocab_size=128)
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                  decay_steps=train_steps),
+        steps=train_steps, log_every=1, checkpoint_every=10 ** 6,
+        ot_align=True, ot_align_weight=0.05,
+    )
+    data = SyntheticLM(SyntheticLMConfig(vocab_size=128, seq_len=32,
+                                         global_batch=4, num_classes=8))
+    trainer = Trainer(cfg, tcfg, data)
+    t0 = time.perf_counter()
+    trainer.run()
+    wall = time.perf_counter() - t0
+    hist = trainer.metrics_history
+    losses = [h["loss"] for h in hist]
+    # per-batch CE is noisy at this scale, so the improvement bit compares
+    # half-means (deterministic: seeded data + f32 CPU arithmetic)
+    half = len(losses) // 2
+    first_mean = float(np.mean(losses[:half]))
+    final_mean = float(np.mean(losses[half:]))
+
+    return {
+        "scenario": "train_smoke",
+        "steps": train_steps,
+        "counters": {
+            "loss_decreased": int(final_mean < first_mean),
+            "loss_first_milli": round(first_mean * 1e3, 1),
+            "loss_final_milli": round(final_mean * 1e3, 1),
+            "ot_distance_milli": round(hist[-1]["ot_distance"] * 1e3, 1),
+        },
+        "wall": {"step_us": round(wall / train_steps * 1e6, 1)},
+    }
+
+
+def main(smoke: bool = False, out: str | None = "BENCH_training.json",
+         grad_steps: int | None = None, train_steps: int | None = None):
+    """Run both scenarios; returns the rows (and writes ``out`` if set)."""
+    base = SMOKE if smoke else FULL
+    grad_steps = base["grad_steps"] if grad_steps is None else grad_steps
+    train_steps = base["train_steps"] if train_steps is None else train_steps
+
+    rows = [
+        danskin_grad_scenario(grad_steps),
+        train_smoke_scenario(train_steps),
+    ]
+    for r in rows:
+        r["smoke"] = smoke
+        print(f"{r['scenario']}: counters={r['counters']} wall={r['wall']}")
+    if out:
+        try:
+            from benchmarks.bench_io import write_bench_json
+        except ImportError:          # invoked as a script from benchmarks/
+            from bench_io import write_bench_json
+
+        write_bench_json(out, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_training.json")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out or None)

@@ -37,6 +37,14 @@ tick-denominated latency percentiles, launches and retry attempts within
 tolerance, plus one exact invariant — ``unterminated`` (requests that
 never reached a terminal status) must stay at its committed value of 0.
 
+The training baseline (``BENCH_training.json``, from
+``benchmarks/bench_training.py``) gates the differentiable-layer
+contract: ``solves_per_step`` (the Danskin backward pass adds ZERO
+solver launches — one solve per value_and_grad step) and
+``loss_decreased`` (the OT-augmented tiny Trainer strictly improves its
+loss) are EXACT; value/loss magnitudes are tolerance-gated; step wall
+time is informational.
+
 Exit code 0 = clean, 1 = regression (or unreadable/mismatched baseline).
 """
 from __future__ import annotations
@@ -152,6 +160,35 @@ def compare_geometry(baseline_rows, fresh_rows):
                 yield key, f"{group}.{f}", old, new, new == old
 
 
+# training counters that must match the baseline EXACTLY: both are
+# contract bits, not magnitudes — ``solves_per_step`` counts solver
+# launches per value_and_grad step (Danskin = 1; unrolling would jump it)
+# and ``loss_decreased`` is the train-smoke improvement bit
+TRAINING_EXACT = ("solves_per_step", "loss_decreased")
+
+
+def _training_key(row: dict) -> str:
+    return str(row.get("scenario"))
+
+
+def compare_training(baseline_rows, fresh_rows, tolerance: float):
+    """Yield (key, field, old, new, ok) for every training counter."""
+    fresh_by_key = {_training_key(r): r for r in fresh_rows}
+    for row in baseline_rows:
+        key = _training_key(row)
+        fresh = fresh_by_key.get(key)
+        if fresh is None:
+            yield key, "<row>", "present", "missing", False
+            continue
+        for f, old in row.get("counters", {}).items():
+            new = fresh.get("counters", {}).get(f)
+            if f in TRAINING_EXACT:
+                ok = new == old
+            else:
+                ok = new is not None and _within(old, new, tolerance)
+            yield key, f, old, new, ok
+
+
 # serving counters that must match the baseline EXACTLY: ``unterminated``
 # counts lifecycle-invariant violations (a request that never reached a
 # terminal status), which no tolerance can excuse
@@ -186,6 +223,7 @@ def main() -> int:
     ap.add_argument("--sharded-baseline", default="BENCH_sharded.json")
     ap.add_argument("--serving-baseline", default="BENCH_serving.json")
     ap.add_argument("--geometry-baseline", default="BENCH_geometry.json")
+    ap.add_argument("--training-baseline", default="BENCH_training.json")
     ap.add_argument("--tolerance", type=float, default=0.20)
     args = ap.parse_args()
 
@@ -310,6 +348,37 @@ def main() -> int:
         print(f"  [{status}] serving={key} {field}: {old} -> {new}")
         if not ok:
             failures.append((key, field, old, new))
+
+    # training-loop contract bits (deterministic seeded run, in-process)
+    try:
+        training_base, tver = read_bench_json(args.training_baseline)
+    except (OSError, ValueError) as e:
+        print(f"REGRESSION GATE: cannot read training baseline "
+              f"{args.training_baseline}: {e}")
+        return 1
+    if not training_base:
+        print("REGRESSION GATE: training baseline has no rows")
+        return 1
+    head = training_base[0]
+    print(f"training baseline: {args.training_baseline} "
+          f"(schema_version={tver}, {len(training_base)} scenarios, "
+          f"smoke={head.get('smoke', False)})")
+
+    from benchmarks import bench_training
+
+    fresh_training = bench_training.main(
+        smoke=bool(head.get("smoke", False)), out=None
+    )
+    for key, field, old, new, ok in compare_training(
+        training_base, fresh_training, args.tolerance
+    ):
+        status = "ok" if ok else "REGRESSION"
+        print(f"  [{status}] training={key} {field}: {old} -> {new}")
+        if not ok:
+            failures.append((key, field, old, new))
+    for row in fresh_training:
+        print(f"  (info) training={row['scenario']} "
+              f"step_us={row['wall']['step_us']}")
 
     if failures:
         print(f"REGRESSION GATE: {len(failures)} counter(s) moved more than "

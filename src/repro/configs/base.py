@@ -198,11 +198,14 @@ class TrainConfig:
     steps: int = 100
     log_every: int = 10
     checkpoint_every: int = 50
-    # paper integration: OT domain-alignment auxiliary loss
+    # paper integration: OT domain-alignment auxiliary loss (routed through
+    # repro.ot.OTLayer — exact Danskin gradients; docs/training.md)
     ot_align: bool = False
     ot_align_weight: float = 0.1
     ot_gamma: float = 1.0
     ot_rho: float = 0.6
+    ot_solver: str = "lbfgs"            # lbfgs | stochastic (ExecutionPlan.solver)
+    ot_grad_impl: str = "screened"      # dense | screened | pallas | fused
     # cross-pod gradient compression (error-feedback int8)
     grad_compression: str = "none"      # none | int8_ef
     # constrain gradient leaves to their param shardings before the optimizer

@@ -1,0 +1,315 @@
+"""Minibatch stochastic dual ascent for the group-sparse OT dual.
+
+The SON-regularization paper (Panahi et al., arXiv 1903.03850) observes
+that clustering/OT duals of the form
+
+    max_{alpha, beta}  alpha^T a + beta^T b - sum_j psi(alpha + beta_j - c_j)
+
+are *column separable*: the coupling term is a plain sum over target
+columns j.  A uniformly sampled subset of columns therefore yields
+
+  * an **exact** partial gradient for the sampled ``beta_j`` (each column's
+    gradient ``b_j - colsum_j`` touches no other column), and
+  * an **unbiased** estimate of the ``alpha`` gradient, by rescaling the
+    sampled columns' row-sums by ``n_blocks / k_blocks``.
+
+This module implements that scheme on the repo's padded group layout:
+columns are partitioned into contiguous *blocks* of ``block_cols`` and a
+without-replacement minibatch of blocks is drawn each step from a per-epoch
+seeded permutation, so the whole schedule is deterministic given
+``StochasticOptions.seed``.  Blocks — not single columns — are the sampling
+unit because a block maps 1:1 onto a kernel column tile: the Pallas
+backends run their per-minibatch oracle by marking only the sampled tiles
+live in the existing skip-flag grid (``tile_n = block_cols``), so a step
+costs O(m * k * block_cols) instead of O(m * n).  The dense/screened
+reference backends evaluate the same estimator through
+``dual_value_and_grad(..., zero_mask=...)`` — identical sampled column
+sets, so every backend optimizes the same stochastic trajectory.
+
+Iterates are Polyak-averaged over the trailing ``avg_fraction`` of epochs
+("epoch-averaged duals"), and the returned objective/gradient are an exact
+full evaluation at the averaged point, so downstream consumers (Solution,
+the Danskin layer) see a true dual value, not a minibatch estimate.
+
+Selected via ``ExecutionPlan(solver='stochastic')``; ``solver='lbfgs'``
+remains the exact default.  Notes:
+
+  * screening is *inactive* here — duals move every step, so the
+    safe-region certificates of Algorithm 2 never stabilize;
+    ``grad_impl='screened'`` runs the dense oracle and ``'fused'`` runs the
+    two-launch flag-driven kernels (flags carry the minibatch, not
+    screening verdicts).
+  * the result is packed into the same ``(lb, scr, rounds, stats)``
+    contract as :func:`repro.core.solver._solve_batch_jit`, so the
+    Executor's batching, plan recovery and stats plumbing are reused
+    unchanged (``rounds`` counts epochs; screening stats are zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lbfgs, screening
+from repro.core import solver as slv
+from repro.core.dual import DualProblem, dual_value_and_grad
+from repro.core.solver import OTResult, SolveOptions
+
+
+@dataclasses.dataclass(frozen=True)
+class StochasticOptions:
+    """Knobs of the minibatch dual-ascent schedule (all static).
+
+    epochs:        full passes over the column blocks (= solver "rounds").
+    batch_blocks:  column blocks sampled per step (minibatch size k).
+    block_cols:    columns per block; the Pallas oracle runs with
+                   ``tile_n = block_cols`` so one block == one column tile.
+    step_size:     initial step eta_0.
+    decay:         eta_t = eta_0 / (1 + decay * t) with t the global step.
+    avg_fraction:  trailing fraction of epochs whose end-of-epoch duals are
+                   Polyak-averaged into the returned solution.
+    seed:          PRNG seed for the per-epoch block permutations.
+    """
+
+    epochs: int = 60
+    batch_blocks: int = 2
+    block_cols: int = 128
+    step_size: float = 0.5
+    decay: float = 0.02
+    avg_fraction: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("epochs", "batch_blocks", "block_cols"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{name} must be a positive int, got {v!r}")
+        if not (self.step_size > 0.0):
+            raise ValueError(f"step_size must be > 0, got {self.step_size!r}")
+        if self.decay < 0.0:
+            raise ValueError(f"decay must be >= 0, got {self.decay!r}")
+        if not (0.0 < self.avg_fraction <= 1.0):
+            raise ValueError(
+                f"avg_fraction must be in (0, 1], got {self.avg_fraction!r}"
+            )
+        if not isinstance(self.seed, int):
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
+
+
+def _num_blocks(n: int, block_cols: int) -> Tuple[int, int]:
+    """(block width w, number of blocks nt) for n columns."""
+    w = min(block_cols, n)
+    return w, -(-n // w)
+
+
+def _prepare(C, prob: DualProblem, opts: SolveOptions, sopts: StochasticOptions):
+    """Tile-pad the cost once with ``tile_n = block width`` (kernel paths).
+
+    Mirrors :func:`repro.core.solver._prepare_padded` (including the bf16
+    downcast-once contract) but pins the column tile width to the sampling
+    block width so flags express the minibatch exactly.
+    """
+    if opts.grad_impl not in ("pallas", "fused"):
+        if opts.precision != "f32":
+            raise ValueError(
+                "precision='bf16' requires grad_impl='pallas' or 'fused' "
+                f"(got grad_impl={opts.grad_impl!r})."
+            )
+        return None
+    from repro.kernels import ops as kops
+
+    w, _ = _num_blocks(prob.n, sopts.block_cols)
+    if slv._is_factorized(C):
+        fp = kops.prepare_factorized_problem(C, prob, tile_n=w)
+        if opts.precision == "bf16":
+            fp = dataclasses.replace(
+                fp,
+                x=fp.x.astype(jnp.bfloat16),
+                x_sq=fp.x_sq.astype(jnp.bfloat16),
+                y=fp.y.astype(jnp.bfloat16),
+                y_sq=fp.y_sq.astype(jnp.bfloat16),
+            )
+        return fp
+    pp = kops.prepare_padded_problem_batched(C, prob, tile_n=w)
+    if opts.precision == "bf16":
+        pp = dataclasses.replace(pp, Cp=pp.Cp.astype(jnp.bfloat16))
+    return pp
+
+
+def _make_oracle(C, a, b, prob, opts, sopts, padded):
+    """Minibatch oracle: (alpha, beta, live (nt,) bool) -> (v, ga, gb).
+
+    Maximization-sign gradients restricted to the live column blocks
+    (dead columns contribute exact zeros — the ``zero_mask`` / skip-flag
+    contract of Theorem 2 reused for sampling instead of screening).
+    """
+    w, nt = _num_blocks(prob.n, sopts.block_cols)
+    block_id = jnp.arange(prob.n) // w                      # (n,)
+
+    if opts.grad_impl in ("pallas", "fused"):
+        from repro.kernels import ops as kops
+
+        B = C.shape[0]
+        lt, nt_grid = padded.grid
+        assert nt_grid == nt, (nt_grid, nt)
+        kernel = (
+            kops.dual_value_and_grad_factorized_batched
+            if slv._is_factorized(C)
+            else kops.dual_value_and_grad_padded_batched
+        )
+
+        def oracle(alpha, beta, live):
+            flags = jnp.broadcast_to(
+                live.astype(jnp.int32)[None, None, :], (B, lt, nt)
+            )
+            v, ga, gb = kernel(
+                alpha, beta, a, b, flags, padded, prob,
+                impl=opts.pallas_impl,
+            )
+            return v, ga, gb
+
+        return oracle, block_id
+
+    def oracle(alpha, beta, live):
+        live_cols = live[block_id]                           # (n,)
+        zero_mask = jnp.broadcast_to(
+            ~live_cols[None, :], (prob.num_groups, prob.n)
+        )
+        v, (ga, gb) = dual_value_and_grad(
+            alpha, beta, C, a, b, prob, zero_mask=zero_mask
+        )
+        return v, ga, gb
+
+    return oracle, block_id
+
+
+@functools.partial(jax.jit, static_argnames=("prob", "opts", "sopts"))
+def _sgd_solve_batch_jit(C, a, b, row_mask, sqrt_g, prob, opts, sopts):
+    """Batched stochastic solve: same output contract as _solve_batch_jit.
+
+    Returns ``(lb, scr, rounds, stats)`` with leading batch axes; ``lb``
+    holds the epoch-averaged duals with an exact full-gradient evaluation
+    at that point (one extra oracle call), ``rounds`` counts epochs and
+    the screening stats are zero (screening is inactive — see module doc).
+    ``row_mask`` rides along for signature parity with the exact solver;
+    padded rows self-mask through the PAD_COST sentinel.
+    """
+    del row_mask, sqrt_g
+    B = C.shape[0]
+    m_pad, n = prob.m_pad, prob.n
+    w, nt = _num_blocks(n, sopts.block_cols)
+    k = min(sopts.batch_blocks, nt)
+    steps_per_epoch = max(nt // k, 1)
+    scale = nt / k
+
+    padded = _prepare(C, prob, opts, sopts)
+    oracle, block_id = _make_oracle(C, a, b, prob, opts, sopts, padded)
+
+    key = jax.random.PRNGKey(sopts.seed)
+    avg_start = min(
+        int(round(sopts.epochs * (1.0 - sopts.avg_fraction))),
+        sopts.epochs - 1,
+    )
+
+    def step_body(s, carry):
+        alpha, beta, perm, e = carry
+        t = e * steps_per_epoch + s
+        idx = jax.lax.dynamic_slice(perm, (s * k,), (k,))
+        live = jnp.zeros((nt,), bool).at[idx].set(True)
+        _, ga, gb = oracle(alpha, beta, live)
+        eta = sopts.step_size / (1.0 + sopts.decay * t)
+        # unbiased full alpha-gradient estimate: a - scale * rowsum_live
+        alpha = alpha + eta * (a - scale * (a - ga))
+        # exact partial gradient for the sampled columns only
+        beta = beta + eta * jnp.where(live[block_id], gb, 0.0)
+        return alpha, beta, perm, e
+
+    def epoch_body(e, carry):
+        alpha, beta, acc_a, acc_b, cnt = carry
+        perm = jax.random.permutation(jax.random.fold_in(key, e), nt)
+        alpha, beta, _, _ = jax.lax.fori_loop(
+            0, steps_per_epoch, step_body, (alpha, beta, perm, e)
+        )
+        take = (e >= avg_start).astype(alpha.dtype)
+        return (
+            alpha,
+            beta,
+            acc_a + take * alpha,
+            acc_b + take * beta,
+            cnt + take,
+        )
+
+    alpha = jnp.zeros((B, m_pad), jnp.float32)
+    beta = jnp.zeros((B, n), jnp.float32)
+    alpha, beta, acc_a, acc_b, cnt = jax.lax.fori_loop(
+        0,
+        sopts.epochs,
+        epoch_body,
+        (alpha, beta, jnp.zeros_like(alpha), jnp.zeros_like(beta),
+         jnp.zeros((), jnp.float32)),
+    )
+    denom = jnp.maximum(cnt, 1.0)
+    x_bar = jnp.concatenate([acc_a / denom, acc_b / denom], axis=-1)
+
+    all_live = jnp.ones((nt,), bool)
+
+    def vag(x):
+        al, be = slv._split(x, m_pad)
+        v, ga, gb = oracle(al, be, all_live)
+        return -v, -jnp.concatenate([ga, gb], axis=-1)
+
+    lb = lbfgs.init_state_batched(x_bar, vag, opts.lbfgs)
+    total_steps = sopts.epochs * steps_per_epoch
+    ok = jnp.isfinite(lb.f)
+    lb = lb._replace(
+        iter=jnp.full((B,), total_steps, jnp.int32),
+        converged=ok,
+        failed=~ok,
+    )
+    scr = screening.init_state(
+        m_pad, n, prob.num_groups, jnp.float32, batch_shape=(B,)
+    )
+    rounds = jnp.full((B,), sopts.epochs, jnp.int32)
+    stats = jnp.zeros((B, 3), jnp.int32)
+    return lb, scr, rounds, stats
+
+
+@functools.partial(jax.jit, static_argnames=("prob", "opts", "sopts"))
+def _sgd_solve_jit(C, a, b, row_mask, sqrt_g, prob, opts, sopts):
+    """Single-problem entry point: the B = 1 slice of the batched solver."""
+    C1 = jax.tree_util.tree_map(lambda v: v[None], C)
+    lb, scr, rounds, stats = _sgd_solve_batch_jit(
+        C1, a[None], b[None], row_mask, sqrt_g, prob, opts, sopts
+    )
+    one = lambda t: jax.tree_util.tree_map(lambda v: v[0], t)  # noqa: E731
+    return one(lb), one(scr), rounds[0], stats[0]
+
+
+def solve_solo(C, a, b, spec, reg, opts, sopts, launch) -> OTResult:
+    """Solo stochastic solve with the façade's operand/packing contract.
+
+    The stochastic twin of :func:`repro.core.solver._solve_solo` — same
+    operand construction and :class:`OTResult` packing, so
+    ``Executor.solve`` treats both solvers interchangeably.
+    """
+    prob = DualProblem(
+        num_groups=spec.num_groups,
+        group_size=spec.group_size,
+        n=int(C.shape[1]),
+        reg=reg,
+    )
+    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
+    sqrt_g = jnp.asarray(spec.sqrt_sizes(), jnp.float32)
+    lb, scr, rounds, stats = launch(
+        _sgd_solve_jit, C, a, b, row_mask, sqrt_g, prob, opts, sopts
+    )
+    alpha, beta = slv._split(lb.x, prob.m_pad)
+    stats_dict = {
+        "zero": int(stats[0]),
+        "check": int(stats[1]),
+        "active": int(stats[2]),
+    }
+    return OTResult(alpha, beta, -lb.f, lb, scr, int(rounds), stats_dict)

@@ -21,8 +21,16 @@ is bitwise-identical to the legacy entry points it replaced
 ``sharded.solve_batch_sharded`` — all now deprecated shims over this
 package).
 
+For training-time workloads, :class:`~repro.ot.diff.OTLayer` /
+:func:`~repro.ot.diff.ot_loss` expose the regularized OT value as a
+differentiable function (exact Danskin gradients — ``jax.grad`` of the
+value is the optimal plan, no unrolling through the solver), and
+``ExecutionPlan(solver='stochastic')`` swaps in the minibatch dual-ascent
+solver of :mod:`repro.core.stochastic` (docs/training.md).
+
 ``tools/check_api_surface.py`` gates ``__all__`` against docs/api.md.
 """
+from repro.ot.diff import OTLayer, ot_loss
 from repro.ot.executor import Executor, Stream, compile, solve
 from repro.ot.geometry import CostGeometry, DenseCost, SquaredL2Geometry
 from repro.ot.plan import ExecutionPlan
@@ -39,6 +47,8 @@ __all__ = [
     "CostGeometry",
     "DenseCost",
     "SquaredL2Geometry",
+    "OTLayer",
+    "ot_loss",
     "compile",
     "solve",
 ]

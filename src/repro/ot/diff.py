@@ -1,0 +1,519 @@
+"""Differentiable OT layer: Danskin gradients through the screened dual.
+
+The regularized OT value solved by this repo,
+
+    W(C) = max_{alpha, beta}  alpha^T a + beta^T b - sum_j psi(alpha + beta_j - c_j),
+
+is a maximum of functions that are affine in ``C`` (through ``f = alpha +
+beta_j - c_j``), so Danskin's theorem gives its exact gradient *without
+differentiating through the solver*:
+
+    dW/dC = T*          (the optimal plan, T* = grad psi(f*) -- paper Eq. 6)
+    dW/da = alpha*,   dW/db = beta*
+
+(Blondel et al., "Smooth and Sparse Optimal Transport", arXiv 1710.06276.
+The identities are the same Fenchel relations property-tested in
+tests/test_regularizers.py.)  :class:`OTLayer` packages this as a
+``jax.custom_vjp``: the forward pass launches the exact jitted solver
+program the façade Executor runs (`repro.core.solver._solve_jit`, or the
+stochastic twin for ``ExecutionPlan(solver='stochastic')``) under any
+``grad_impl`` backend, and the backward pass is one closed-form plan
+recovery — no unrolling, O(1) solver calls per training step, and the
+plan (hence the cost gradient) inherits the group-block sparsity that
+screening certifies.
+
+Why not differentiate through the solver?  Unrolling L-BFGS + screening
+through AD costs O(iters) memory for the saved trajectory, differentiates
+non-smooth bookkeeping (line searches, active-set flags) that has zero
+gradient signal, and is orders of magnitude slower.  The unrolled path
+exists here only as a test oracle (:func:`unrolled_value`): a plain
+gradient-ascent solver written as a ``lax.scan`` that AD *can* flow
+through, used to cross-check the Danskin gradient.
+
+Samples mode (:meth:`OTLayer.from_samples`) keeps squared-l2 problems
+materialization-free end to end: the forward pass routes the factorized
+cost straight to the on-the-fly Pallas kernels, and the backward pass
+chain-rules ``dC_ij = 2 * scale * (x_i - y_j)`` through the plan with a
+group-chunked ``lax.scan`` — peak memory O(g*n + n*d), never (m, n).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import groups as G
+from repro.core import solver as slv
+from repro.core.dual import DualProblem, plan_from_duals
+from repro.core.regularizers import Regularizer
+from repro.kernels.gradpsi import factorized_cost_tile
+from repro.ot.plan import ExecutionPlan
+
+_SOLVES = {"count": 0}
+
+
+def solve_count() -> int:
+    """Dual solves launched by the layer (fwd passes; eager re-executes)."""
+    return _SOLVES["count"]
+
+
+def reset_solve_count() -> None:
+    """Reset the layer's solve counter (benchmarks)."""
+    _SOLVES["count"] = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class OTLayer:
+    """A regularized-OT value as a differentiable function of its inputs.
+
+    The layer is a frozen, hashable problem description (it rides through
+    ``jax.custom_vjp`` as a static argument, so compiled programs
+    specialize per layer exactly like the Executor specializes per plan):
+
+    num_groups:  L source groups (classes / sequences).
+    group_size:  padded uniform rows per group g.
+    num_target:  target column count n.
+    reg:         any :class:`repro.core.regularizers.Regularizer`.
+    plan:        :class:`ExecutionPlan` — backend, precision, solver
+                 (``'lbfgs'`` or ``'stochastic'``), iteration budgets.
+    sizes:       optional true per-group sizes for ragged groups
+                 (defaults to full groups).
+    normalize_cost: samples mode only — rescale by ``1 / max(C)`` found
+                 with a chunked max pass (the scale is a constant of the
+                 backward pass, matching the training-stack convention).
+    grad_refine: extra fixed-step exact ascent iterations appended after
+                 the solver (step ``gamma / max(m_pad, n)``, the safe
+                 inverse-curvature bound).  The f32 L-BFGS line search
+                 floors out around ``||grad||_inf ~ 1e-4``, and the
+                 Danskin gradient error tracks the dual residual
+                 linearly; a few hundred refine steps push it to the
+                 f32 noise floor (the FD harness in
+                 tests/test_diff_layer.py measures this).  Default 0
+                 keeps the forward value bitwise-identical to
+                 ``Executor.solve`` on the same plan.
+
+    Inputs use the padded uniform group layout of :mod:`repro.core.groups`
+    (rows sorted by group, ``m_pad = L * g``); gradients come back in the
+    same layout, with exact zeros on padded rows.  ``__call__`` takes a
+    dense cost; :meth:`from_samples` takes raw sample coordinates and
+    never materializes the (m, n) cost for the Pallas backends.  Both
+    return the dual-optimal (maximization) value, so minimizing it drives
+    source and target distributions together.
+    """
+
+    num_groups: int
+    group_size: int
+    num_target: int
+    reg: Regularizer
+    plan: ExecutionPlan = dataclasses.field(default_factory=ExecutionPlan)
+    sizes: Optional[Tuple[int, ...]] = None
+    normalize_cost: bool = False
+    grad_refine: int = 0
+
+    def __post_init__(self):
+        if self.grad_refine < 0:
+            raise ValueError(
+                f"grad_refine must be >= 0, got {self.grad_refine}"
+            )
+        if self.num_groups < 1 or self.group_size < 1 or self.num_target < 1:
+            raise ValueError(
+                "num_groups, group_size and num_target must be positive, got "
+                f"({self.num_groups}, {self.group_size}, {self.num_target})"
+            )
+        if self.sizes is not None:
+            sizes = tuple(int(s) for s in self.sizes)
+            if len(sizes) != self.num_groups:
+                raise ValueError(
+                    f"sizes has {len(sizes)} entries for {self.num_groups} groups"
+                )
+            if any(s < 1 or s > self.group_size for s in sizes):
+                raise ValueError(
+                    f"each group size must be in [1, {self.group_size}], got {sizes}"
+                )
+            object.__setattr__(self, "sizes", sizes)
+
+    # -- static problem geometry ------------------------------------------
+
+    def spec(self) -> G.GroupSpec:
+        """The padded :class:`~repro.core.groups.GroupSpec` of this layer."""
+        sizes = self.sizes or (self.group_size,) * self.num_groups
+        return G.GroupSpec(
+            num_groups=self.num_groups,
+            group_size=self.group_size,
+            sizes=tuple(sizes),
+            m=int(sum(sizes)),
+        )
+
+    def dual_problem(self) -> DualProblem:
+        """The static :class:`~repro.core.dual.DualProblem` of this layer."""
+        return DualProblem(
+            num_groups=self.num_groups,
+            group_size=self.group_size,
+            n=self.num_target,
+            reg=self.reg,
+        )
+
+    def _marginals(self, a, b):
+        spec = self.spec()
+        if a is None:
+            a = jnp.asarray(
+                spec.row_mask().reshape(-1), jnp.float32
+            ) / jnp.float32(spec.m)
+        if b is None:
+            b = jnp.full((self.num_target,), 1.0 / self.num_target, jnp.float32)
+        return jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+
+    # -- dense cost entry points ------------------------------------------
+
+    def __call__(self, C, a=None, b=None):
+        """Regularized OT value of a dense padded cost; differentiable.
+
+        ``jax.grad`` w.r.t. ``C`` is the optimal plan ``T*`` (Danskin);
+        w.r.t. ``a`` / ``b`` the optimal duals.
+        """
+        a, b = self._marginals(a, b)
+        value, _, _ = _solve_dense(self, jnp.asarray(C, jnp.float32), a, b)
+        return value
+
+    def loss_and_plan(self, C, a=None, b=None):
+        """(value, T*) from ONE solve; the plan output is detached.
+
+        The value is differentiable exactly like :meth:`__call__`; the
+        plan is wrapped in ``stop_gradient`` (its only exact derivative
+        story is second-order — out of scope) so it can be consumed as
+        weights/routing without leaking bogus tangents.
+        """
+        a, b = self._marginals(a, b)
+        C = jnp.asarray(C, jnp.float32)
+        value, alpha, beta = _solve_dense(self, C, a, b)
+        T = plan_from_duals(
+            jax.lax.stop_gradient(alpha),
+            jax.lax.stop_gradient(beta),
+            jax.lax.stop_gradient(C),
+            self.dual_problem(),
+        )
+        return value, jax.lax.stop_gradient(T)
+
+    # -- samples (squared-l2) entry point ---------------------------------
+
+    def from_samples(self, x, y, a=None, b=None):
+        """OT value between sample clouds under the squared-l2 geometry.
+
+        ``x`` is ``(m_pad, d)`` in the padded group layout (padded rows
+        are ignored), ``y`` is ``(n, d)``.  Pallas backends solve through
+        the factorized on-the-fly kernels and the backward pass
+        chain-rules to the coordinates group-by-group, so no (m, n)
+        array exists in either direction.  The dense/screened reference
+        backends materialize the cost in-trace (they are O(m n) anyway).
+        """
+        a, b = self._marginals(a, b)
+        x = jnp.asarray(x, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        if x.shape[0] != self.num_groups * self.group_size:
+            raise ValueError(
+                f"x has {x.shape[0]} rows, expected m_pad = "
+                f"{self.num_groups * self.group_size}"
+            )
+        if y.shape[0] != self.num_target:
+            raise ValueError(
+                f"y has {y.shape[0]} rows, expected num_target = {self.num_target}"
+            )
+        value, _, _ = _solve_samples(self, x, y, a, b)
+        return value
+
+
+def ot_loss(
+    C,
+    a=None,
+    b=None,
+    *,
+    num_groups: int,
+    group_size: int,
+    reg: Regularizer,
+    plan: Optional[ExecutionPlan] = None,
+    sizes: Optional[Tuple[int, ...]] = None,
+):
+    """Functional form of :class:`OTLayer` for a dense padded cost.
+
+    ``jax.grad(ot_loss)(C, ...)`` is the optimal transport plan.  Equal
+    keyword sets build equal (hash-equal) layers, so repeated calls reuse
+    the same compiled solver program.
+    """
+    layer = OTLayer(
+        num_groups=num_groups,
+        group_size=group_size,
+        num_target=int(C.shape[-1]),
+        reg=reg,
+        plan=plan if plan is not None else ExecutionPlan(),
+        sizes=sizes,
+    )
+    return layer(C, a, b)
+
+
+# -- forward solve (shared by both custom_vjp primitives) -----------------
+
+
+def _solve_duals(layer: OTLayer, C, a, b):
+    """Run the plan's solver program; return (value, alpha, beta).
+
+    This is the SAME jitted program ``Executor.solve`` launches for this
+    plan (``slv._solve_jit`` / ``stochastic._sgd_solve_jit``), so the
+    layer's forward value is bitwise-identical to the façade's.
+    """
+    _SOLVES["count"] += 1
+    prob = layer.dual_problem()
+    spec = layer.spec()
+    row_mask = jnp.asarray(spec.row_mask().reshape(-1))
+    sqrt_g = jnp.asarray(spec.sqrt_sizes(), jnp.float32)
+    opts = layer.plan.solve_options()
+    if layer.plan.solver == "stochastic":
+        from repro.core import stochastic as sgd
+
+        lb, _, _, _ = sgd._sgd_solve_jit(
+            C, a, b, row_mask, sqrt_g, prob, opts,
+            layer.plan.stochastic_options(),
+        )
+    else:
+        lb, _, _, _ = slv._solve_jit(C, a, b, row_mask, sqrt_g, prob, opts)
+    alpha, beta = slv._split(lb.x, prob.m_pad)
+    value = -lb.f
+    if layer.grad_refine:
+        oracle = _exact_oracle(C, a, b, prob)
+        lr = float(layer.reg.gamma) / float(max(prob.m_pad, prob.n))
+
+        def body(_, ab):
+            al, be = ab
+            _, ga, gb = oracle(al, be)
+            return (al + lr * ga, be + lr * gb)
+
+        alpha, beta = jax.lax.fori_loop(
+            0, layer.grad_refine, body, (alpha, beta)
+        )
+        value, _, _ = oracle(alpha, beta)
+    return value, alpha, beta
+
+
+def _exact_oracle(C, a, b, prob):
+    """Full (unscreened) exact dual oracle for the refine loop.
+
+    Dense costs use the closed form; factorized costs run the on-the-fly
+    kernel with an all-live flag grid, so refinement never materializes
+    the cost either.
+    """
+    if slv._is_factorized(C):
+        from repro.kernels import ops as kops
+
+        fp = kops.prepare_factorized_problem(C, prob)
+        flags = jnp.ones(fp.grid, jnp.int32)
+
+        def oracle(al, be):
+            return kops.dual_value_and_grad_factorized(
+                al, be, a, b, flags, fp, prob, impl="grid"
+            )
+
+        return oracle
+
+    from repro.core.dual import dual_value_and_grad
+
+    def oracle(al, be):
+        v, (ga, gb) = dual_value_and_grad(al, be, C, a, b, prob)
+        return v, ga, gb
+
+    return oracle
+
+
+# -- dense custom_vjp -----------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _solve_dense(layer: OTLayer, C, a, b):
+    return _solve_duals(layer, C, a, b)
+
+
+def _solve_dense_fwd(layer, C, a, b):
+    value, alpha, beta = _solve_duals(layer, C, a, b)
+    return (value, alpha, beta), (C, alpha, beta)
+
+
+def _solve_dense_bwd(layer, res, cts):
+    C, alpha, beta = res
+    ct = cts[0]  # duals are exposed detached; their cotangents are zero
+    T = plan_from_duals(alpha, beta, C, layer.dual_problem())
+    return (ct * T, ct * alpha, ct * beta)
+
+
+_solve_dense.defvjp(_solve_dense_fwd, _solve_dense_bwd)
+
+
+# -- samples custom_vjp ---------------------------------------------------
+
+
+def _scaled_factors(layer: OTLayer, x, y):
+    """In-trace twin of ``SquaredL2Geometry.from_samples`` (same recipe).
+
+    Returns ``(xs, x_sq, ys, y_sq, scale)`` with normalization folded in
+    as ``sqrt(scale)`` / ``scale`` and PAD_COST sentinels on padded rows;
+    ``scale`` is detached (the chunked max is not differentiated).
+    """
+    spec = layer.spec()
+    mask = jnp.asarray(spec.row_mask().reshape(-1))          # (m_pad,) static
+    L, g = layer.num_groups, layer.group_size
+    x = jnp.where(mask[:, None], x, 0.0)
+    x_sq0 = jnp.sum(x * x, axis=1)
+    y_sq0 = jnp.sum(y * y, axis=1)
+
+    scale = jnp.float32(1.0)
+    if layer.normalize_cost:
+        xg = x.reshape(L, g, -1)
+        xsqg = x_sq0.reshape(L, g)
+        maskg = mask.reshape(L, g)
+
+        def gmax(args):
+            xr, xsqr, mr = args
+            block = factorized_cost_tile(xr, xsqr, y, y_sq0)
+            return jnp.max(jnp.where(mr[:, None], block, 0.0))
+
+        cmax = jnp.max(jax.lax.map(gmax, (xg, xsqg, maskg)))
+        scale = 1.0 / jnp.maximum(cmax, jnp.float32(1e-12))
+        scale = jax.lax.stop_gradient(scale)
+
+    root = jnp.sqrt(scale)
+    xs = x * root
+    ys = y * root
+    x_sq = jnp.where(mask, x_sq0 * scale, jnp.float32(G.PAD_COST))
+    y_sq = y_sq0 * scale
+    return xs, x_sq, ys, y_sq, scale
+
+
+def _samples_cost(layer: OTLayer, xs, x_sq, ys, y_sq):
+    """Cost operand for the plan's backend: factorized or materialized."""
+    if layer.plan.grad_impl in ("pallas", "fused"):
+        from repro.kernels import ops as kops
+
+        return kops.FactorizedCost(x=xs, x_sq=x_sq, y=ys, y_sq=y_sq)
+    L, g = layer.num_groups, layer.group_size
+    blocks = jax.lax.map(
+        lambda args: factorized_cost_tile(args[0], args[1], ys, y_sq),
+        (xs.reshape(L, g, -1), x_sq.reshape(L, g)),
+    )
+    return blocks.reshape(L * g, layer.num_target)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _solve_samples(layer: OTLayer, x, y, a, b):
+    xs, x_sq, ys, y_sq, _ = _scaled_factors(layer, x, y)
+    C = _samples_cost(layer, xs, x_sq, ys, y_sq)
+    return _solve_duals(layer, C, a, b)
+
+
+def _solve_samples_fwd(layer, x, y, a, b):
+    xs, x_sq, ys, y_sq, scale = _scaled_factors(layer, x, y)
+    C = _samples_cost(layer, xs, x_sq, ys, y_sq)
+    value, alpha, beta = _solve_duals(layer, C, a, b)
+    return (value, alpha, beta), (x, y, xs, x_sq, ys, y_sq, scale, alpha, beta)
+
+
+def _solve_samples_bwd(layer, res, cts):
+    """Materialization-free Danskin pullback to sample coordinates.
+
+    With ``C_ij = scale * (|x_i|^2 + |y_j|^2 - 2 <x_i, y_j>)`` and the
+    scale detached, ``dW/dx_i = 2 * scale * (r_i x_i - (T y)_i)`` and
+    ``dW/dy_j = 2 * scale * (c_j y_j - (T^T x)_j)`` where r / c are the
+    optimal plan's row / column sums.  T is rebuilt group-by-group in a
+    two-pass ``lax.scan`` (pass 1: group norms Z -> shrink factors s;
+    pass 2: T blocks folded into the four accumulators), so peak memory
+    is O(g n + n d) — the (m, n) plan never exists.  The squared-l2 clamp
+    ``max(., 0)`` is ignored (it binds only at numerically-zero
+    distances, where T's support vanishes with it).
+    """
+    x, y, xs, x_sq, ys, y_sq, scale, alpha, beta = res
+    ct = cts[0]
+    prob = layer.dual_problem()
+    L, g, n = layer.num_groups, layer.group_size, layer.num_target
+    d = x.shape[1]
+    gamma = layer.reg.gamma
+
+    xg = xs.reshape(L, g, d)
+    xsqg = x_sq.reshape(L, g)
+    ag = alpha.reshape(L, g)
+
+    def zrow(args):
+        xr, xsqr, al = args
+        F = al[:, None] + beta[None, :] - factorized_cost_tile(xr, xsqr, ys, y_sq)
+        Fp = jnp.maximum(F, 0.0)
+        return jnp.sqrt(
+            jnp.maximum(jnp.sum(Fp * Fp, axis=0), jnp.finfo(F.dtype).tiny)
+        )
+
+    Z = jax.lax.map(zrow, (xg, xsqg, ag))                    # (L, n)
+    s_over_gamma = layer.reg.scale_from_z(Z) / gamma         # (L, n)
+
+    def body(carry, args):
+        csum, tx = carry
+        xr, xsqr, al, sl, xraw = args
+        F = al[:, None] + beta[None, :] - factorized_cost_tile(xr, xsqr, ys, y_sq)
+        T = sl[None, :] * jnp.maximum(F, 0.0)                # (g, n) plan block
+        csum = csum + jnp.sum(T, axis=0)
+        tx = tx + T.T @ xraw
+        return (csum, tx), (jnp.sum(T, axis=1), T @ y)
+
+    (csum, tx), (rows, ty) = jax.lax.scan(
+        body,
+        (jnp.zeros((n,), jnp.float32), jnp.zeros((n, d), jnp.float32)),
+        (xg, xsqg, ag, s_over_gamma, x.reshape(L, g, d)),
+    )
+    r = rows.reshape(L * g)
+    Ty = ty.reshape(L * g, d)
+    two_scale = 2.0 * scale * ct
+    gx = two_scale * (r[:, None] * x - Ty)
+    gy = two_scale * (csum[:, None] * y - tx)
+    return (gx, gy, ct * alpha, ct * beta)
+
+
+_solve_samples.defvjp(_solve_samples_fwd, _solve_samples_bwd)
+
+
+# -- unrolled test oracle -------------------------------------------------
+
+
+def unrolled_value(
+    C,
+    a,
+    b,
+    *,
+    num_groups: int,
+    group_size: int,
+    reg: Regularizer,
+    steps: int = 3000,
+    step_size: float = 0.05,
+):
+    """Reference OT value via fixed-step dual ascent AD *can* unroll.
+
+    A deliberately plain solver — ``steps`` gradient-ascent steps on the
+    smooth dual written as a ``lax.scan`` — whose value converges to the
+    L-BFGS solution and whose ``jax.grad`` (checkpointing every step,
+    O(steps) memory) is the AD-through-the-solver oracle the Danskin
+    backward pass is tested against.  Never use this in training; it
+    exists to certify :func:`ot_loss` (docs/training.md).
+    """
+    from repro.core.dual import dual_value_and_grad
+
+    prob = DualProblem(
+        num_groups=num_groups, group_size=group_size,
+        n=int(C.shape[-1]), reg=reg,
+    )
+    m_pad = prob.m_pad
+    alpha0 = jnp.zeros((m_pad,), jnp.float32)
+    beta0 = jnp.zeros((C.shape[-1],), jnp.float32)
+
+    def step(carry, _):
+        alpha, beta = carry
+        _, (ga, gb) = dual_value_and_grad(alpha, beta, C, a, b, prob)
+        return (alpha + step_size * ga, beta + step_size * gb), None
+
+    (alpha, beta), _ = jax.lax.scan(step, (alpha0, beta0), None, length=steps)
+    value, _ = dual_value_and_grad(alpha, beta, C, a, b, prob)
+    return value

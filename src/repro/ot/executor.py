@@ -134,6 +134,14 @@ class Executor:
             n=self._n, reg=reg,
         )
         self._opts = plan.solve_options()
+        self._sopts = (
+            plan.stochastic_options() if plan.solver == "stochastic" else None
+        )
+        if self._sopts is not None and mesh is not None:
+            raise ValueError(
+                "solver='stochastic' runs solo/batched only; sharded meshes "
+                "require the exact solver (ExecutionPlan(solver='lbfgs'))."
+            )
         self._counters = {
             "launches": 0, "solves": 0, "problems_solved": 0, "rounds_total": 0,
             "retry_attempts": 0,
@@ -409,6 +417,13 @@ class Executor:
             row_mask = jnp.asarray(self._spec.row_mask().reshape(-1))
         if sqrt_g is None:
             sqrt_g = jnp.asarray(self._spec.sqrt_sizes(), C.dtype)
+        if self._sopts is not None:
+            from repro.core import stochastic as sgd
+
+            return self._launch(
+                sgd._sgd_solve_batch_jit, C, a, b, row_mask, sqrt_g,
+                self._prob, self._opts, self._sopts,
+            )
         return self._launch(
             slv._solve_batch_jit, C, a, b, row_mask, sqrt_g, self._prob, self._opts
         )
@@ -514,21 +529,31 @@ class Executor:
             fc = kops.FactorizedCost(
                 *(jnp.asarray(v) for v in p.geom.operands())
             )
-            result = slv._solve_solo(
-                fc, jnp.asarray(p.a), jnp.asarray(p.b),
-                p.spec, self._reg, self._opts, self._launch,
+            result = self._solve_solo(
+                fc, jnp.asarray(p.a), jnp.asarray(p.b), p.spec
             )
             self._record(result.rounds, failed=result.lbfgs_state.failed)
             # the dense cost exists only here, chunk-built for assembly
             return build_solution(
                 result, self._reg, p.geom.materialize(), p.spec, p.perm, p.n
             )
-        result = slv._solve_solo(
-            jnp.asarray(p.C), jnp.asarray(p.a), jnp.asarray(p.b),
-            p.spec, self._reg, self._opts, self._launch,
+        result = self._solve_solo(
+            jnp.asarray(p.C), jnp.asarray(p.a), jnp.asarray(p.b), p.spec
         )
         self._record(result.rounds, failed=result.lbfgs_state.failed)
         return build_solution(result, self._reg, p.C, p.spec, p.perm, p.n)
+
+    def _solve_solo(self, C, a, b, spec) -> slv.OTResult:
+        """Route one solo solve through the plan's dual solver."""
+        if self._sopts is not None:
+            from repro.core import stochastic as sgd
+
+            return sgd.solve_solo(
+                C, a, b, spec, self._reg, self._opts, self._sopts, self._launch
+            )
+        return slv._solve_solo(
+            C, a, b, spec, self._reg, self._opts, self._launch
+        )
 
     def solve_many(self, problems: Sequence[Problem]) -> List[Solution]:
         """Solve a list of problems, dispatching solo -> batched -> sharded.
@@ -581,6 +606,12 @@ class Executor:
         :class:`Solution` list.  The round sequence is bitwise-identical
         to :meth:`solve_many` on the same problems.
         """
+        if self._sopts is not None:
+            raise ValueError(
+                "solver='stochastic' has no round-step stream (epochs are "
+                "not Algorithm-1 rounds); use solve/solve_many, or "
+                "solver='lbfgs' for streaming."
+            )
         if isinstance(problems, Problem):
             problems = [problems]
         return Stream(self, list(problems))

@@ -25,6 +25,7 @@ PALLAS_IMPLS = ("grid", "compact", "auto")
 BATCHING = ("auto", "solo", "batched")
 GEOMETRIES = ("auto", "dense", "on_the_fly")
 PRECISIONS = ("f32", "bf16")
+SOLVERS = ("lbfgs", "stochastic")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +70,19 @@ class ExecutionPlan:
         chunked materialization); ``'auto'`` picks on-the-fly exactly when
         the problem is sample-mode, the backend is pallas, and the dense
         cost would exceed ``repro.ot.geometry.AUTO_ONTHEFLY_BYTES``.
+    solver : {'lbfgs', 'stochastic'}
+        Dual solver.  ``'lbfgs'`` (default) is the exact screened
+        Algorithm-1 loop; ``'stochastic'`` is the minibatch dual-ascent
+        scheme of :mod:`repro.core.stochastic` (column-block-sampled
+        gradients, epoch-averaged duals, deterministic given
+        ``sgd_seed``) for training-time workloads at large n.  The
+        stochastic solver runs solo/batched only — sharded meshes and
+        the round-stepped ``stream`` path require the exact solver.
+    sgd_epochs, sgd_batch_blocks, sgd_block_cols, sgd_step_size,
+    sgd_decay, sgd_avg_fraction, sgd_seed :
+        Stochastic-solver schedule, field-for-field
+        :class:`repro.core.stochastic.StochasticOptions` (ignored under
+        ``solver='lbfgs'``; docs/training.md lists tuning guidance).
     history, max_iters, gtol, ftol, c1, c2, max_linesearch, init_step :
         Inner L-BFGS configuration, field-for-field
         :class:`repro.core.lbfgs.LbfgsOptions`.
@@ -83,6 +97,15 @@ class ExecutionPlan:
     batching: str = "auto"
     devices: Union[str, int] = "single"
     geometry: str = "auto"
+    # dual solver selection + stochastic schedule (core/stochastic.py)
+    solver: str = "lbfgs"
+    sgd_epochs: int = 60
+    sgd_batch_blocks: int = 2
+    sgd_block_cols: int = 128
+    sgd_step_size: float = 0.5
+    sgd_decay: float = 0.02
+    sgd_avg_fraction: float = 0.5
+    sgd_seed: int = 0
     # inner optimizer (absorbs LbfgsOptions field-for-field)
     history: int = 10
     max_iters: int = 500
@@ -126,12 +149,32 @@ class ExecutionPlan:
                 )
         elif self.devices < 1:
             raise ValueError(f"devices count must be >= 1, got {self.devices}")
+        if self.solver not in SOLVERS:
+            raise ValueError(
+                f"solver must be one of {SOLVERS}, got {self.solver!r}"
+            )
         for name in ("snapshot_every", "max_rounds", "history", "max_iters",
                      "max_linesearch"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, got {getattr(self, name)}")
+        # validate the stochastic slice eagerly (StochasticOptions raises)
+        self.stochastic_options()
 
     # -- legacy-option mapping (exact, bijective) ------------------------------
+    def stochastic_options(self):
+        """The ``sgd_*`` slice as a ``StochasticOptions`` (static jit arg)."""
+        from repro.core.stochastic import StochasticOptions
+
+        return StochasticOptions(
+            epochs=self.sgd_epochs,
+            batch_blocks=self.sgd_batch_blocks,
+            block_cols=self.sgd_block_cols,
+            step_size=self.sgd_step_size,
+            decay=self.sgd_decay,
+            avg_fraction=self.sgd_avg_fraction,
+            seed=self.sgd_seed,
+        )
+
     def lbfgs_options(self) -> LbfgsOptions:
         """The inner-optimizer slice as a legacy ``LbfgsOptions``."""
         return LbfgsOptions(

@@ -12,11 +12,15 @@ into a deterministic list of ``(arrival_tick, OTRequest)`` pairs.
 :func:`drive` replays a trace against an engine with a bounded clock, so
 even a deliberately-broken engine (chaos runs) cannot hang the caller.
 
-Arrival ticks are the deterministic skeleton ``floor(i / arrival_rate)``:
-the *rate* is the experimental knob (set it above the engine's slot
-throughput to create overload), while the seed only controls payload
-content.  Two traces with the same spec are identical request-for-request,
-which is what lets the benchmark gate latency-proxy counters in CI.
+Arrival ticks default to the deterministic skeleton
+``floor(i / arrival_rate)``: the *rate* is the experimental knob (set it
+above the engine's slot throughput to create overload), while the seed only
+controls payload content.  ``arrivals='poisson'`` swaps the skeleton for a
+seeded Poisson process (exponential inter-arrival gaps with mean
+``1/arrival_rate``, drawn from a generator independent of the payload
+stream, so the requests themselves are identical in both modes).  Either
+way, two traces with the same spec are identical request-for-request, which
+is what lets the benchmark gate latency-proxy counters in CI.
 """
 from __future__ import annotations
 
@@ -38,12 +42,21 @@ class TrafficSpec:
     num_requests : int
         Trace length.
     arrival_rate : float
-        Mean requests per engine tick; arrival ticks are the
-        deterministic schedule ``floor(i / arrival_rate)``.  Rates above
-        the engine's retirement throughput create sustained overload.
+        Mean requests per engine tick; under ``arrivals='deterministic'``
+        the arrival ticks are the schedule ``floor(i / arrival_rate)``.
+        Rates above the engine's retirement throughput create sustained
+        overload.
+    arrivals : {'deterministic', 'poisson'}
+        Arrival-process shape.  ``'poisson'`` draws seeded exponential
+        inter-arrival gaps (mean ``1/arrival_rate``) from a dedicated
+        generator, producing bursts and lulls at the same mean rate; the
+        payload stream is untouched, so the two modes emit the same
+        requests at different ticks.
     seed : int
-        Seed for payload content (costs, shape choice, priority choice);
-        the arrival schedule does not depend on it.
+        Seed for payload content (costs, shape choice, priority choice)
+        and, under ``arrivals='poisson'``, the arrival gaps (via an
+        independent sub-generator); the deterministic schedule does not
+        depend on it.
     shapes : sequence of (m, n, num_classes)
         Geometry pool; each request draws one uniformly.  Distinct
         geometries land in distinct engine buckets.
@@ -57,6 +70,7 @@ class TrafficSpec:
 
     num_requests: int = 16
     arrival_rate: float = 1.0
+    arrivals: str = "deterministic"
     seed: int = 0
     shapes: Sequence[Tuple[int, int, int]] = ((12, 20, 3), (16, 24, 4))
     deadline: Optional[int] = None
@@ -68,6 +82,11 @@ class TrafficSpec:
             raise ValueError("num_requests must be >= 0")
         if self.arrival_rate <= 0:
             raise ValueError("arrival_rate must be > 0")
+        if self.arrivals not in ("deterministic", "poisson"):
+            raise ValueError(
+                "arrivals must be 'deterministic' or 'poisson', "
+                f"got {self.arrivals!r}"
+            )
         if not self.shapes:
             raise ValueError("shapes pool must be non-empty")
         if not 0.0 <= self.deadline_fraction <= 1.0:
@@ -78,6 +97,7 @@ class TrafficSpec:
         return {
             "num_requests": self.num_requests,
             "arrival_rate": self.arrival_rate,
+            "arrivals": self.arrivals,
             "seed": self.seed,
             "shapes": [list(s) for s in self.shapes],
             "deadline": self.deadline,
@@ -116,6 +136,15 @@ def make_trace(
         :func:`drive`.
     """
     rng = np.random.default_rng(spec.seed)
+    # arrival ticks come from their own generator so switching arrival
+    # modes (or rates) never perturbs the payload stream drawn from `rng`
+    if spec.arrivals == "poisson":
+        gaps = np.random.default_rng((spec.seed, 0xA881)).exponential(
+            1.0 / spec.arrival_rate, size=spec.num_requests
+        )
+        ticks = np.floor(np.cumsum(gaps)).astype(int)
+    else:
+        ticks = (np.arange(spec.num_requests) / spec.arrival_rate).astype(int)
     trace: List[Tuple[int, OTRequest]] = []
     for i in range(spec.num_requests):
         m, n, k = spec.shapes[int(rng.integers(len(spec.shapes)))]
@@ -134,7 +163,7 @@ def make_trace(
         if regs:
             reg = regs[int(rng.integers(len(regs)))]
         trace.append((
-            int(i / spec.arrival_rate),
+            int(ticks[i]),
             OTRequest(rid=rid_base + i, C=C, labels=labels, reg=reg,
                       deadline=deadline, priority=priority),
         ))

@@ -3,11 +3,14 @@
 ``ot_alignment_loss`` is the paper's unsupervised-domain-adaptation use case
 as a first-class auxiliary loss: labeled source representations are
 transported to unlabeled target representations under the group-sparse
-regularizer (classes = groups), solved with the *screened* solver
-(Algorithm 1).  Gradients follow the envelope theorem: at the dual optimum
-the transportation plan is treated as constant (stop_gradient), and the loss
-<T*, C(features)> differentiates through the cost matrix only — the standard
-OT-loss estimator (Courty et al. 2017).
+regularizer (classes = groups).  The solve routes through
+:class:`repro.ot.OTLayer` — the differentiable façade over the screened
+solver — so gradients are the exact Danskin/envelope gradients
+(``dW/dC = T*`` chain-ruled to the feature coordinates without ever
+materializing the plan for the Pallas backends; docs/training.md), and the
+solver backend / stochastic schedule follow the layer's
+:class:`~repro.ot.ExecutionPlan` (``TrainConfig.ot_solver`` /
+``ot_grad_impl`` select them from the trainer).
 """
 from __future__ import annotations
 
@@ -17,10 +20,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dual import DualProblem, plan_from_duals
-from repro.core.lbfgs import LbfgsOptions
 from repro.core.regularizers import GroupSparseReg
-from repro.core.solver import SolveOptions, _solve_jit, _split
+from repro.ot import ExecutionPlan, OTLayer
 
 
 def pairwise_sqdist(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
@@ -29,9 +30,39 @@ def pairwise_sqdist(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(a2 + b2 - 2.0 * A @ B.T, 0.0)
 
 
+def _alignment_layer(
+    num_classes: int, group_size: int, num_target: int,
+    gamma: float, rho: float, max_iters: int,
+    solver: str, grad_impl: str,
+) -> OTLayer:
+    """The (hashable) layer behind ``ot_alignment_loss``.
+
+    Equal arguments build equal layers, so every training step reuses one
+    compiled solver program per configuration.
+    """
+    plan = ExecutionPlan(
+        grad_impl=grad_impl,
+        solver=solver,
+        max_iters=max_iters,
+        gtol=1e-5,
+        max_rounds=max(max_iters // 10, 1),
+    )
+    return OTLayer(
+        num_groups=num_classes,
+        group_size=group_size,
+        num_target=num_target,
+        reg=GroupSparseReg.from_rho(gamma, rho),
+        plan=plan,
+        normalize_cost=True,
+    )
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("num_classes", "group_size", "gamma", "rho", "max_iters"),
+    static_argnames=(
+        "num_classes", "group_size", "gamma", "rho", "max_iters",
+        "solver", "grad_impl",
+    ),
 )
 def ot_alignment_loss(
     h_src: jnp.ndarray,        # (Ns, d) source features (sorted by class!)
@@ -42,37 +73,29 @@ def ot_alignment_loss(
     gamma: float = 1.0,
     rho: float = 0.6,
     max_iters: int = 60,
+    solver: str = "lbfgs",
+    grad_impl: str = "screened",
 ) -> Tuple[jnp.ndarray, Dict]:
-    """Group-sparse OT distance between feature clouds (screened solver)."""
-    Ns, Nt = h_src.shape[0], h_tgt.shape[0]
+    """Group-sparse OT distance between feature clouds, differentiable.
+
+    The value is ``OTLayer.from_samples`` on the normalized squared-l2
+    geometry: its ``jax.grad`` pulls the exact optimal plan back to BOTH
+    feature clouds (the legacy implementation differentiated a
+    stop-gradiented ``<T, C>`` estimator; the layer gives the same
+    envelope-theorem gradient from one solve, plus dual gradients and the
+    materialization-free samples pullback for ``grad_impl='pallas'``).
+    """
+    Ns = h_src.shape[0]
     assert Ns == num_classes * group_size
 
-    C = pairwise_sqdist(h_src.astype(jnp.float32), h_tgt.astype(jnp.float32))
-    Cn = C / jnp.maximum(jax.lax.stop_gradient(jnp.max(C)), 1e-9)
-
-    reg = GroupSparseReg.from_rho(gamma, rho)
-    prob = DualProblem(num_classes, group_size, Nt, reg)
-    a = jnp.full((Ns,), 1.0 / Ns, jnp.float32)
-    b = jnp.full((Nt,), 1.0 / Nt, jnp.float32)
-    row_mask = jnp.ones((Ns,), bool)
-    sqrt_g = jnp.full((num_classes,), jnp.sqrt(float(group_size)), jnp.float32)
-
-    opts = SolveOptions(
-        grad_impl="screened",
-        lbfgs=LbfgsOptions(max_iters=max_iters, gtol=1e-5),
-        max_rounds=max(max_iters // 10, 1),
+    layer = _alignment_layer(
+        num_classes, group_size, int(h_tgt.shape[0]),
+        gamma, rho, max_iters, solver, grad_impl,
     )
-    C_solve = jax.lax.stop_gradient(Cn)
-    lb, _, _, stats = _solve_jit(C_solve, a, b, row_mask, sqrt_g, prob, opts)
-    alpha, beta = _split(lb.x, Ns)
-    T = jax.lax.stop_gradient(plan_from_duals(alpha, beta, C_solve, prob))
-
-    loss = jnp.sum(T * Cn)   # grads flow through Cn -> features (envelope thm)
-    metrics = {
-        "ot_distance": loss,
-        "ot_iters": lb.iter,
-        "ot_skipped": stats[0],
-    }
+    loss = layer.from_samples(
+        h_src.astype(jnp.float32), h_tgt.astype(jnp.float32)
+    )
+    metrics = {"ot_distance": loss}
     return loss, metrics
 
 

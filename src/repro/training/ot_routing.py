@@ -10,10 +10,11 @@ all-to-all fan-out.  Casting routing as a regularized OT fixes both:
     each sequence's block of the plan to few nonzero expert columns ->
     sequence-local expert placement, i.e. less cross-device traffic.
 
-The plan is solved with the *screened* solver (Algorithm 1) — the paper's
-technique is literally the inner loop of the router — and enters routing
-through stop_gradient (assignments), while differentiable gate weights come
-from the router softmax as usual.
+The plan is solved through :class:`repro.ot.OTLayer` (``loss_and_plan``,
+one screened Algorithm-1 solve) — the paper's technique is literally the
+inner loop of the router — and enters routing through the layer's detached
+plan output (assignments), while differentiable gate weights come from the
+router softmax as usual.
 
 Cost per layer: the dual over (alpha: T, beta: E) with C = -log softmax
 (router logits); each evaluation is O(T x E) elementwise — about one extra
@@ -27,10 +28,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dual import DualProblem, plan_from_duals
-from repro.core.lbfgs import LbfgsOptions
 from repro.core.regularizers import GroupSparseReg
-from repro.core.solver import SolveOptions, _solve_jit, _split
+from repro.ot import ExecutionPlan, OTLayer
 
 
 @functools.partial(
@@ -54,20 +53,21 @@ def ot_route(
     C = jax.lax.stop_gradient(-logp)              # cost: (T, E)
     C = C / jnp.maximum(jnp.max(C), 1e-9)
 
-    # dual over columns = EXPERTS (n = E); rows = tokens grouped by sequence
-    prob = DualProblem(num_seqs, seq_len, E, GroupSparseReg.from_rho(gamma, rho))
-    a = jnp.full((T,), 1.0 / T, jnp.float32)
-    b = jnp.full((E,), 1.0 / E, jnp.float32)      # balanced expert marginals
-    row_mask = jnp.ones((T,), bool)
-    sqrt_g = jnp.full((num_seqs,), jnp.sqrt(float(seq_len)), jnp.float32)
-    opts = SolveOptions(
-        grad_impl="screened",
-        lbfgs=LbfgsOptions(max_iters=max_iters, gtol=1e-5),
-        max_rounds=max(max_iters // 10, 1),
+    # dual over columns = EXPERTS (n = E); rows = tokens grouped by sequence;
+    # uniform token mass, balanced expert marginals (the layer's defaults)
+    layer = OTLayer(
+        num_groups=num_seqs,
+        group_size=seq_len,
+        num_target=E,
+        reg=GroupSparseReg.from_rho(gamma, rho),
+        plan=ExecutionPlan(
+            grad_impl="screened",
+            max_iters=max_iters,
+            gtol=1e-5,
+            max_rounds=max(max_iters // 10, 1),
+        ),
     )
-    lb, _, _, _ = _solve_jit(C, a, b, row_mask, sqrt_g, prob, opts)
-    alpha, beta = _split(lb.x, T)
-    plan = jax.lax.stop_gradient(plan_from_duals(alpha, beta, C, prob))  # (T, E)
+    _, plan = layer.loss_and_plan(C)              # detached plan, (T, E)
 
     topw, topi = jax.lax.top_k(plan, top_k)
     # renormalize; fall back to router softmax where the plan gives a token

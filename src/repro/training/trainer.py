@@ -83,6 +83,7 @@ class Trainer:
                     h_src, feats[half:],
                     num_classes=L, group_size=gsz,
                     gamma=tcfg.ot_gamma, rho=tcfg.ot_rho,
+                    solver=tcfg.ot_solver, grad_impl=tcfg.ot_grad_impl,
                 )
                 total = total + tcfg.ot_align_weight * ot
                 metrics = dict(metrics, **ot_metrics)

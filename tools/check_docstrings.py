@@ -29,6 +29,8 @@ DEFAULT_FILES = [
     "src/repro/ot/geometry.py",
     "src/repro/ot/solution.py",
     "src/repro/ot/executor.py",
+    "src/repro/ot/diff.py",
+    "src/repro/core/stochastic.py",
     "src/repro/core/regularizers.py",
     "src/repro/core/solver.py",
     "src/repro/core/sharded.py",

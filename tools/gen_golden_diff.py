@@ -1,0 +1,138 @@
+"""Regenerate tests/fixtures/golden_diff.json (the diff-layer golden data).
+
+The fixture pins the finite-difference reference gradients for
+tests/test_diff_layer.py: central differences of the *float64* unscreened
+reference solver (``repro.core.cpu_baseline.origin_solve``, maxiter 8000,
+gtol 1e-12) on problems that regenerate exactly from their committed
+(seed, L, g, n[, d]) coordinates — the fixture stores only coordinates,
+probe indices and expected numbers, never arrays (the repo's golden-fixture
+convention; see tests/conftest.py).
+
+Two cases:
+
+* ``dense``  — seed-0 uniform random cost, probes are (i, j) cost entries;
+  FD step 1e-5.  ``jax.grad`` of :func:`repro.ot.ot_loss` must match these
+  at every backend.
+* ``samples`` — seed-3 Gaussian clouds under the normalized squared-l2
+  geometry, probes are (i, k) source / (j, k) target coordinates; FD step
+  1e-4.  The normalization scale is FROZEN at the unperturbed f64 value
+  (``scale64``): the layer treats the chunked max as a constant of the
+  backward pass (stop_gradient), so the FD reference must too — an FD
+  reference that re-derives the max per perturbation measures a different
+  (sub)gradient at the max-attaining entry.
+
+Usage:  PYTHONPATH=src python tools/gen_golden_diff.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import groups as G                       # noqa: E402
+from repro.core.cpu_baseline import origin_solve         # noqa: E402
+from repro.core.regularizers import GroupSparseReg       # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "fixtures",
+                   "golden_diff.json")
+
+GAMMA, RHO = 1.0, 0.6
+MAXITER, GTOL = 8000, 1e-12
+
+
+def _solve64(C, a, b, spec, reg):
+    return origin_solve(C.astype(np.float64), a.astype(np.float64),
+                        b.astype(np.float64), spec, reg,
+                        maxiter=MAXITER, gtol=GTOL)
+
+
+def dense_case(seed=0, L=3, g=8, n=20, h=1e-5, num_probes=10):
+    m_pad = L * g
+    rng = np.random.default_rng(seed)
+    C = rng.random((m_pad, n), dtype=np.float32).astype(np.float64)
+    a = np.full(m_pad, 1.0 / m_pad)
+    b = np.full(n, 1.0 / n)
+    reg = GroupSparseReg.from_rho(GAMMA, RHO)
+    spec = G.GroupSpec(num_groups=L, group_size=g, sizes=(g,) * L, m=m_pad)
+
+    base = _solve64(C, a, b, spec, reg)
+    prng = np.random.default_rng(7)
+    probes = []
+    for _ in range(num_probes):
+        i, j = int(prng.integers(m_pad)), int(prng.integers(n))
+        Cp, Cm = C.copy(), C.copy()
+        Cp[i, j] += h
+        Cm[i, j] -= h
+        fd = (_solve64(Cp, a, b, spec, reg).value
+              - _solve64(Cm, a, b, spec, reg).value) / (2 * h)
+        probes.append([i, j, fd])
+    return {
+        "coords": {"seed": seed, "L": L, "g": g, "n": n},
+        "gamma": GAMMA, "rho": RHO, "fd_step": h,
+        "value_f64": base.value,
+        "fd_probes": probes,
+    }
+
+
+def samples_case(seed=3, L=3, g=8, n=20, d=5, h=1e-4, num_probes=6):
+    m_pad = L * g
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m_pad, d)).astype(np.float32).astype(np.float64)
+    Y = rng.normal(size=(n, d)).astype(np.float32).astype(np.float64)
+    a = np.full(m_pad, 1.0 / m_pad)
+    b = np.full(n, 1.0 / n)
+    reg = GroupSparseReg.from_rho(GAMMA, RHO)
+    spec = G.GroupSpec(num_groups=L, group_size=g, sizes=(g,) * L, m=m_pad)
+
+    C0 = ((X[:, None, :] - Y[None, :, :]) ** 2).sum(-1)
+    scale64 = 1.0 / C0.max()                      # frozen, like the layer's
+
+    def val(Xm, Ym):
+        C = scale64 * ((Xm[:, None, :] - Ym[None, :, :]) ** 2).sum(-1)
+        return _solve64(C, a, b, spec, reg).value
+
+    prng = np.random.default_rng(7)
+    fd_x, fd_y = [], []
+    for _ in range(num_probes):
+        i, k = int(prng.integers(m_pad)), int(prng.integers(d))
+        Xp, Xm2 = X.copy(), X.copy()
+        Xp[i, k] += h
+        Xm2[i, k] -= h
+        fd_x.append([i, k, (val(Xp, Y) - val(Xm2, Y)) / (2 * h)])
+    for _ in range(num_probes):
+        j, k = int(prng.integers(n)), int(prng.integers(d))
+        Yp, Ym2 = Y.copy(), Y.copy()
+        Yp[j, k] += h
+        Ym2[j, k] -= h
+        fd_y.append([j, k, (val(X, Yp) - val(X, Ym2)) / (2 * h)])
+    return {
+        "coords": {"seed": seed, "L": L, "g": g, "n": n, "d": d},
+        "gamma": GAMMA, "rho": RHO, "fd_step": h,
+        "scale64": scale64,
+        "value_f64": val(X, Y),
+        "fd_x_probes": fd_x,
+        "fd_y_probes": fd_y,
+    }
+
+
+def main():
+    data = {
+        "schema_version": 1,
+        "solver": {"maxiter": MAXITER, "gtol": GTOL},
+        "dense": dense_case(),
+        "samples": samples_case(),
+    }
+    with open(OUT, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.relpath(OUT)}")
+    print(f"  dense   value_f64 = {data['dense']['value_f64']:.12f}")
+    print(f"  samples value_f64 = {data['samples']['value_f64']:.12f}")
+
+
+if __name__ == "__main__":
+    main()
